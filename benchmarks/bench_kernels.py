@@ -1,0 +1,77 @@
+"""Kernel micro-benchmarks: wall time of the jnp oracle (the XLA path used
+on CPU) + interpret-mode allclose checks of the Pallas kernels. Real-TPU
+timing is out of scope in this container (see EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.msp_select import msp_select, msp_select_ref
+from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
+from repro.models.attention import chunked_attention
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    csv = []
+    # flash attention oracle timings + kernel allclose
+    B, S, H, KVH, D = 2, 512, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KVH, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KVH, D)), jnp.float32)
+    ref = jax.jit(flash_attention_ref)
+    chk = jax.jit(lambda a, b, c: chunked_attention(a, b, c, chunk=128))
+    csv.append(("kernels/attention_naive_ref", _time(ref, q, k, v), "xla"))
+    csv.append(("kernels/attention_chunked", _time(chk, q, k, v), "xla"))
+    pall = flash_attention(q[:1, :128], k[:1, :128], v[:1, :128],
+                           block_q=64, block_k=64, interpret=True)
+    err = float(jnp.max(jnp.abs(
+        pall - flash_attention_ref(q[:1, :128], k[:1, :128], v[:1, :128]))))
+    csv.append(("kernels/flash_pallas_interp_maxerr", 0.0, f"{err:.2e}"))
+
+    # ssd
+    B, S, H, P, N = 2, 512, 4, 32, 16
+    xdt = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dta = jnp.asarray(-np.abs(rng.normal(size=(B, S, H))) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    seq = jax.jit(lambda *a: ssd_scan_ref(*a)[0])
+    csv.append(("kernels/ssd_sequential_ref", _time(seq, xdt, dta, b, c),
+                "xla"))
+    y = ssd_scan(xdt[:1, :128], dta[:1, :128], b[:1, :128], c[:1, :128],
+                 chunk=64, interpret=True)
+    yr, _ = ssd_scan_ref(xdt[:1, :128], dta[:1, :128], b[:1, :128],
+                         c[:1, :128])
+    csv.append(("kernels/ssd_pallas_interp_maxerr", 0.0,
+                f"{float(jnp.max(jnp.abs(y - yr))):.2e}"))
+
+    # msp_select
+    logits = jnp.asarray(rng.normal(size=(512, 4096)) * 3, jnp.float32)
+    ref_fn = jax.jit(lambda l: msp_select_ref(l, temperature=10.0,
+                                              threshold=0.5, k=8))
+    csv.append(("kernels/msp_ref", _time(ref_fn, logits), "xla"))
+    co, vo, io, mo = msp_select(logits[:32], temperature=10.0, threshold=0.5,
+                                k=8, block_n=8, interpret=True)
+    cr, vr, ir, mr = msp_select_ref(logits[:32], temperature=10.0,
+                                    threshold=0.5, k=8)
+    csv.append(("kernels/msp_pallas_interp_maxerr", 0.0,
+                f"{float(jnp.max(jnp.abs(co - cr))):.2e}"))
+    return [], csv
+
+
+if __name__ == "__main__":
+    for row in run()[1]:
+        print(",".join(str(x) for x in row))

@@ -1,0 +1,120 @@
+"""Shared benchmark harness: run grid cells with JSON result caching.
+
+Every paper-table benchmark builds on ``run_cell`` — one decentralized
+simulator run for a (method × α × topology × n) cell — with results cached
+under ``experiments/bench/`` so re-runs are incremental and the final
+``benchmarks.run`` report is cheap to regenerate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.configs.resnet20_cifar import SMALL_CONFIG
+from repro.core.simulator import DecentralizedSimulator
+from repro.data.synthetic import (ClassificationData,
+                                  make_classification_data, make_public_data)
+
+CACHE_DIR = os.environ.get("REPRO_BENCH_CACHE", "experiments/bench")
+
+# quick-mode defaults (CPU, single core): small images, short runs.
+# NOISE is set so accuracy saturates well below 100% — the non-IID failure
+# mode needs headroom to be visible; calibration notes in EXPERIMENTS.md.
+IMAGE_SIZE = 8
+N_TRAIN = 768
+N_PUBLIC = 768
+NOISE = 2.0
+STEPS = int(os.environ.get("REPRO_BENCH_STEPS", "300"))
+BATCH = 16
+KD_START_FRAC = 0.65          # label exchange after the plateau (paper: 240/300)
+KD_TEMPERATURE = 4.0          # tuned on validation, as the paper tunes T
+
+_METHODS = {
+    # name -> (algorithm, kd_mode)
+    "dsgd": ("dsgd", None),
+    "relay-sgd": ("relaysgd", None),
+    "qg-dsgdm-n": ("qg-dsgdm-n", None),
+    "qg-dsgdm-n+kd": ("qg-dsgdm-n", "vanilla"),
+    "qg-idkd": ("qg-dsgdm-n", "idkd"),
+    "sgd-centralized": ("centralized", None),
+}
+
+_data_cache: Dict[Any, Any] = {}
+
+
+def get_data(seed: int = 0) -> ClassificationData:
+    key = ("data", seed)
+    if key not in _data_cache:
+        _data_cache[key] = make_classification_data(
+            image_size=IMAGE_SIZE, n_train=N_TRAIN, n_val=256, n_test=512,
+            noise=NOISE, seed=seed)
+    return _data_cache[key]
+
+
+def get_public(kind: str = "aligned", seed: int = 0) -> np.ndarray:
+    key = ("pub", kind, seed)
+    if key not in _data_cache:
+        _data_cache[key] = make_public_data(get_data(seed),
+                                            n_public=N_PUBLIC, kind=kind,
+                                            seed=seed + 1)
+    return _data_cache[key]
+
+
+def run_cell(method: str, alpha: float, nodes: int = 8,
+             topology: str = "ring", public_kind: str = "aligned",
+             seed: int = 4, steps: Optional[int] = None,
+             use_cache: bool = True) -> Dict[str, Any]:
+    """One simulator run; returns a JSON-able result dict."""
+    steps = steps or STEPS
+    tag = f"{method}_a{alpha}_n{nodes}_{topology}_{public_kind}_s{seed}_t{steps}"
+    path = os.path.join(CACHE_DIR, tag + ".json")
+    if use_cache and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    algorithm, kd_mode = _METHODS[method]
+    topo = "chain" if algorithm == "relaysgd" else topology
+    tcfg = TrainConfig(
+        algorithm=algorithm, topology=topo, num_nodes=nodes, alpha=alpha,
+        steps=steps, batch_size=BATCH, seed=seed,
+        lr=0.5 if "qg" in algorithm or algorithm == "centralized" else 0.1,
+        weight_decay=1e-4 if "qg" in algorithm else 5e-4,
+        idkd=IDKDConfig(start_step=int(steps * KD_START_FRAC),
+                        temperature=KD_TEMPERATURE))
+    mcfg = SMALL_CONFIG.replace(image_size=IMAGE_SIZE)
+    data = get_data(seed=0)
+    pub = get_public(public_kind) if kd_mode else None
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode=kd_mode,
+                                 eval_every=max(steps // 4, 1),
+                                 eval_batches=2)
+    r = sim.run()
+    out = {
+        "method": method, "alpha": alpha, "nodes": nodes,
+        "topology": topo, "public_kind": public_kind, "seed": seed,
+        "steps": steps,
+        "final_acc": r.final_acc,
+        "acc_history": r.acc_history,
+        "loss_history": r.loss_history,
+        "consensus_history": r.consensus_history,
+        "id_fraction": r.id_fraction,
+        "comm_bytes_per_iter": r.comm_bytes_per_iter,
+        "label_bytes_total": r.label_bytes_total,
+        "pre_hist": np.asarray(r.pre_hist).tolist()
+        if r.pre_hist is not None else None,
+        "post_hist": np.asarray(r.post_hist).tolist()
+        if r.post_hist is not None else None,
+        "wall_seconds": r.wall_seconds,
+    }
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f)
+    return out
+
+
+def mean_std(cells) -> str:
+    accs = [c["final_acc"] * 100 for c in cells]
+    return f"{np.mean(accs):.2f} ± {np.std(accs):.2f}"

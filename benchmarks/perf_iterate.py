@@ -1,0 +1,109 @@
+"""§Perf hillclimb driver (deliverable g): hypothesis → change → re-lower →
+re-analyse, on the three selected (arch × shape) pairs.
+
+Each variant is lowered + compiled with the production mesh and its
+roofline terms recorded to experiments/perf/<pair>_<variant>.json; the
+iteration log lives in EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterate --pair qwen3_train \
+        --variant wire_bf16
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+
+from repro.launch.dryrun import run_one
+
+# the three hillclimb pairs (chosen per the assignment rubric — see
+# EXPERIMENTS.md §Perf for the selection rationale)
+PAIRS = {
+    "qwen3_train": ("qwen3-1.7b", "train_4k"),       # paper-representative
+    "mamba2_prefill": ("mamba2-780m", "prefill_32k"),  # worst fraction
+    "deepseek_train": ("deepseek-v3-671b", "train_4k"),  # most collective
+}
+
+# variant -> (wire_dtype, cfg_overrides); "special" variants are expanded
+# by apply_special below.
+VARIANTS = {
+    "baseline": ("float32", {}),
+    "wire_bf16": ("native", {}),
+    "no_remat": ("float32", {"remat": False}),
+    "remat_dots": ("float32", {"remat_policy": "dots"}),
+    "dots+bf16norm": ("float32", {"remat_policy": "dots",
+                                  "norm_in_f32": False}),
+    "chunk_1024": ("float32", {"attn_chunk": 1024}),
+    "chunk_2048": ("float32", {"attn_chunk": 2048}),
+    "ssd_chunk_128": ("float32", {}),
+    "ssd_chunk_512": ("float32", {}),
+    "ssm_split": ("float32", {}),
+    "out_sharded": ("float32", {}),
+    "ssm_split+out": ("float32", {}),
+    "ssm_split+out+vpad": ("float32", {"vocab_size": 50_432}),
+    "pod_scope": ("float32", {"node_scope": "pod"}),
+    "cap_1x": ("float32", {}),
+    "experts_both": ("float32", {}),     # env-driven sharding change
+    "cap1x+experts_both": ("float32", {}),
+    "moe_groups_16": ("float32", {}),    # GShard-style grouped dispatch
+    "moe_groups16+dots": ("float32", {}),
+    "groups16+out": ("float32", {}),     # grouped dispatch + residual pin
+}
+
+
+def apply_special(variant, arch, overrides):
+    import dataclasses
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    overrides = dict(overrides)
+    if variant.startswith("ssd_chunk_"):
+        overrides["ssm"] = dataclasses.replace(
+            cfg.ssm, chunk_size=int(variant.rsplit("_", 1)[1]))
+    if variant.startswith("ssm_split"):
+        overrides["ssm"] = dataclasses.replace(cfg.ssm, split_proj=True)
+    if variant in ("cap_1x", "cap1x+experts_both"):
+        overrides["moe"] = dataclasses.replace(cfg.moe, capacity_factor=1.0)
+    if "experts_both" in variant:
+        os.environ["REPRO_SHARD_EXPERTS"] = "both"
+    if variant.startswith("moe_groups_"):
+        g = int(variant.rsplit("_", 1)[1])
+        overrides["moe"] = dataclasses.replace(cfg.moe, dispatch_groups=g)
+    if variant == "moe_groups16+dots":
+        overrides["moe"] = dataclasses.replace(cfg.moe, dispatch_groups=16)
+        overrides["remat_policy"] = "dots"
+    if variant == "groups16+out":
+        overrides["moe"] = dataclasses.replace(cfg.moe, dispatch_groups=16)
+    return overrides
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=list(PAIRS))
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+    arch, shape = PAIRS[args.pair]
+    wire, overrides = VARIANTS[args.variant]
+    overrides = apply_special(args.variant, arch, overrides)
+    rec = run_one(arch, shape, args.multi, wire_dtype=wire,
+                  cfg_overrides=overrides, label=args.variant,
+                  sharded_out=("out" in args.variant))
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"{args.pair}_{args.variant}{'_multi' if args.multi else ''}"
+    hlo = rec.pop("_hlo", None)
+    if hlo is not None:
+        import gzip
+        with gzip.open(os.path.join(args.out, tag + ".hlo.gz"), "wt") as hf:
+            hf.write(hlo)
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps({k: rec[k] for k in
+                      ("variant", "compute_s", "memory_s", "collective_s",
+                       "dominant", "compile_s") if k in rec}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Pytree ⇄ flat-npz checkpointing with a structure manifest.
+
+No external deps: leaves are flattened with '/'-joined key paths into one
+``.npz``; the treedef is rebuilt from the key paths on restore. Handles the
+node-stacked simulation params and per-arch model params alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V":  # ml_dtypes extension types (bfloat16, ...)
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(path: str, params: Any, step: int = 0,
+                    extra: Dict[str, Any] | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(params)
+    meta = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    with open(_meta_path(path), "w") as f:
+        json.dump(meta, f)
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (same treedef)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    with open(_meta_path(path)) as f:
+        meta = json.load(f)
+    flat_like = _flatten(like)
+    if sorted(flat_like) != meta["keys"]:
+        missing = set(meta["keys"]) ^ set(flat_like)
+        raise ValueError(f"checkpoint structure mismatch: {sorted(missing)[:5]}")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(_path_str(q) for q in p)
+        for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+    import jax.numpy as jnp
+    new_leaves = [jnp.asarray(npz[k]).astype(l.dtype).reshape(l.shape)
+                  for k, l in zip(paths, leaves_like)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["step"]

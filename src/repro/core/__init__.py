@@ -1,0 +1,6 @@
+# The paper's primary contribution: decentralized gossip training (topology,
+# mixing, algorithms) + IDKD homogenization (ood, distill, idkd).
+from repro.core.topology import Topology  # noqa: F401
+from repro.core.mixing import (consensus_distance, make_dense_mixer,  # noqa: F401
+                               make_ppermute_mixer)
+from repro.core.algorithms import make_algorithm  # noqa: F401

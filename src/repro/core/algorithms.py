@@ -1,0 +1,314 @@
+"""Decentralized optimization algorithms (paper §2/§4 baselines + base).
+
+Every algorithm is expressed against an abstract ``mix(pytree) -> pytree``
+gossip operator, so the same code runs in both backends:
+
+* simulation — node-stacked params + dense mixing matrix (CPU experiments);
+* production — per-node params inside ``shard_map`` + ppermute mixing.
+
+Implemented:
+  * ``centralized``  — SGD with exact global averaging (paper's upper bound)
+  * ``dsgd``         — Lian et al. 2017, x ← W x − η g
+  * ``dsgdm``        — DSGD + local heavy-ball momentum
+  * ``qg-dsgdm-n``   — Lin et al. 2021 quasi-global momentum w/ normalized
+                       gradients (the paper's base optimizer)
+  * ``d2``           — Tang et al. 2018 bias-corrected D²
+  * ``relaysgd``     — Vogels et al. 2021 RelaySum/Model (sim backend only;
+                       requires per-edge relay state on a tree topology)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+
+PyTree = Any
+Mixer = Callable[[PyTree], PyTree]
+
+
+def tree_axpy(a, x, y):
+    """a*x + y elementwise over pytrees (f32 accumulate, cast back)."""
+    return jax.tree.map(
+        lambda xi, yi: (a * xi.astype(jnp.float32)
+                        + yi.astype(jnp.float32)).astype(yi.dtype), x, y)
+
+
+def tree_scale(a, x):
+    return jax.tree.map(lambda xi: (a * xi.astype(jnp.float32)).astype(xi.dtype), x)
+
+
+def tree_sub(x, y):
+    return jax.tree.map(lambda a, b: a - b, x, y)
+
+
+def tree_zeros_like(x):
+    return jax.tree.map(jnp.zeros_like, x)
+
+
+def global_grad_norm(grads) -> jax.Array:
+    leaves = [jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)]
+    return jnp.sqrt(sum(leaves))
+
+
+def _apply_weight_decay(params, grads, wd: float):
+    if not wd:
+        return grads
+    return jax.tree.map(
+        lambda g, p: g + wd * p.astype(g.dtype), grads, params)
+
+
+@dataclass
+class Algorithm:
+    """init(params) -> state; step(params, grads, state, lr, mix) -> ..."""
+    name: str
+    init: Callable[[PyTree], PyTree]
+    step: Callable[..., Any]
+    needs_topology: bool = False
+
+
+# ---------------------------------------------------------------------------
+# centralized SGD (upper-bound reference; exact averaging every step)
+# ---------------------------------------------------------------------------
+
+
+def make_centralized(momentum: float = 0.9, weight_decay: float = 0.0,
+                     nesterov: bool = True) -> Algorithm:
+    def init(params):
+        return {"m": tree_zeros_like(params)}
+
+    def step(params, grads, state, lr, mix: Mixer):
+        grads = mix(grads)  # exact average when mix is full averaging
+        grads = _apply_weight_decay(params, grads, weight_decay)
+        m = tree_axpy(momentum, state["m"], grads)
+        upd = tree_axpy(momentum, m, grads) if nesterov else m
+        new_params = tree_axpy(-lr, upd, params)
+        return new_params, {"m": m}
+
+    return Algorithm("centralized", init, step)
+
+
+# ---------------------------------------------------------------------------
+# DSGD / DSGDm (Lian et al. 2017; Assran et al. 2019)
+# ---------------------------------------------------------------------------
+
+
+def make_dsgd(momentum: float = 0.0, weight_decay: float = 0.0) -> Algorithm:
+    def init(params):
+        return {"m": tree_zeros_like(params)} if momentum else {}
+
+    def step(params, grads, state, lr, mix: Mixer):
+        grads = _apply_weight_decay(params, grads, weight_decay)
+        if momentum:
+            m = tree_axpy(momentum, state["m"], grads)
+            state = {"m": m}
+            upd = m
+        else:
+            upd = grads
+        mixed = mix(params)
+        new_params = tree_axpy(-lr, upd, mixed)
+        return new_params, state
+
+    return Algorithm("dsgd" if not momentum else "dsgdm", init, step)
+
+
+# ---------------------------------------------------------------------------
+# QG-DSGDm-N (Lin et al. 2021) — the paper's base optimizer
+# ---------------------------------------------------------------------------
+
+
+def make_qg_dsgdm_n(momentum: float = 0.9, weight_decay: float = 1e-4,
+                    normalize: bool = True, eps: float = 1e-8) -> Algorithm:
+    """Quasi-global momentum: the momentum buffer tracks the *global*
+    descent direction d_t = (x_t − x_{t+1})/η — which includes the gossip
+    displacement — instead of the biased local gradient. With ``normalize``
+    the local stochastic gradient is L2-normalized (the “-N” variant),
+    making the local step scale-free under heterogeneous gradients.
+    """
+    def init(params):
+        return {"m": tree_zeros_like(params)}
+
+    def step(params, grads, state, lr, mix: Mixer):
+        grads = _apply_weight_decay(params, grads, weight_decay)
+        if normalize:
+            gn = global_grad_norm(grads)
+            grads = tree_scale(1.0 / (gn + eps), grads)
+        # local step with quasi-global momentum
+        upd = tree_axpy(momentum, state["m"], grads)
+        half = tree_axpy(-lr, upd, params)
+        # gossip
+        new_params = mix(half)
+        # quasi-global momentum update from total displacement
+        d = tree_scale(1.0 / lr, tree_sub(params, new_params))
+        m = jax.tree.map(
+            lambda mi, di: (momentum * mi.astype(jnp.float32)
+                            + (1 - momentum) * di.astype(jnp.float32)
+                            ).astype(mi.dtype), state["m"], d)
+        return new_params, {"m": m}
+
+    return Algorithm("qg-dsgdm-n", init, step)
+
+
+# ---------------------------------------------------------------------------
+# D² (Tang et al. 2018)
+# ---------------------------------------------------------------------------
+
+
+def make_d2(weight_decay: float = 0.0) -> Algorithm:
+    """x_{t+1} = W(2 x_t − x_{t−1} − η(g_t − g_{t−1})) — removes the
+    data-heterogeneity bias term from DSGD's fixed point."""
+    def init(params):
+        return {"prev_x": params, "prev_g": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def step(params, grads, state, lr, mix: Mixer):
+        grads = _apply_weight_decay(params, grads, weight_decay)
+        first = (state["t"] == 0)
+
+        def combine(x, px, g, pg):
+            xf, pxf = x.astype(jnp.float32), px.astype(jnp.float32)
+            gf, pgf = g.astype(jnp.float32), pg.astype(jnp.float32)
+            base = jnp.where(first, xf - lr * gf,
+                             2.0 * xf - pxf - lr * (gf - pgf))
+            return base.astype(x.dtype)
+
+        half = jax.tree.map(combine, params, state["prev_x"], grads,
+                            state["prev_g"])
+        new_params = mix(half)
+        return new_params, {"prev_x": params, "prev_g": grads,
+                            "t": state["t"] + 1}
+
+    return Algorithm("d2", init, step)
+
+
+# ---------------------------------------------------------------------------
+# Gradient Tracking (Koloskova et al. 2021) — another non-IID baseline
+# ---------------------------------------------------------------------------
+
+
+def make_gradient_tracking(weight_decay: float = 0.0) -> Algorithm:
+    """GT-DSGD: maintain a tracker y_i of the *global* gradient:
+
+        x⁺ = W(x − η y)
+        y⁺ = W(y) + g⁺ − g
+
+    The tracker converges to the node-average gradient, removing DSGD's
+    heterogeneity bias (the same goal as D², via consensus on gradients)."""
+    def init(params):
+        return {"y": tree_zeros_like(params),
+                "prev_g": tree_zeros_like(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def step(params, grads, state, lr, mix: Mixer):
+        grads = _apply_weight_decay(params, grads, weight_decay)
+        first = state["t"] == 0
+        # y_t: on the first step the tracker is the local gradient
+        y = jax.tree.map(
+            lambda yi, g, pg: jnp.where(first, g,
+                                        yi + g - pg), state["y"], grads,
+            state["prev_g"])
+        y = mix(y)
+        half = tree_axpy(-lr, y, params)
+        new_params = mix(half)
+        return new_params, {"y": y, "prev_g": grads, "t": state["t"] + 1}
+
+    return Algorithm("gradient-tracking", init, step)
+
+
+# ---------------------------------------------------------------------------
+# RelaySGD (Vogels et al. 2021) — sim backend, tree topologies
+# ---------------------------------------------------------------------------
+
+
+def make_relaysgd(topology: Topology, momentum: float = 0.9,
+                  weight_decay: float = 5e-4) -> Algorithm:
+    """RelaySum/Model: spanning-tree message relaying gives every node the
+    *exact* (delayed) average of all models — no mixing-matrix variance.
+    State carries per-directed-edge relay messages; requires a tree
+    (the paper runs it on a chain)."""
+    if not topology.is_tree():
+        raise ValueError("RelaySGD requires a tree topology (e.g. chain)")
+    n = topology.n
+    adj = np.zeros((n, n), bool)
+    for i in range(n):
+        for j in topology.neighbors(i):
+            adj[i, j] = True
+    adj_j = jnp.asarray(adj)
+
+    def init(params):
+        # msg leaf: (n_src, n_dst, ...) — msg[i, j] = m_{i->j}, edges only
+        def zeros_edge(x):
+            return jnp.zeros((n,) + x.shape, jnp.float32)  # x: (n, ...)
+        return {"msg": jax.tree.map(zeros_edge, params),
+                "cnt": jnp.zeros((n, n), jnp.float32),
+                "m": tree_zeros_like(params)}
+
+    def _incoming(msg_leaf):
+        """inc[i] = Σ_k adj[k, i] · msg[k, i]."""
+        return jnp.einsum("ki...,ki->i...", msg_leaf,
+                          adj_j.astype(msg_leaf.dtype))
+
+    def step(params, grads, state, lr, mix: Mixer = None):
+        grads = _apply_weight_decay(params, grads, weight_decay)
+        m = tree_axpy(momentum, state["m"], grads)
+        xhat = tree_axpy(-lr, m, params)            # (n, ...)
+
+        def relay(msg_leaf, xh):
+            # msg'_{i->j} = xhat_i + Σ_{k∈N(i)\{j}} msg_{k->i}
+            inc = _incoming(msg_leaf)                               # (n, ...)
+            msg_T = jnp.swapaxes(msg_leaf, 0, 1)                    # [i,j]=m_{j->i}
+            new = (xh.astype(jnp.float32)[:, None] + inc[:, None] - msg_T)
+            mask = adj_j.reshape((n, n) + (1,) * (msg_leaf.ndim - 2))
+            return jnp.where(mask, new, 0.0)
+
+        new_msg = jax.tree.map(relay, state["msg"], xhat)
+
+        cnt = state["cnt"]
+        inc_cnt = jnp.einsum("ki,ki->i", cnt, adj_j.astype(cnt.dtype))
+        new_cnt = jnp.where(adj_j, 1.0 + inc_cnt[:, None] - cnt.T, 0.0)
+
+        total_cnt = 1.0 + jnp.einsum("ki,ki->i", new_cnt,
+                                     adj_j.astype(new_cnt.dtype))   # (n,)
+
+        def combine(xh, msg_leaf):
+            inc = _incoming(msg_leaf)
+            shape = (n,) + (1,) * (xh.ndim - 1)
+            return ((xh.astype(jnp.float32) + inc)
+                    / total_cnt.reshape(shape)).astype(xh.dtype)
+
+        new_params = jax.tree.map(combine, xhat, new_msg)
+        return new_params, {"msg": new_msg, "cnt": new_cnt, "m": m}
+
+    return Algorithm("relaysgd", init, step, needs_topology=True)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def make_algorithm(name: str, *, topology: Optional[Topology] = None,
+                   momentum: float = 0.9, weight_decay: float = 1e-4
+                   ) -> Algorithm:
+    name = name.lower()
+    if name == "centralized":
+        return make_centralized(momentum, weight_decay)
+    if name == "dsgd":
+        return make_dsgd(0.0, weight_decay)
+    if name == "dsgdm":
+        return make_dsgd(momentum, weight_decay)
+    if name in ("qg-dsgdm-n", "qgm"):
+        return make_qg_dsgdm_n(momentum, weight_decay)
+    if name == "d2":
+        return make_d2(weight_decay)
+    if name in ("gradient-tracking", "gt"):
+        return make_gradient_tracking(weight_decay)
+    if name == "relaysgd":
+        if topology is None:
+            raise ValueError("relaysgd needs a topology")
+        return make_relaysgd(topology, momentum, weight_decay)
+    raise ValueError(f"unknown algorithm {name!r}")

@@ -1,0 +1,76 @@
+"""Out-of-Distribution detection for IDKD (paper §3, Figure 2c).
+
+The paper uses the maximum-softmax-probability (MSP) detector
+(Hendrycks & Gimpel 2017): a sample is In-Distribution iff
+max softmax prob > t. The threshold t_opt is calibrated on a ROC sweep —
+private (validation) data as the positive/ID class, a calibration set
+(the public dataset) as the negative/OoD class — picking the point that
+"maximizes TPR while minimizing FPR", i.e. Youden's J = TPR − FPR
+(Fawcett 2006).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def msp_confidence(logits, temperature: float = 1.0) -> jax.Array:
+    """Max softmax probability. logits: (..., C) -> (...)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+    return jnp.max(probs, axis=-1)
+
+
+def energy_score(logits, temperature: float = 1.0) -> jax.Array:
+    """Energy-based OoD score (Liu et al. 2020b), the paper's cited
+    alternative to MSP: −E(x) = T·logsumexp(z/T). Higher ⇒ more ID.
+    Plugs into the same ROC calibration as MSP."""
+    lf = logits.astype(jnp.float32)
+    return temperature * jax.nn.logsumexp(lf / temperature, axis=-1)
+
+
+def confidence(logits, detector: str = "msp", temperature: float = 1.0
+               ) -> jax.Array:
+    """Dispatch on IDKDConfig.detector: 'msp' (paper's default) | 'energy'."""
+    if detector == "energy":
+        return energy_score(logits, temperature)
+    if detector == "msp":
+        return msp_confidence(logits, temperature)
+    raise ValueError(f"unknown OoD detector {detector!r}")
+
+
+def sequence_confidence(logits, temperature: float = 1.0) -> jax.Array:
+    """LLM adaptation: per-sequence MSP = mean over positions of the
+    per-token max softmax probability. logits: (B, S, V) -> (B,)."""
+    return jnp.mean(msp_confidence(logits, temperature), axis=-1)
+
+
+def roc_curve(id_scores, ood_scores, num_thresholds: int = 256
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Threshold sweep. Returns (thresholds, TPR, FPR); score>t ⇒ ID."""
+    lo = jnp.minimum(jnp.min(id_scores), jnp.min(ood_scores))
+    hi = jnp.maximum(jnp.max(id_scores), jnp.max(ood_scores))
+    ts = jnp.linspace(lo - 1e-6, hi + 1e-6, num_thresholds)
+    tpr = jnp.mean(id_scores[None, :] > ts[:, None], axis=1)
+    fpr = jnp.mean(ood_scores[None, :] > ts[:, None], axis=1)
+    return ts, tpr, fpr
+
+
+def calibrate_threshold(id_scores, ood_scores,
+                        num_thresholds: int = 256) -> jax.Array:
+    """t_opt = argmax_t TPR(t) − FPR(t) (Youden's J) — paper's Optimal()."""
+    ts, tpr, fpr = roc_curve(id_scores, ood_scores, num_thresholds)
+    return ts[jnp.argmax(tpr - fpr)]
+
+
+def auroc(id_scores, ood_scores, num_thresholds: int = 512) -> jax.Array:
+    """Area under the ROC (diagnostic for detector quality)."""
+    _, tpr, fpr = roc_curve(id_scores, ood_scores, num_thresholds)
+    order = jnp.argsort(fpr)
+    return jnp.trapezoid(tpr[order], fpr[order])
+
+
+def select_id_subset(confidences, threshold) -> jax.Array:
+    """Boolean ID mask over the public set: conf > t_opt (Algorithm 1 l.7)."""
+    return confidences > threshold

@@ -1,0 +1,293 @@
+"""In-process decentralized training simulator (CPU accuracy experiments).
+
+All N nodes live in one process: parameters are node-stacked pytrees
+(leading axis = node), per-node gradients come from ``vmap``, gossip is the
+dense mixing matrix — mathematically identical to the paper's MPI cluster
+under synchronous rounds, which is what the paper runs.
+
+Supports the full method grid of Tables 2–7:
+  * algorithms: dsgd / dsgdm / qg-dsgdm-n / d2 / relaysgd / centralized
+  * ``kd_mode``: None (no distillation), "vanilla" (no OoD filter — the
+    QG-DSGDm-N + KD baseline), "idkd" (MSP-filtered — the paper's method)
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
+from repro.core import distill, idkd, ood
+from repro.core.algorithms import make_algorithm
+from repro.core.mixing import consensus_distance, make_dense_mixer
+from repro.core.topology import Topology
+from repro.data.dirichlet import dirichlet_partition, partition_stats
+from repro.data.pipeline import HomogenizedSampler, NodeSampler
+from repro.data.synthetic import ClassificationData
+from repro.models import build_model
+from repro.optim.schedules import step_decay
+
+
+@dataclass
+class SimResult:
+    final_acc: float
+    acc_history: List[float] = field(default_factory=list)
+    loss_history: List[float] = field(default_factory=list)
+    consensus_history: List[float] = field(default_factory=list)
+    pre_hist: Optional[np.ndarray] = None    # (n, C) class hists pre-IDKD
+    post_hist: Optional[np.ndarray] = None   # (n, C) class hists post-IDKD
+    thresholds: Optional[np.ndarray] = None
+    id_fraction: float = 0.0                 # fraction of D_P kept as ID
+    comm_bytes_per_iter: float = 0.0
+    label_bytes_total: float = 0.0
+    wall_seconds: float = 0.0
+
+
+class DecentralizedSimulator:
+    def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
+                 data: ClassificationData, public_x: Optional[np.ndarray] = None,
+                 kd_mode: Optional[str] = None, eval_every: int = 50,
+                 eval_batches: int = 4):
+        self.mcfg = model_cfg
+        self.tcfg = train_cfg
+        self.data = data
+        self.public_x = public_x
+        self.kd_mode = kd_mode
+        self.eval_every = eval_every
+        self.eval_batches = eval_batches
+
+        n = train_cfg.num_nodes
+        self.topology = Topology.make(train_cfg.topology, n)
+        if train_cfg.algorithm == "centralized":
+            # exact averaging reference: fully-connected uniform mixing
+            W = np.full((n, n), 1.0 / n)
+            self.mixer = make_dense_mixer(W)
+        else:
+            self.mixer = make_dense_mixer(self.topology.mixing_matrix())
+        self.algo = make_algorithm(train_cfg.algorithm,
+                                   topology=self.topology,
+                                   momentum=train_cfg.momentum,
+                                   weight_decay=train_cfg.weight_decay)
+        self.model = build_model(model_cfg)
+
+        rng = np.random.default_rng(train_cfg.seed)
+        if train_cfg.algorithm == "centralized":
+            # paper: centralized reference uses a random IID distribution
+            idx = rng.permutation(len(data.train_y))
+            self.parts = [np.asarray(p) for p in np.array_split(idx, n)]
+        else:
+            self.parts = dirichlet_partition(
+                data.train_y, n, alpha=getattr(train_cfg, "alpha", 0.1),
+                rng=rng)
+        self.lr_fn = step_decay(train_cfg.lr, train_cfg.steps,
+                                train_cfg.lr_decay_milestones,
+                                train_cfg.lr_decay_factor)
+        self._build_jits()
+
+    # ------------------------------------------------------------------ setup
+    def _build_jits(self):
+        model, mixer, algo = self.model, self.mixer, self.algo
+        C = self.mcfg.num_classes
+        kd_T = (self.tcfg.idkd.temperature if self.tcfg.idkd
+                else IDKDConfig().temperature)
+
+        def node_loss(params, images, soft_labels, weights):
+            logits, _ = model.forward(params, {"images": images})
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            nll = -jnp.sum(soft_labels * logp, axis=-1)
+            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+        def kd_node_loss(params, images, soft_labels, weights, is_pub):
+            """Private part: hard CE. Public part: T²-scaled KD loss
+            (Hinton's T² factor keeps KD gradients comparable to the hard
+            CE gradients when mixing the two)."""
+            logits, _ = model.forward(params, {"images": images})
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            hard_nll = -jnp.sum(soft_labels * logp, axis=-1)
+            kd = distill.kd_loss(logits, soft_labels, kd_T)
+            nll = jnp.where(is_pub, kd, hard_nll)
+            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
+        grad_fn = jax.vmap(jax.grad(node_loss), in_axes=(0, 0, 0, 0))
+        kd_grad_fn = jax.vmap(jax.grad(kd_node_loss), in_axes=(0, 0, 0, 0, 0))
+
+        @jax.jit
+        def train_step(params, opt_state, images, soft_labels, weights, lr):
+            grads = grad_fn(params, images, soft_labels, weights)
+            return algo.step(params, grads, opt_state, lr, mixer)
+
+        @jax.jit
+        def kd_train_step(params, opt_state, images, soft_labels, weights,
+                          is_pub, lr):
+            grads = kd_grad_fn(params, images, soft_labels, weights, is_pub)
+            return algo.step(params, grads, opt_state, lr, mixer)
+
+        @jax.jit
+        def forward_logits(params, images):
+            """vmapped per-node forward: images (n, B, ...) -> (n, B, C)."""
+            return jax.vmap(
+                lambda p, x: model.forward(p, {"images": x})[0])(params, images)
+
+        @jax.jit
+        def consensus_eval(params, images, labels):
+            mean_p = jax.tree.map(lambda t: jnp.mean(
+                t.astype(jnp.float32), axis=0).astype(t.dtype), params)
+            logits, _ = model.forward(mean_p, {"images": images})
+            acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+            return acc, nll
+
+        self._train_step = train_step
+        self._kd_train_step = kd_train_step
+        self._forward_logits = forward_logits
+        self._consensus_eval = consensus_eval
+
+    def _stacked_init(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = self.model.init(key)   # identical init on all nodes (paper)
+        n = self.tcfg.num_nodes
+        return jax.tree.map(lambda t: jnp.broadcast_to(t[None],
+                                                       (n,) + t.shape), params)
+
+    # -------------------------------------------------------------- inference
+    def _node_logits(self, params, x: np.ndarray, batch: int = 256):
+        """All-node logits on a shared array x: returns (n, len(x), C)."""
+        n = self.tcfg.num_nodes
+        outs = []
+        for i in range(0, len(x), batch):
+            xb = jnp.asarray(x[i:i + batch])
+            xb = jnp.broadcast_to(xb[None], (n,) + xb.shape)
+            outs.append(np.asarray(self._forward_logits(params, xb)))
+        return np.concatenate(outs, axis=1)
+
+    def _per_node_val_logits(self, params, batch: int = 256):
+        """Each node's logits on its own private samples (ID scores)."""
+        # use each node's training samples as its ID set (paper: D_V^i)
+        n = self.tcfg.num_nodes
+        per_node = []
+        m = min(min(len(p) for p in self.parts), batch)
+        idx = np.stack([p[:m] for p in self.parts])
+        xb = jnp.asarray(self.data.train_x[idx])      # (n, m, ...)
+        return np.asarray(self._forward_logits(params, xb))
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> SimResult:
+        t0 = time.time()
+        tcfg = self.tcfg
+        n = tcfg.num_nodes
+        params = self._stacked_init()
+        opt_state = self.algo.init(params)
+        sampler = NodeSampler(self.parts, tcfg.batch_size, tcfg.seed)
+        result = SimResult(final_acc=0.0)
+        result.pre_hist = partition_stats(self.data.train_y, self.parts,
+                                          self.mcfg.num_classes)
+
+        hom: Optional[idkd.HomogenizedSet] = None
+        hom_sampler: Optional[HomogenizedSampler] = None
+        pub_labels = None
+        pub_weights = None
+        idkd_cfg = tcfg.idkd or IDKDConfig()
+        eye = np.eye(self.mcfg.num_classes, dtype=np.float32)
+
+        for step in range(tcfg.steps):
+            lr = self.lr_fn(step)
+            if (self.kd_mode and self.public_x is not None
+                    and step == idkd_cfg.start_step):
+                hom = self._homogenize(params, idkd_cfg)
+                pub_labels = np.asarray(hom.labels)          # (n, P, C)
+                pub_weights = np.asarray(hom.weights)        # (n, P)
+                hom_sampler = HomogenizedSampler(
+                    self.parts, pub_weights, tcfg.batch_size, tcfg.seed)
+                result.thresholds = np.asarray(hom.thresholds)
+                result.id_fraction = float(np.mean(np.asarray(hom.id_masks)))
+                result.post_hist = self._post_histograms(hom)
+                result.label_bytes_total = float(
+                    n * distill.label_bytes(
+                        int(np.asarray(hom.id_masks).sum() / n),
+                        self.mcfg.num_classes, idkd_cfg.label_topk))
+
+            if hom_sampler is None:
+                idx = sampler.sample()                        # (n, B)
+                images = jnp.asarray(self.data.train_x[idx])
+                labels = jnp.asarray(eye[self.data.train_y[idx]])
+                weights = jnp.ones(idx.shape, jnp.float32)
+                params, opt_state = self._train_step(
+                    params, opt_state, images, labels, weights, lr)
+            else:
+                priv, pub, is_pub = hom_sampler.sample()
+                img_priv = self.data.train_x[priv]            # (n, B, ...)
+                img_pub = self.public_x[pub]
+                images = jnp.asarray(np.where(is_pub[..., None, None, None],
+                                              img_pub, img_priv))
+                lab_priv = eye[self.data.train_y[priv]]
+                lab_pub = np.take_along_axis(
+                    pub_labels, pub[..., None], axis=1)
+                labels = jnp.asarray(np.where(is_pub[..., None],
+                                              lab_pub, lab_priv))
+                w_pub = np.take_along_axis(pub_weights, pub, axis=1)
+                weights = jnp.asarray(np.where(is_pub, w_pub, 1.0)
+                                      ).astype(jnp.float32)
+                params, opt_state = self._kd_train_step(
+                    params, opt_state, images, labels, weights,
+                    jnp.asarray(is_pub), lr)
+
+            if step % self.eval_every == 0 or step == tcfg.steps - 1:
+                acc, nll = self._eval(params)
+                result.acc_history.append(acc)
+                result.loss_history.append(nll)
+                result.consensus_history.append(
+                    float(consensus_distance(params)))
+
+        result.final_acc = result.acc_history[-1]
+        # ring: each node sends its params to deg neighbours every iteration
+        deg = np.mean([self.topology.degree(i) for i in range(n)])
+        nparams = sum(x.size for x in jax.tree.leaves(self.model.init(
+            jax.random.PRNGKey(0))))
+        result.comm_bytes_per_iter = float(deg * nparams * 4)
+        result.wall_seconds = time.time() - t0
+        return result
+
+    # ------------------------------------------------------------ IDKD round
+    def _homogenize(self, params, idkd_cfg: IDKDConfig) -> idkd.HomogenizedSet:
+        pub_logits = jnp.asarray(self._node_logits(params, self.public_x))
+        val_logits = jnp.asarray(self._per_node_val_logits(params))
+        # calibration set D_C = the public set (paper's default)
+        cal_logits = pub_logits
+        if self.kd_mode == "vanilla":
+            # vanilla KD: no OoD filter — every public sample is kept
+            labels = distill.soft_labels(pub_logits, idkd_cfg.temperature)
+            masks = jnp.ones(pub_logits.shape[:2], bool)
+            avg, w = idkd._neighbor_union(self.topology, masks, labels)
+            t = jnp.zeros((self.tcfg.num_nodes,))
+            return idkd.HomogenizedSet(avg, w, masks, t)
+        return idkd.homogenization_round(pub_logits, val_logits, cal_logits,
+                                         self.topology, idkd_cfg)
+
+    def _post_histograms(self, hom: idkd.HomogenizedSet) -> np.ndarray:
+        C = self.mcfg.num_classes
+        hists = []
+        for i in range(self.tcfg.num_nodes):
+            h = idkd.class_histogram(
+                jnp.asarray(self.data.train_y[self.parts[i]]),
+                hom.labels[i], hom.weights[i], C)
+            hists.append(np.asarray(h))
+        return np.stack(hists)
+
+    # ------------------------------------------------------------------ eval
+    def _eval(self, params):
+        accs, nlls = [], []
+        B = 256
+        for b in range(self.eval_batches):
+            lo = (b * B) % len(self.data.test_y)
+            xb = jnp.asarray(self.data.test_x[lo:lo + B])
+            yb = jnp.asarray(self.data.test_y[lo:lo + B])
+            a, l = self._consensus_eval(params, xb, yb)
+            accs.append(float(a))
+            nlls.append(float(l))
+        return float(np.mean(accs)), float(np.mean(nlls))

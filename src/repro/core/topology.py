@@ -1,0 +1,179 @@
+"""Graph topologies + gossip mixing matrices (paper §4.1).
+
+The paper evaluates ring (n = 8/16/32/64), chain (Relay-SGD), and the
+Florentine-families social network (Breiger & Pattison 1986, n = 15).
+Mixing weights are Metropolis–Hastings, giving a symmetric doubly
+stochastic W whose spectral gap 1 − λ₂(W) controls gossip convergence.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# Florentine families marriage network (Breiger & Pattison 1986) — the
+# same 15-node social graph networkx ships (Pucci is isolated and dropped).
+FLORENTINE_FAMILIES = [
+    "Acciaiuoli", "Albizzi", "Barbadori", "Bischeri", "Castellani",
+    "Ginori", "Guadagni", "Lamberteschi", "Medici", "Pazzi", "Peruzzi",
+    "Ridolfi", "Salviati", "Strozzi", "Tornabuoni",
+]
+_FLORENTINE_EDGES = [
+    ("Acciaiuoli", "Medici"), ("Albizzi", "Ginori"), ("Albizzi", "Guadagni"),
+    ("Albizzi", "Medici"), ("Barbadori", "Castellani"), ("Barbadori", "Medici"),
+    ("Bischeri", "Guadagni"), ("Bischeri", "Peruzzi"), ("Bischeri", "Strozzi"),
+    ("Castellani", "Peruzzi"), ("Castellani", "Strozzi"),
+    ("Guadagni", "Lamberteschi"), ("Guadagni", "Tornabuoni"),
+    ("Medici", "Ridolfi"), ("Medici", "Salviati"), ("Medici", "Tornabuoni"),
+    ("Pazzi", "Salviati"), ("Peruzzi", "Strozzi"), ("Ridolfi", "Strozzi"),
+    ("Ridolfi", "Tornabuoni"),
+]
+
+
+def ring_edges(n: int) -> List[Tuple[int, int]]:
+    return [(i, (i + 1) % n) for i in range(n)]
+
+
+def chain_edges(n: int) -> List[Tuple[int, int]]:
+    return [(i, i + 1) for i in range(n - 1)]
+
+
+def torus_edges(rows: int, cols: int) -> List[Tuple[int, int]]:
+    e = []
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            e.append((i, r * cols + (c + 1) % cols))
+            e.append((i, ((r + 1) % rows) * cols + c))
+    return [(a, b) for a, b in e if a != b]
+
+
+def full_edges(n: int) -> List[Tuple[int, int]]:
+    return [(i, j) for i in range(n) for j in range(i + 1, n)]
+
+
+def social_edges() -> List[Tuple[int, int]]:
+    idx = {f: i for i, f in enumerate(FLORENTINE_FAMILIES)}
+    return [(idx[a], idx[b]) for a, b in _FLORENTINE_EDGES]
+
+
+def exponential_edges(n: int) -> List[Tuple[int, int]]:
+    """Static exponential graph: i ~ i ± 2^k — O(log n) degree with a much
+    larger spectral gap than the ring (Assran et al. 2019 family)."""
+    e = set()
+    k = 1
+    while k < n:
+        for i in range(n):
+            e.add(tuple(sorted((i, (i + k) % n))))
+        k *= 2
+    return [t for t in e if t[0] != t[1]]
+
+
+def hierarchical_ring_edges(num_pods: int, nodes_per_pod: int
+                            ) -> List[Tuple[int, int]]:
+    """Ring-of-rings: intra-pod ring + one inter-pod link per pod pair
+    (node 0 of each pod joins an outer ring) — the multi-pod topology."""
+    e = []
+    for p in range(num_pods):
+        base = p * nodes_per_pod
+        e += [(base + i, base + (i + 1) % nodes_per_pod)
+              for i in range(nodes_per_pod)]
+    for p in range(num_pods):
+        e.append((p * nodes_per_pod, ((p + 1) % num_pods) * nodes_per_pod))
+    return [(a, b) for a, b in set(tuple(sorted(t)) for t in e) if a != b]
+
+
+class Topology:
+    """Undirected gossip graph with Metropolis–Hastings mixing weights."""
+
+    def __init__(self, n: int, edges: List[Tuple[int, int]], name: str = ""):
+        self.n = n
+        self.name = name
+        self.adj: Dict[int, List[int]] = {i: [] for i in range(n)}
+        for a, b in edges:
+            if b not in self.adj[a]:
+                self.adj[a].append(b)
+            if a not in self.adj[b]:
+                self.adj[b].append(a)
+        for v in self.adj.values():
+            v.sort()
+
+    # -- constructors --------------------------------------------------------
+    @staticmethod
+    def make(kind: str, n: int) -> "Topology":
+        if kind == "ring":
+            return Topology(n, ring_edges(n), f"ring{n}")
+        if kind == "chain":
+            return Topology(n, chain_edges(n), f"chain{n}")
+        if kind == "full":
+            return Topology(n, full_edges(n), f"full{n}")
+        if kind == "social":
+            if n != 15:
+                raise ValueError("social (Florentine) topology has n=15")
+            return Topology(15, social_edges(), "florentine15")
+        if kind == "torus":
+            r = int(np.sqrt(n))
+            if r * r != n:
+                raise ValueError("torus needs square n")
+            return Topology(n, torus_edges(r, r), f"torus{n}")
+        if kind == "exponential":
+            return Topology(n, exponential_edges(n), f"exp{n}")
+        raise ValueError(f"unknown topology {kind!r}")
+
+    def neighbors(self, i: int) -> List[int]:
+        return self.adj[i]
+
+    def degree(self, i: int) -> int:
+        return len(self.adj[i])
+
+    # -- mixing matrix ---------------------------------------------------------
+    def mixing_matrix(self) -> np.ndarray:
+        """Metropolis–Hastings: W_ij = 1/(1+max(d_i,d_j)) for edges; rows sum 1."""
+        n = self.n
+        W = np.zeros((n, n))
+        for i in range(n):
+            for j in self.adj[i]:
+                W[i, j] = 1.0 / (1.0 + max(self.degree(i), self.degree(j)))
+        for i in range(n):
+            W[i, i] = 1.0 - W[i].sum()
+        return W
+
+    def spectral_gap(self) -> float:
+        ev = np.linalg.eigvalsh(self.mixing_matrix())
+        return float(1.0 - np.abs(ev)[::-1][1])
+
+    def is_connected(self) -> bool:
+        seen = {0}
+        stack = [0]
+        while stack:
+            for j in self.adj[stack.pop()]:
+                if j not in seen:
+                    seen.add(j)
+                    stack.append(j)
+        return len(seen) == self.n
+
+    # -- RelaySum support ------------------------------------------------------
+    def is_tree(self) -> bool:
+        m = sum(len(v) for v in self.adj.values()) // 2
+        return self.is_connected() and m == self.n - 1
+
+
+class TimeVaryingTopology:
+    """One-peer time-varying exponential scheme (paper §4.1 mentions
+    time-varying graphs): at step t every node talks to its ±2^(t mod log n)
+    neighbour only — constant degree per round, log-n rounds to mix.
+    ``mixing_matrix(t)`` returns the round-t doubly stochastic W."""
+
+    def __init__(self, n: int):
+        self.n = n
+        self.num_rounds = max(1, int(np.ceil(np.log2(n))))
+
+    def round_topology(self, t: int) -> "Topology":
+        k = 2 ** (t % self.num_rounds)
+        edges = [(i, (i + k) % self.n) for i in range(self.n)]
+        edges = [e for e in set(tuple(sorted(p)) for p in edges)
+                 if e[0] != e[1]]
+        return Topology(self.n, edges, f"onepeer{self.n}@{t}")
+
+    def mixing_matrix(self, t: int) -> np.ndarray:
+        return self.round_topology(t).mixing_matrix()

@@ -1,0 +1,4 @@
+from repro.data.dirichlet import dirichlet_partition, partition_stats  # noqa: F401
+from repro.data.synthetic import (make_classification_data,  # noqa: F401
+                                  make_lm_data, make_public_data)
+from repro.data.pipeline import HomogenizedSampler, NodeSampler  # noqa: F401

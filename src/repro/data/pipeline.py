@@ -1,0 +1,65 @@
+"""Batching pipeline for decentralized training.
+
+``NodeSampler`` draws per-node minibatches from the Dirichlet partition;
+``HomogenizedSampler`` draws from D_T^i ∪ D_ID (private hard-label samples
+mixed with distilled soft-label public samples) after an IDKD round —
+Algorithm 1 line 15.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+class NodeSampler:
+    """Per-node IID sampling *within* each node's (non-IID) partition."""
+
+    def __init__(self, parts: List[np.ndarray], batch_size: int, seed: int):
+        self.parts = parts
+        self.batch_size = batch_size
+        self.rngs = [np.random.default_rng(seed + 17 * i)
+                     for i in range(len(parts))]
+
+    def sample(self) -> np.ndarray:
+        """(n_nodes, batch) global indices into the training arrays."""
+        return np.stack([
+            rng.choice(part, size=self.batch_size,
+                       replace=len(part) < self.batch_size)
+            for rng, part in zip(self.rngs, self.parts)])
+
+
+class HomogenizedSampler:
+    """Samples the union set: with prob proportional to sizes, a batch
+    element comes from the private set (hard label) or the distilled
+    public subset (soft label + weight)."""
+
+    def __init__(self, parts: List[np.ndarray], public_weights: np.ndarray,
+                 batch_size: int, seed: int):
+        # public_weights: (n_nodes, P) — 1 where sample in node's D_ID union
+        self.parts = parts
+        self.public_idx = [np.flatnonzero(w > 0) for w in public_weights]
+        self.batch_size = batch_size
+        self.rngs = [np.random.default_rng(seed + 31 * i)
+                     for i in range(len(parts))]
+
+    def sample(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Returns (private_idx (n, B), public_idx (n, B), is_public (n, B)).
+        Unused slots hold index 0 with is_public mask selecting the source."""
+        n = len(self.parts)
+        B = self.batch_size
+        priv = np.zeros((n, B), np.int64)
+        pub = np.zeros((n, B), np.int64)
+        is_pub = np.zeros((n, B), bool)
+        for i, rng in enumerate(self.rngs):
+            n_priv = len(self.parts[i])
+            n_pub = len(self.public_idx[i])
+            p_pub = n_pub / max(n_priv + n_pub, 1)
+            mask = rng.random(B) < p_pub
+            is_pub[i] = mask & (n_pub > 0)
+            priv[i] = rng.choice(self.parts[i], size=B,
+                                 replace=n_priv < B)
+            if n_pub:
+                pub[i] = rng.choice(self.public_idx[i], size=B,
+                                    replace=n_pub < B)
+        return priv, pub, is_pub

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+``flash_attention(q, k, v)`` dispatches to the Pallas TPU kernel when
+running on TPU (interpret=False) and to interpret mode on CPU; the pure-jnp
+oracle lives in ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(q, k, v, causal=causal, block_q=block_q,
+                                  block_k=block_k, interpret=interpret)
+
+
+__all__ = ["flash_attention", "flash_attention_ref"]

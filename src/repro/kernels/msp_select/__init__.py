@@ -1,0 +1,2 @@
+from repro.kernels.msp_select.ops import msp_select  # noqa: F401
+from repro.kernels.msp_select.ref import msp_select_ref  # noqa: F401

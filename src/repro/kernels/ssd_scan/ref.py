@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the SSD (Mamba-2) chunked scan kernel.
+
+Sequential (non-chunked) reference recurrence:
+    h_t = exp(dta_t) h_{t-1} + b_t ⊗ xdt_t
+    y_t = c_t · h_t
+All heads independent; b/c already expanded per-head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xdt, dta, b, c, initial_state=None):
+    """xdt: (B,S,H,P) dt-weighted inputs; dta: (B,S,H) log decays;
+    b, c: (B,S,H,N). Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = xdt.shape
+    N = b.shape[-1]
+    h0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(h, inp):
+        x_t, dta_t, b_t, c_t = inp
+        decay = jnp.exp(dta_t)[..., None, None]            # (B,H,1,1)
+        h = h * decay + x_t[..., :, None] * b_t[..., None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    xs = (xdt.swapaxes(0, 1).astype(jnp.float32),
+          dta.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), hT

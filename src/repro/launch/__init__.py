@@ -1,0 +1,3 @@
+# Launch layer: meshes, sharding rules, input specs, dry-run, drivers.
+# NOTE: do not import dryrun here — it sets XLA_FLAGS at import time.
+from repro.launch.mesh import make_production_mesh, node_axes_for  # noqa: F401

@@ -1,0 +1,334 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+For each combination this produces (and caches as JSON under
+``experiments/dryrun/``):
+  * ``memory_analysis`` — argument/output/temp bytes per device,
+  * ``cost_analysis``   — per-device HLO FLOPs and bytes accessed,
+  * per-collective byte counts parsed from the post-SPMD optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), which cost_analysis does not report,
+  * the roofline terms derived from the three (see benchmarks/roofline.py).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import os
+# MUST precede any jax import: jax locks the device count on first init.
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, ASSIGNED_ARCHS, SHAPES, get_config,
+                           shape_supported)
+from repro.configs.base import TrainConfig
+from repro.launch import input_specs as ispec
+from repro.launch import sharding as shd
+from repro.launch.mesh import (HBM_BANDWIDTH, ICI_LINK_BANDWIDTH,
+                               PEAK_FLOPS_BF16, make_production_mesh,
+                               num_nodes)
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import build_model
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+                "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred|"
+                       r"c64|c128)\[([0-9,]*)\]")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Split an HLO module dump into {computation_name: body_text}."""
+    comps: Dict[str, str] = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and "{" in line and "(" in line:
+            head = line.strip().replace("ENTRY ", "")
+            cand = head.split("(", 1)[0].strip().lstrip("%")
+            if cand:
+                name, buf = cand, []
+                continue
+        if name is not None:
+            if line.startswith("}"):
+                comps[name] = "\n".join(buf)
+                name = None
+            else:
+                buf.append(line)
+    return comps
+
+
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=%?([\w\.\-]+).*?"
+                       r"body=%?([\w\.\-]+)")
+
+
+def _line_bytes(stripped: str, op: str) -> float:
+    lhs = stripped.split(f" {op}")[0].split("=", 1)
+    region = lhs[1] if len(lhs) > 1 else lhs[0]
+    nbytes = 0.0
+    for m in _SHAPE_RE.finditer(region):
+        dt, dims = m.group(1), m.group(2)
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        nbytes += size * _DTYPE_BYTES[dt]
+    return nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    Shapes in the optimized module are per-partition, so totals are
+    per-device traffic estimates. Collectives inside ``while`` bodies
+    (lax.scan over layers) are multiplied by the loop trip count — parsed
+    as the largest integer constant in the loop condition — otherwise a
+    61-layer scanned stack would count its per-layer all-reduces once.
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:
+        comps = {"entry": hlo_text}
+    multiplier: Dict[str, float] = {}
+    for text in comps.values():
+        for line in text.splitlines():
+            if " while(" not in line:
+                continue
+            m = _WHILE_RE.search(line)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            trips = [int(t) for t in _TRIP_RE.findall(comps.get(cond, ""))]
+            if trips:
+                multiplier[body] = float(max(trips))
+
+    out = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0.0
+    for cname, text in comps.items():
+        mult = multiplier.get(cname, 1.0)
+        for line in text.splitlines():
+            stripped = line.strip()
+            for c in _COLLECTIVES:
+                if f" {c}(" in stripped or f"{c}-start(" in stripped:
+                    out[c] += _line_bytes(stripped, c) * mult
+                    out["count"] += mult
+                    break
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+def _analyze(lowered, compiled, n_chips: int) -> Dict[str, Any]:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    hlo_text = compiled.as_text()
+    colls = collective_bytes(hlo_text)
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / HBM_BANDWIDTH
+    collective_s = colls["total"] / ICI_LINK_BANDWIDTH
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_bytes_per_device": colls["total"],
+        "collectives": colls,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "memory_analysis": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        },
+        "n_chips": n_chips,
+        "_hlo": hlo_text,      # popped + gzipped by the caller
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True, wire_dtype: str = "float32",
+            cfg_overrides: Dict[str, Any] | None = None,
+            label: str = "", sharded_out: bool = False) -> Dict[str, Any]:
+    """``wire_dtype`` / ``cfg_overrides`` are the §Perf iteration knobs;
+    the baseline table uses wire_dtype='float32' (paper-faithful
+    full-precision gossip) and the per-arch default configs."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, shape=shape_name)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi_pod else "single",
+                           "variant": label or "baseline"}
+    if not shape_supported(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("full-attention architecture: no sub-quadratic "
+                        "variant for 524k context (DESIGN.md)")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = build_model(cfg)
+    from repro.models import transformer as _tfm
+    from repro.models import ssm as _ssm
+    _tfm.RESIDUAL_CONSTRAINT = None      # reset any prior §Perf hooks
+    _ssm.HEAD_CONSTRAINT = None
+    t0 = time.time()
+    with mesh:
+        if shape.mode == "train":
+            nodes = num_nodes(mesh, cfg.node_scope)
+            tcfg = TrainConfig(num_nodes=nodes)
+            if sharded_out and cfg.node_scope == "pod":
+                # §Perf: pin the residual stream batch-sharded inside the
+                # layer scan (same GSPMD batch-replication drift as prefill;
+                # pod scope only — in replica scope 'data' is the node axis
+                # and per-node activations are already minimal).
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                _tfm.RESIDUAL_CONSTRAINT = (
+                    lambda h: jax.lax.with_sharding_constraint(
+                        h, NamedSharding(mesh, P("data", None, None))))
+            step = make_train_step(model, tcfg, nodes, wire_dtype=wire_dtype)
+            p_spec = ispec.stacked_params_specs(model, nodes)
+            opt_spec = jax.eval_shape(step.init_opt, p_spec)
+            batch_spec = ispec.train_specs(cfg, shape, nodes)
+            p_sh = shd.param_shardings(p_spec, mesh, cfg.node_scope)
+            opt_sh = shd.param_shardings(opt_spec, mesh, cfg.node_scope)
+            b_sh = shd.batch_shardings(batch_spec, mesh, cfg.node_scope)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, opt_sh, b_sh, None),
+                out_shardings=(p_sh, opt_sh, None),
+            ).lower(p_spec, opt_spec, batch_spec,
+                    jax.ShapeDtypeStruct((), jnp.float32))
+            rec["num_nodes"] = nodes
+        elif shape.mode == "prefill":
+            step = make_prefill_step(model)
+            p_spec = ispec.params_specs(model)
+            batch_spec = ispec.prefill_specs(cfg, shape)
+            p_sh = shd.serve_param_shardings(p_spec, mesh)
+            b_sh = shd.serve_batch_shardings(batch_spec, mesh)
+            out_sh = None
+            if sharded_out:
+                # §Perf: without an output constraint GSPMD replicates the
+                # logits, which back-propagates replication through the
+                # whole stack — shard logits batch over the data axes, and
+                # pin the residual stream batch-sharded inside the layer
+                # scan (GSPMD drifts to batch-replicated carries otherwise).
+                # NOTE: hooks MUST be installed before ANY trace of `step`
+                # (jax.eval_shape populates the jit trace cache — a trace
+                # taken with hooks unset would be silently reused).
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                axes = tuple(a for a in ("pod", "data")
+                             if a in mesh.axis_names)
+                ax = axes if len(axes) > 1 else axes[0]
+                _tfm.RESIDUAL_CONSTRAINT = (
+                    lambda h: jax.lax.with_sharding_constraint(
+                        h, NamedSharding(mesh, P(ax, None, None))))
+                _ssm.HEAD_CONSTRAINT = (
+                    lambda t: jax.lax.with_sharding_constraint(
+                        t, NamedSharding(mesh, P(ax, None, "model", None))))
+                logits_spec = jax.eval_shape(step, p_spec, batch_spec)
+                out_sh = shd.serve_batch_shardings(logits_spec, mesh)
+            lowered = jax.jit(step, in_shardings=(p_sh, b_sh),
+                              out_shardings=out_sh,
+                              ).lower(p_spec, batch_spec)
+        else:  # decode
+            step = make_decode_step(model)
+            p_spec = ispec.params_specs(model)
+            tok_spec, state_spec, extras = ispec.decode_specs(cfg, shape, model)
+            p_sh = shd.serve_param_shardings(p_spec, mesh)
+            t_sh = shd.serve_batch_shardings(tok_spec, mesh)
+            s_sh = shd.serve_state_shardings(state_spec, mesh)
+            e_sh = tuple(shd.serve_batch_shardings(e, mesh) for e in extras)
+            lowered = jax.jit(
+                step, in_shardings=(p_sh, t_sh, s_sh) + e_sh,
+                out_shardings=(None, s_sh),
+            ).lower(p_spec, tok_spec, state_spec, *extras)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+    rec.update(_analyze(lowered, compiled, n_chips))
+    # model-level FLOPs: 6·N_active·tokens (fwd+bwd) or 2·N_active·tokens
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                   else 1)
+    n_active = cfg.active_param_count()
+    factor = 6 if shape.mode == "train" else 2
+    rec["model_flops_total"] = factor * n_active * tokens
+    rec["model_flops_per_device"] = rec["model_flops_total"] / n_chips
+    hw = rec["hlo_flops_per_device"]
+    rec["useful_flop_ratio"] = (rec["model_flops_per_device"] / hw
+                                if hw else 0.0)
+    rec["status"] = "ok"
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
+              f"compile {rec['compile_s']:.1f}s  "
+              f"compute {rec['compute_s']*1e3:.2f}ms  "
+              f"memory {rec['memory_s']*1e3:.2f}ms  "
+              f"collective {rec['collective_s']*1e3:.2f}ms  "
+              f"dominant={rec['dominant']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (or --all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape_name}_{'multi' if multi else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] cached {tag}")
+                    continue
+                try:
+                    rec = run_one(arch, shape_name, multi)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": repr(e)[:2000]}
+                    failures.append(tag)
+                    print(f"[dryrun] FAILED {tag}: {e}", flush=True)
+                hlo = rec.pop("_hlo", None)
+                if hlo is not None:
+                    import gzip
+                    with gzip.open(os.path.join(args.out, tag + ".hlo.gz"),
+                                   "wt") as hf:
+                        hf.write(hlo)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+    print("[dryrun] all requested combinations lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

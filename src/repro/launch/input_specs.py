@@ -1,0 +1,87 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``train_specs``  → node-stacked batch {tokens, labels, [frontend stubs]}.
+``prefill_specs``→ request batch for one prefill.
+``decode_specs`` → (tokens, decode state[, conditioning]) for one decode
+                   step against a ``shape.seq_len``-token cache.
+
+Modality frontends are stubs per the assignment: the VLM's SigLIP tower is
+represented by precomputed patch embeddings, MusicGen's EnCodec/T5 by token
+streams + conditioning embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _token_shape(cfg: ModelConfig, batch: int, seq: int) -> Tuple[int, ...]:
+    if cfg.num_codebooks > 1:
+        return (batch, seq, cfg.num_codebooks)
+    return (batch, seq)
+
+
+def _frontend_specs(cfg: ModelConfig, lead: Tuple[int, ...]) -> Dict[str, Any]:
+    """Stubbed modality-frontend inputs (batch dims prefixed by ``lead``)."""
+    out = {}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "vlm":
+        out["patch_embeddings"] = jax.ShapeDtypeStruct(
+            lead + (cfg.num_prefix_tokens, cfg.d_model), dt)
+    if cfg.cross_attention:
+        out["conditioning"] = jax.ShapeDtypeStruct(
+            lead + (cfg.cross_attn_len, cfg.d_model), dt)
+    return out
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, num_nodes: int
+                ) -> Dict[str, Any]:
+    assert shape.mode == "train"
+    per_node = shape.global_batch // num_nodes
+    assert per_node * num_nodes == shape.global_batch, \
+        f"global_batch {shape.global_batch} not divisible by {num_nodes} nodes"
+    tok = _token_shape(cfg, per_node, shape.seq_len)
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((num_nodes,) + tok, jnp.int32),
+        "labels": jax.ShapeDtypeStruct((num_nodes,) + tok, jnp.int32),
+    }
+    specs.update(_frontend_specs(cfg, (num_nodes, per_node)))
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    tok = _token_shape(cfg, shape.global_batch, shape.seq_len)
+    specs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct(tok, jnp.int32)}
+    specs.update(_frontend_specs(cfg, (shape.global_batch,)))
+    return specs
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, model
+                 ) -> Tuple[Any, Any, Tuple[Any, ...]]:
+    """Returns (tokens_spec, state_spec, extras) for one decode step with a
+    ``shape.seq_len`` context."""
+    B = shape.global_batch
+    tok = jax.ShapeDtypeStruct(_token_shape(cfg, B, 1), jnp.int32)
+    state = jax.eval_shape(
+        lambda: model.init_decode_state(B, shape.seq_len))
+    extras = ()
+    if cfg.cross_attention:
+        extras = (jax.ShapeDtypeStruct(
+            (B, cfg.cross_attn_len, cfg.d_model), jnp.dtype(cfg.dtype)),)
+    return tok, state, extras
+
+
+def params_specs(model) -> Any:
+    """Abstract (un-stacked) parameter shapes — no allocation."""
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def stacked_params_specs(model, num_nodes: int) -> Any:
+    base = params_specs(model)
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((num_nodes,) + s.shape, s.dtype), base)

@@ -1,0 +1,61 @@
+"""Production meshes (TPU v5e pods).
+
+Single pod: 256 chips as (data=16, model=16). Multi-pod: 2 pods = 512
+chips as (pod=2, data=16, model=16). Defined as functions so importing the
+module never touches jax device state (device count is locked at first
+init — the dry-run sets XLA_FLAGS before importing jax).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BANDWIDTH = 819e9             # B/s
+ICI_LINK_BANDWIDTH = 50e9         # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = 512 if multi_pod else 256
+    devices = jax.devices()[:need]
+    if len(devices) < need:
+        raise RuntimeError(
+            f"production mesh needs {need} devices, found {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — used by tests."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // max(data, 1)))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def node_axes_for(mesh, scope: str):
+    """Which mesh axes form the decentralized gossip graph.
+
+    scope='replica': every data-parallel index is a node (paper's ring-16 /
+    ring-32). scope='pod': one node per pod — used by the architectures too
+    large to hold per-data-replica parameters (DESIGN.md §5); FSDP then
+    shards over 'data' inside the node.
+    """
+    names = mesh.axis_names
+    if scope == "replica":
+        return tuple(a for a in ("pod", "data") if a in names)
+    if scope == "pod":
+        return ("pod",) if "pod" in names else ()
+    raise ValueError(scope)
+
+
+def num_nodes(mesh, scope: str) -> int:
+    n = 1
+    for a in node_axes_for(mesh, scope):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,174 @@
+"""Sharding rules for node-stacked parameters and activations.
+
+Parameters are node-stacked: leaf shape = (N, [L,] ...) where N is the
+gossip-node axis and L the scanned-layer axis. Rules:
+
+* node dim 0   → the node mesh axes (('pod','data') for replica scope,
+                 ('pod',) for pod scope).
+* 'experts'    → expert dim over 'model' (expert parallelism).
+* other ≥2D weights → 'model' on the largest trailing dim divisible by the
+                 axis size (Megatron-style TP: column for wi/wq, row for wo);
+                 pod scope additionally shards another trailing dim over
+                 'data' (FSDP) when divisible.
+* small leaves (biases, norm scales, 1-trailing-dim) → replicated beyond
+  the node axis.
+
+These are the *baseline* rules; §Perf iterates on them.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _divisible(dim: int, size: int) -> bool:
+    return dim % size == 0 and dim >= size
+
+
+def leaf_spec(path: str, shape: Tuple[int, ...], mesh, node_axes,
+              scope: str, skip_dims: int = 1) -> P:
+    """PartitionSpec for one node-stacked param leaf.
+
+    ``skip_dims``: leading dims that are NOT shardable weight dims —
+    dim 0 is the node axis; scanned-layer stacking adds one more
+    (callers pass 2 for layers_* subtrees).
+    """
+    model_size = mesh.shape["model"]
+    data_size = mesh.shape.get("data", 1)
+    spec: list = [None] * len(shape)
+    if node_axes:
+        spec[0] = node_axes if len(node_axes) > 1 else node_axes[0]
+    trailing = list(range(skip_dims, len(shape)))
+    if len(trailing) >= 2:
+        if "experts" in path and len(trailing) >= 3:
+            import os
+            e_dim = trailing[0]
+            both = (os.environ.get("REPRO_SHARD_EXPERTS") == "both"
+                    and scope == "pod")  # 'data' is the node axis otherwise
+            if both and _divisible(shape[e_dim], model_size * data_size):
+                # §Perf variant: experts over model × data (1 expert/chip at
+                # E=256 on a 256-chip pod) — no weight FSDP gathers, the
+                # dispatch all-to-all spans the full pod.
+                spec[e_dim] = ("data", "model")
+            elif _divisible(shape[e_dim], model_size):
+                spec[e_dim] = "model"
+                # FSDP the expert weights' d_model dim in pod scope
+                if scope == "pod" and _divisible(shape[trailing[1]],
+                                                 data_size):
+                    spec[trailing[1]] = "data"
+        else:
+            # 'model' on the largest divisible trailing dim
+            cand = sorted(trailing, key=lambda i: -shape[i])
+            m_dim = next((i for i in cand
+                          if _divisible(shape[i], model_size)), None)
+            if m_dim is not None:
+                spec[m_dim] = "model"
+            if scope == "pod":
+                d_dim = next((i for i in cand
+                              if i != m_dim and _divisible(shape[i],
+                                                           data_size)), None)
+                if d_dim is not None:
+                    spec[d_dim] = "data"
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def param_shardings(params_shape, mesh, scope: str):
+    """NamedSharding pytree for node-stacked params (from eval_shape)."""
+    from repro.launch.mesh import node_axes_for
+    node_axes = node_axes_for(mesh, scope)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        skip = 2 if ("layers_" in ps or "embed_cb" in ps
+                     or ("head" in ps and len(leaf.shape) > 3)) else 1
+        skip = min(skip, max(len(leaf.shape) - 1, 1))
+        return NamedSharding(mesh, leaf_spec(ps, leaf.shape, mesh, node_axes,
+                                             scope, skip_dims=skip))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_shardings(batch_shape, mesh, scope: str):
+    """Node-stacked batch (N, B, ...): node dim over node axes; pod scope
+    additionally shards the per-node batch over 'data'."""
+    from repro.launch.mesh import node_axes_for
+    node_axes = node_axes_for(mesh, scope)
+
+    def one(leaf):
+        spec: list = [None] * len(leaf.shape)
+        if node_axes:
+            spec[0] = node_axes if len(node_axes) > 1 else node_axes[0]
+        if scope == "pod" and len(leaf.shape) > 1 and \
+                leaf.shape[1] % mesh.shape.get("data", 1) == 0 and \
+                mesh.shape.get("data", 1) > 1:
+            spec[1] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def serve_param_shardings(params_shape, mesh):
+    """Serving uses the consensus model — no node axis; TP over 'model',
+    FSDP over 'data' where divisible."""
+    def one(path, leaf):
+        ps = _path_str(path)
+        skip = 1 if "layers_" in ps else 0
+        skip = min(skip, max(len(leaf.shape) - 1, 0))
+        spec = leaf_spec(ps, (1,) + tuple(leaf.shape), mesh, (), "pod",
+                         skip_dims=skip + 1)
+        return NamedSharding(mesh, P(*tuple(spec)[1:]))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def serve_batch_shardings(batch_shape, mesh):
+    """Request batch: batch dim over ('pod','data') when divisible."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+    def one(leaf):
+        spec: list = [None] * len(leaf.shape)
+        if leaf.shape and leaf.shape[0] % total == 0 and total > 1:
+            spec[0] = axes if len(axes) > 1 else axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def serve_state_shardings(state_shape, mesh):
+    """Decode caches: (L, B, cap, heads, dim) — B over data axes when
+    divisible, head/state dims over 'model' when divisible."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    model_size = mesh.shape["model"]
+
+    def one(leaf):
+        shape = leaf.shape
+        spec: list = [None] * len(shape)
+        if len(shape) >= 2 and shape[1] % total == 0 and total > 1:
+            spec[1] = axes if len(axes) > 1 else axes[0]
+        # shard a later dim over model (prefer the largest divisible)
+        if len(shape) >= 3:
+            cand = sorted(range(2, len(shape)), key=lambda i: -shape[i])
+            m = next((i for i in cand if shape[i] % model_size == 0
+                      and shape[i] >= model_size), None)
+            if m is not None:
+                spec[m] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, state_shape)

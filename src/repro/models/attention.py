@@ -1,0 +1,362 @@
+"""Attention: GQA/MHA with RoPE, qk-norm, qkv-bias, sliding window,
+prefix-LM masks, cross-attention, KV-cache decode, and DeepSeek-style MLA
+(multi-head latent attention) with the absorbed decode form.
+
+The training/prefill path uses a chunked flash-style attention in pure jnp
+(online softmax over KV blocks) — this is simultaneously:
+  * the memory-bounded XLA path used for CPU dry-run lowering, and
+  * the numerical oracle for the Pallas ``flash_attention`` kernel.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_head_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention (jnp oracle / XLA path)
+# ---------------------------------------------------------------------------
+
+
+def chunked_attention(q, k, v, *, q_offset=0, causal=True, window=0,
+                      prefix_len: int = 0, kv_valid_len=None, chunk: int = 512):
+    """Online-softmax attention over KV chunks.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KVH, Dk/Dv). GQA handled by head-group
+    reshape (no KV duplication in memory beyond one chunk).
+
+    * ``q_offset`` — absolute position of q[0] (decode: cache length).
+    * ``window`` — sliding-window size (0 = full). May be a traced int32
+      scalar (per-layer windows ride along the layer scan).
+    * ``prefix_len`` — bidirectional prefix (PaliGemma prefix-LM).
+    * ``kv_valid_len`` — (B,) number of valid cache entries (decode).
+    """
+    window = jnp.asarray(window, jnp.int32)
+    B, Sq, H, D = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KVH
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, jnp.float32))
+    qf = q.reshape(B, Sq, KVH, G, D).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, KVH, D)
+    vc = v.reshape(B, n_chunks, chunk, KVH, Dv)
+
+    def mask_for(k_pos):
+        # (Sq, chunk) boolean allow-mask
+        kp = k_pos[None, :]
+        qp = q_pos[:, None]
+        m = jnp.ones((Sq, chunk), bool)
+        if causal:
+            allow = kp <= qp
+            if prefix_len:
+                allow = allow | ((qp < prefix_len) & (kp < prefix_len))
+            m = m & allow
+        m = m & ((window <= 0) | (qp - kp < window))
+        m = m & (kp < Sk)  # chunk padding
+        return m
+
+    def step(carry, inputs):
+        m_run, l_run, acc = carry
+        kch, vch, base = inputs
+        k_pos = base + jnp.arange(chunk)
+        # qf: (B,Sq,KVH,G,D) x kch: (B,chunk,KVH,D) -> (B,Sq,KVH,G,chunk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kch.astype(jnp.float32))
+        allow = mask_for(k_pos)[None, :, None, None, :]
+        if kv_valid_len is not None:
+            allow = allow & (k_pos[None, :] < kv_valid_len[:, None])[:, None, None, None, :]
+        s = jnp.where(allow, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bqhgk,bkhd->bqhgd", p, vch.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, Sq, KVH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVH, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KVH, G, Dv), jnp.float32)
+    bases = jnp.arange(n_chunks) * chunk
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kc.swapaxes(0, 1), vc.swapaxes(0, 1), bases))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard GQA attention block
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Decode cache. Full attention: capacity = context length.
+    Sliding window: capacity = window (ring buffer, positions tracked)."""
+    k: jax.Array          # (B, cap, KVH, D)
+    v: jax.Array          # (B, cap, KVH, D)
+    pos: jax.Array        # (B, cap) absolute positions, -1 = empty
+    length: jax.Array     # (B,) tokens seen so far
+
+
+def init_attention(key, cfg: ModelConfig, dtype, layer_global: bool = True):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    H, KVH = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, dtype),
+        "wk": dense_init(ks[1], d, KVH * hd, dtype),
+        "wv": dense_init(ks[2], d, KVH * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KVH * hd,), dtype)
+        p["bv"] = jnp.zeros((KVH * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, context: int, dtype,
+                  window_override: Optional[int] = None) -> KVCache:
+    hd = cfg.resolved_head_dim
+    window = cfg.sliding_window if window_override is None else window_override
+    cap = min(context, window) if window else context
+    return KVCache(
+        k=jnp.zeros((batch, cap, cfg.num_kv_heads, hd), dtype),
+        v=jnp.zeros((batch, cap, cfg.num_kv_heads, hd), dtype),
+        pos=jnp.full((batch, cap), -1, jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _project_qkv(params, x, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_head_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def attention_forward(params, x, cfg: ModelConfig, *, positions=None,
+                      layer_window=None):
+    """Training/prefill self-attention.
+
+    ``layer_window``: sliding window for THIS layer (0 = full); may be a
+    traced scalar from the layer scan. ``None`` falls back to the config."""
+    B, S, _ = x.shape
+    window = cfg.sliding_window if layer_window is None else layer_window
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(
+        q, k, v, causal=True, window=window,
+        prefix_len=cfg.prefix_lm_prefix, chunk=min(cfg.attn_chunk, S))
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def attention_decode(params, x, cfg: ModelConfig, cache: KVCache, *,
+                     layer_window=None):
+    """One-token decode against the cache; returns (out, new_cache)."""
+    B = x.shape[0]
+    window = jnp.asarray(cfg.sliding_window if layer_window is None
+                         else layer_window, jnp.int32)
+    pos = cache.length  # (B,)
+    q, k, v = _project_qkv(params, x, cfg)  # S=1
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+    cap = cache.k.shape[1]
+    slot = pos % cap  # ring-buffer for windowed; identity while pos < cap
+    bidx = jnp.arange(B)
+    new_k = cache.k.at[bidx, slot].set(k[:, 0])
+    new_v = cache.v.at[bidx, slot].set(v[:, 0])
+    new_pos = cache.pos.at[bidx, slot].set(pos)
+    valid = jnp.minimum(pos + 1, cap)
+    # Ring buffer stores arbitrary order; mask by stored positions.
+    kp = new_pos  # (B, cap)
+    allow = (kp >= 0) & (kp <= pos[:, None])
+    allow = allow & ((window <= 0) | (pos[:, None] - kp < window))
+    qf = q.reshape(B, 1, cfg.num_kv_heads, -1, q.shape[-1]) \
+          .transpose(0, 1, 3, 2, 4).astype(jnp.float32)
+    G = cfg.num_heads // cfg.num_kv_heads
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    s = jnp.einsum("bqghd,bkhd->bqghk", qf * scale, new_k.astype(jnp.float32))
+    s = s.transpose(0, 1, 3, 2, 4)  # (B,1,KVH,G,cap)
+    s = jnp.where(allow[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, new_v.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.num_heads * v.shape[-1]).astype(x.dtype)
+    out = o @ params["wo"]
+    new_cache = KVCache(new_k, new_v, new_pos, pos + 1)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross-attention (audio conditioning; non-causal over a fixed memory)
+# ---------------------------------------------------------------------------
+
+
+def init_cross_attention(key, cfg: ModelConfig, dtype):
+    return init_attention(key, cfg, dtype)
+
+
+def cross_attention_forward(params, x, memory, cfg: ModelConfig):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"]).reshape(B, S, cfg.num_heads, hd)
+    k = (memory @ params["wk"]).reshape(B, memory.shape[1], cfg.num_kv_heads, hd)
+    v = (memory @ params["wv"]).reshape(B, memory.shape[1], cfg.num_kv_heads, hd)
+    out = chunked_attention(q, k, v, causal=False,
+                            chunk=min(cfg.attn_chunk, memory.shape[1]))
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # (B, cap, kv_lora) compressed latents
+    k_rope: jax.Array     # (B, cap, rope_dim)
+    length: jax.Array     # (B,)
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if m.q_lora_rank:
+        p["wq_a"] = dense_init(ks[0], d, m.q_lora_rank, dtype)
+        p["q_norm"] = jnp.ones((m.q_lora_rank,), dtype)
+        p["wq_b"] = dense_init(ks[1], m.q_lora_rank, H * qd, dtype)
+    else:
+        p["wq"] = dense_init(ks[0], d, H * qd, dtype)
+    p["wkv_a"] = dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype)
+    p["kv_norm"] = jnp.ones((m.kv_lora_rank,), dtype)
+    # decoupled: W_UK (kv_lora -> H*nope), W_UV (kv_lora -> H*v)
+    p["w_uk"] = dense_init(ks[3], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype)
+    p["w_uv"] = dense_init(ks[4], m.kv_lora_rank, H * m.v_head_dim, dtype)
+    p["wo"] = dense_init(ks[5], H * m.v_head_dim, d, dtype)
+    return p
+
+
+def _mla_q(params, x, cfg: ModelConfig):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    if m.q_lora_rank:
+        cq = x @ params["wq_a"]
+        cqf = cq.astype(jnp.float32)
+        cq = (cqf * jax.lax.rsqrt(jnp.mean(cqf * cqf, -1, keepdims=True) + cfg.norm_eps)
+              * params["q_norm"].astype(jnp.float32)).astype(x.dtype)
+        q = cq @ params["wq_b"]
+    else:
+        q = x @ params["wq"]
+    q = q.reshape(B, S, H, qd)
+    return q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+
+
+def _mla_latent(params, x, cfg: ModelConfig):
+    m = cfg.mla
+    kv = x @ params["wkv_a"]
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    cf = c_kv.astype(jnp.float32)
+    c_kv = (cf * jax.lax.rsqrt(jnp.mean(cf * cf, -1, keepdims=True) + cfg.norm_eps)
+            * params["kv_norm"].astype(jnp.float32)).astype(x.dtype)
+    return c_kv, k_rope
+
+
+def mla_forward(params, x, cfg: ModelConfig, *, positions=None):
+    """Training/prefill MLA in the expanded form."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope = _mla_q(params, x, cfg)
+    c_kv, k_rope = _mla_latent(params, x, cfg)
+    k_nope = (c_kv @ params["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, k_rope], -1)
+    out = chunked_attention(q, k, v, causal=True, chunk=min(cfg.attn_chunk, S))
+    return out.reshape(B, S, -1) @ params["wo"]
+
+
+def make_mla_cache(cfg: ModelConfig, batch: int, context: int, dtype) -> MLACache:
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, context, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, context, m.qk_rope_head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def mla_decode(params, x, cfg: ModelConfig, cache: MLACache):
+    """Absorbed-form decode: scores/outputs computed in the latent space so
+    the cache stays (kv_lora + rope_dim) per token — MLA's whole point."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    pos = cache.length
+    q_nope, q_rope = _mla_q(params, x, cfg)          # (B,1,H,·)
+    c_kv, k_rope = _mla_latent(params, x, cfg)       # (B,1,·)
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], pos[:, None], cfg.rope_theta)[:, :, 0]
+    bidx = jnp.arange(B)
+    new_ckv = cache.c_kv.at[bidx, pos].set(c_kv[:, 0])
+    new_krope = cache.k_rope.at[bidx, pos].set(k_rope[:, 0])
+    # absorb W_UK into q: q̃ = q_nope @ W_UK^T  -> latent-space query
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,chd->bqhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    # scores: latent part + rope part
+    s_lat = jnp.einsum("bqhc,bkc->bhqk", q_lat, new_ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                        new_krope.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim + m.qk_rope_head_dim,
+                                       jnp.float32))
+    s = (s_lat + s_rope) * scale
+    allow = (jnp.arange(cache.c_kv.shape[1])[None, :] <= pos[:, None])
+    s = jnp.where(allow[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkc->bqhc", p, new_ckv.astype(jnp.float32))
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    o = jnp.einsum("bqhc,chd->bqhd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * m.v_head_dim).astype(x.dtype)
+    out = o @ params["wo"]
+    return out, MLACache(new_ckv, new_krope, pos + 1)

@@ -1,0 +1,136 @@
+"""Shared model building blocks (functional: init_* returns a param pytree,
+apply functions are pure).
+
+All parameters are plain nested dicts of jnp arrays so the decentralized
+optimizers, gossip mixing, and checkpointing treat every architecture
+uniformly as a pytree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out), jnp.float32)
+    return (w * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, d: int, dtype):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_norm(params, x, cfg: ModelConfig):
+    eps = cfg.norm_eps
+    xf = x.astype(jnp.float32) if cfg.norm_in_f32 else x
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps=1e-6):
+    """Per-head RMS norm used by Qwen3 qk-norm (normalizes head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def evonorm_b0(x, params, eps: float = 1e-5):
+    """EvoNorm-B0 (Liu et al. 2020): batch-free at inference? No — B0 uses
+    batch variance; for decentralized non-IID training the paper wants
+    batch-stat-free layers, and EvoNorm-S0 is the sample-based variant.
+    We implement **EvoNorm-S0** (group-std based, no batch statistics),
+    which is the variant that transfers to decentralized training:
+
+        y = x * sigmoid(v * x) / group_std(x) * gamma + beta
+    """
+    gamma, beta, v = params["gamma"], params["beta"], params["v"]
+    b, h, w, c = x.shape
+    groups = max(1, c // 8)
+    xg = x.reshape(b, h, w, groups, c // groups)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    std = jnp.sqrt(var + eps)
+    std = jnp.broadcast_to(std, xg.shape).reshape(b, h, w, c)
+    num = x * jax.nn.sigmoid(v * x)
+    return num / std * gamma + beta
+
+
+def init_evonorm(c: int, dtype=jnp.float32):
+    return {"gamma": jnp.ones((c,), dtype), "beta": jnp.zeros((c,), dtype),
+            "v": jnp.ones((c,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d: int, d_ff: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {"wi": dense_init(k1, d, d_ff, dtype),
+                "wg": dense_init(k2, d, d_ff, dtype),
+                "wo": dense_init(k3, d_ff, d, dtype)}
+    return {"wi": dense_init(k1, d, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d, dtype)}
+
+
+def apply_mlp(params, x, cfg: ModelConfig):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    elif cfg.mlp_type == "geglu":
+        h = jax.nn.gelu(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]

@@ -1,0 +1,12 @@
+"""``build_model(cfg)`` — single entry point dispatching on arch family."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.resnet import ResNetModel
+from repro.models.transformer import DecoderModel
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.arch_type == "cnn":
+        return ResNetModel(cfg)
+    return DecoderModel(cfg)

@@ -1,0 +1,281 @@
+"""Mamba-2 (SSD — state-space duality) mixer [arXiv:2405.21060].
+
+The SSD layer computes, per head h with state size N and head dim P:
+
+    h_t = exp(a_t) * h_{t-1} + b_t ⊗ (x_t * dt_t)
+    y_t = c_t · h_t + D * x_t
+
+with input-dependent dt (softplus), shared B/C across head groups, and a
+short causal depthwise conv on (x, B, C). We implement the *chunked dual
+form*: intra-chunk quadratic attention-like term on the MXU plus an
+inter-chunk sequential state recurrence — the same decomposition the
+Pallas ``ssd_scan`` kernel uses (this file is its oracle via
+``repro.kernels.ssd_scan.ref``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+# §Perf hook (set by the launch layer): constrains the per-head SSD inputs
+# (B, S, H, ·) to batch×head sharding so the O(ck²) intra-chunk
+# intermediates are sharded on BOTH the data and model axes instead of
+# GSPMD's head-only choice (which batch-replicates every chunk tensor).
+HEAD_CONSTRAINT = None
+
+
+def _constrain_heads(t):
+    if HEAD_CONSTRAINT is not None:
+        return HEAD_CONSTRAINT(t)
+    return t
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state (O(1) in context length)."""
+    conv: jax.Array      # (B, conv_width-1, conv_dim) rolling conv inputs
+    ssm: jax.Array       # (B, nheads, head_dim, state) running SSM state
+    length: jax.Array    # (B,)
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.state_size
+    return d_inner, nheads, conv_dim
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    gn = s.ngroups * s.state_size
+    p = {
+        "a_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),  # f32
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "w_out": dense_init(ks[2], d_inner, d, dtype),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+    if s.split_proj:
+        # §Perf variant: one projection per stream — every output dim is a
+        # standalone tensor, so TP sharding never crosses a split boundary
+        # (the fused layout forces an all-gather at z/x/B/C/dt slicing).
+        p.update({
+            "w_z": dense_init(ks[0], d, d_inner, dtype),
+            "w_x": dense_init(ks[3], d, d_inner, dtype),
+            "w_b": dense_init(ks[4], d, gn, dtype),
+            "w_c": dense_init(ks[5], d, gn, dtype),
+            "w_dt": dense_init(ks[6], d, nheads, dtype),
+            "conv_wx": (jax.random.normal(ks[1], (s.conv_width, d_inner),
+                                          jnp.float32) * 0.1).astype(dtype),
+            "conv_wb": (jax.random.normal(ks[7], (s.conv_width, gn),
+                                          jnp.float32) * 0.1).astype(dtype),
+            "conv_wc": (jax.random.normal(ks[7], (s.conv_width, gn),
+                                          jnp.float32) * 0.1).astype(dtype),
+            "conv_bx": jnp.zeros((d_inner,), dtype),
+            "conv_bb": jnp.zeros((gn,), dtype),
+            "conv_bc": jnp.zeros((gn,), dtype),
+        })
+    else:
+        # fused mamba2 layout: in_proj emits [z, x, B, C, dt]
+        p.update({
+            "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * gn + nheads,
+                               dtype),
+            "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim),
+                                         jnp.float32) * 0.1).astype(dtype),
+            "conv_b": jnp.zeros((conv_dim,), dtype),
+        })
+    return p
+
+
+def _split_in(proj, cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner, nheads, _ = ssm_dims(cfg)
+    gn = s.ngroups * s.state_size
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    """Mamba2's RMSNorm(y * silu(z)) output gate."""
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    ms = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _causal_conv(xbc, conv_w, conv_b):
+    """Depthwise causal conv along time. xbc: (B, S, C); conv_w: (W, C)."""
+    W = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * conv_w[i] for i in range(W))
+    return jax.nn.silu(out + conv_b)
+
+
+def ssd_chunked(x, dt, a_log, b, c, chunk: int, initial_state=None):
+    """Chunked SSD scan (pure jnp oracle).
+
+    x:  (B, S, H, P)   per-head inputs
+    dt: (B, S, H)      post-softplus timestep
+    a_log: (H,)        A = -exp(a_log)
+    b, c: (B, S, G, N) shared across H//G head groups
+    Returns y: (B, S, H, P), final_state: (B, H, P, N).
+    """
+    B, S, H, P = x.shape
+    G, N = b.shape[2], b.shape[3]
+    nchunks = -(-S // chunk)
+    pad = nchunks * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    S_p = nchunks * chunk
+    rep = H // G
+    a = -jnp.exp(a_log)                                   # (H,)
+    dta = dt * a                                          # (B,S,H) log-decay
+    xdt = x * dt[..., None]                               # dt-weighted input
+
+    def reshape_chunks(t):
+        return t.reshape((B, nchunks, chunk) + t.shape[2:])
+
+    xc, dtac, bc_, cc_ = map(reshape_chunks, (xdt, dta, b, c))
+    # cumulative log-decay within chunk: L[t] = sum_{u<=t} dta[u]
+    cum = jnp.cumsum(dtac, axis=2)                        # (B,nc,ck,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,t,u,H) t>=u
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # clamp BEFORE exp: masked (t<u) entries have seg>0 and would overflow,
+    # and 0·inf in the backward pass poisons gradients with NaNs.
+    seg = jnp.where(tri, seg, -1e30)
+    decay = jnp.exp(seg)
+    # expand grouped B/C to per-head, then intra-chunk quadratic term:
+    #   y_t += sum_{u<=t} (c_t·b_u) decay(t,u) x_u dt_u
+    b_h = jnp.repeat(bc_, rep, axis=3) if G != H else bc_  # (B,nc,ck,H,N)
+    c_h = jnp.repeat(cc_, rep, axis=3) if G != H else cc_
+    cb = jnp.einsum("bntHN,bnuHN->bntuH", c_h, b_h)        # (B,nc,t,u,H)
+    y_intra = jnp.einsum("bntuH,bntuH,bnuHp->bntHp", cb, decay, xc)
+    # chunk-final states: state_n = sum_u exp(cum_end - cum_u) b_u x_u
+    end_decay = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,ck,H)
+    chunk_state = jnp.einsum("bnuH,bnuHN,bnuHp->bnHpN", end_decay, b_h, xc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,nc,H) total decay
+
+    # inter-chunk recurrence over nchunks (sequential scan)
+    def scan_fn(state, inp):
+        cs, cd = inp                                       # (B,H,P,N), (B,H)
+        new = state * cd[..., None, None] + cs
+        return new, state                                  # emit state *before*
+
+    init = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (chunk_state.swapaxes(0, 1).astype(jnp.float32),
+         chunk_decay.swapaxes(0, 1).astype(jnp.float32)))
+    prev_states = prev_states.swapaxes(0, 1)               # (B,nc,H,P,N)
+    # contribution of carried-in state: y_t += exp(cum_t) c_t · state_in
+    in_decay = jnp.exp(cum)                                # (B,nc,ck,H)
+    y_inter = jnp.einsum("bntH,bntHN,bnHpN->bntHp",
+                         in_decay, c_h, prev_states)
+    y = (y_intra + y_inter).reshape(B, S_p, H, P)[:, :S]
+    return y, final_state
+
+
+def ssm_forward(params, x, cfg: ModelConfig):
+    """Full-sequence SSD forward. x: (B, S, d_model) -> (B, S, d_model)."""
+    s = cfg.ssm
+    B, S, _ = x.shape
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    gn = s.ngroups * s.state_size
+    if s.split_proj:
+        z = x @ params["w_z"]
+        xin = _causal_conv(x @ params["w_x"], params["conv_wx"],
+                           params["conv_bx"])
+        b = _causal_conv(x @ params["w_b"], params["conv_wb"],
+                         params["conv_bb"])
+        c = _causal_conv(x @ params["w_c"], params["conv_wc"],
+                         params["conv_bc"])
+        dt_raw = x @ params["w_dt"]
+    else:
+        proj = x @ params["w_in"]
+        z, xbc, dt_raw = _split_in(proj, cfg)
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xin, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])             # (B,S,H)
+    xh = _constrain_heads(xin.reshape(B, S, nheads, s.head_dim))
+    bh = b.reshape(B, S, s.ngroups, s.state_size)
+    ch = c.reshape(B, S, s.ngroups, s.state_size)
+    y, _ = ssd_chunked(xh.astype(jnp.float32), dt, params["a_log"],
+                       bh.astype(jnp.float32), ch.astype(jnp.float32),
+                       chunk=min(s.chunk_size, S))
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, params["norm_scale"], cfg.norm_eps)
+    return y @ params["w_out"]
+
+
+def make_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, nheads, s.head_dim, s.state_size), jnp.float32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def _fused_weights(params, cfg: ModelConfig):
+    """Reassemble the fused in-proj/conv layout from split params (decode
+    reuses the fused code path; identical math)."""
+    if "w_in" in params:
+        return params["w_in"], params["conv_w"], params["conv_b"]
+    w_in = jnp.concatenate([params["w_z"], params["w_x"], params["w_b"],
+                            params["w_c"], params["w_dt"]], axis=-1)
+    conv_w = jnp.concatenate([params["conv_wx"], params["conv_wb"],
+                              params["conv_wc"]], axis=-1)
+    conv_b = jnp.concatenate([params["conv_bx"], params["conv_bb"],
+                              params["conv_bc"]], axis=-1)
+    return w_in, conv_w, conv_b
+
+
+def ssm_decode(params, x, cfg: ModelConfig, state: SSMState):
+    """Single-token recurrent step. x: (B, 1, d_model)."""
+    s = cfg.ssm
+    B = x.shape[0]
+    d_inner, nheads, conv_dim = ssm_dims(cfg)
+    w_in, conv_w, conv_b = _fused_weights(params, cfg)
+    proj = x[:, 0] @ w_in                                  # (B, ·)
+    z, xbc, dt_raw = _split_in(proj, cfg)
+    # rolling conv buffer
+    hist = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                          conv_w.astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + conv_b.astype(jnp.float32))
+    new_conv = hist[:, 1:].astype(state.conv.dtype)
+    gn = s.ngroups * s.state_size
+    xin, b, c = jnp.split(xbc, [d_inner, d_inner + gn], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])                          # (H,)
+    decay = jnp.exp(dt * a)                                # (B,H)
+    xh = xin.reshape(B, nheads, s.head_dim)
+    bh = jnp.repeat(b.reshape(B, s.ngroups, s.state_size),
+                    nheads // s.ngroups, axis=1)           # (B,H,N)
+    ch = jnp.repeat(c.reshape(B, s.ngroups, s.state_size),
+                    nheads // s.ngroups, axis=1)
+    upd = (dt[..., None] * xh)[..., :, None] * bh[..., None, :]  # (B,H,P,N)
+    new_ssm = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bhpN,bhN->bhp", new_ssm, ch)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x.dtype)
+    y = _gated_norm(y, z[:, None, :], params["norm_scale"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    return out, SSMState(new_conv, new_ssm, state.length + 1)

@@ -1,0 +1,3 @@
+from repro.optim.schedules import constant, cosine, step_decay  # noqa: F401
+from repro.optim.sgd import (adamw_init, adamw_update, sgd_init,  # noqa: F401
+                             sgd_update)

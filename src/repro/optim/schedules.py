@@ -1,0 +1,33 @@
+"""Learning-rate schedules (paper: step decay ×0.1 at 60%/80% of training)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def step_decay(base_lr: float, total_steps: int, milestones=(0.6, 0.8),
+               factor: float = 0.1):
+    ms = jnp.asarray([m * total_steps for m in milestones])
+
+    def lr(step):
+        k = jnp.sum(step >= ms)
+        return base_lr * (factor ** k)
+
+    return lr
+
+
+def cosine(base_lr: float, total_steps: int, warmup: int = 0,
+           min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                     0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.asarray(base_lr, jnp.float32)

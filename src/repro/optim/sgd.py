@@ -1,0 +1,60 @@
+"""Plain (non-decentralized) optimizers — used inside a node's
+model-parallel group and by the centralized baseline."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    momentum: object
+
+
+def sgd_init(params, momentum: float = 0.9):
+    return SGDState(jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(params, grads, state: SGDState, lr, momentum: float = 0.9,
+               weight_decay: float = 0.0, nesterov: bool = False):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p.astype(g.dtype),
+                             grads, params)
+    m = jax.tree.map(lambda mi, g: momentum * mi + g, state.momentum, grads)
+    upd = jax.tree.map(lambda mi, g: momentum * mi + g, m, grads) \
+        if nesterov else m
+    new = jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                     - lr * u.astype(jnp.float32)
+                                     ).astype(p.dtype), params, upd)
+    return new, SGDState(m)
+
+
+class AdamWState(NamedTuple):
+    mu: object
+    nu: object
+    t: jax.Array
+
+
+def adamw_init(params):
+    z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return AdamWState(z, jax.tree.map(jnp.zeros_like, z),
+                      jnp.zeros((), jnp.int32))
+
+
+def adamw_update(params, grads, state: AdamWState, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    t = state.t + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                      * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+    c1 = 1 - b1 ** t.astype(jnp.float32)
+    c2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), AdamWState(mu, nu, t)

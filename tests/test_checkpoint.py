@@ -1,0 +1,42 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def test_roundtrip_simple(tmp_path):
+    params = {"a": jnp.arange(6.0).reshape(2, 3),
+              "nested": {"b": jnp.ones((4,), jnp.bfloat16)}}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params, step=7)
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored, step = load_checkpoint(path, like)
+    assert step == 7
+    assert np.allclose(np.asarray(restored["a"]), np.asarray(params["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_roundtrip_model_params(tmp_path):
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "model")
+    save_checkpoint(path, params, step=100)
+    like = jax.tree.map(jnp.zeros_like, params)
+    restored, step = load_checkpoint(path, like)
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, restored)
+    assert max(jax.tree.leaves(diffs)) == 0.0
+
+
+def test_structure_mismatch_raises(tmp_path):
+    path = str(tmp_path / "x")
+    save_checkpoint(path, {"a": jnp.ones(3)})
+    with pytest.raises(ValueError):
+        load_checkpoint(path, {"b": jnp.ones(3)})

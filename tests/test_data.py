@@ -1,0 +1,78 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.dirichlet import dirichlet_partition, partition_stats
+from repro.data.pipeline import HomogenizedSampler, NodeSampler
+from repro.data.synthetic import (make_classification_data, make_lm_data,
+                                  make_public_data)
+
+
+@given(alpha=st.floats(0.05, 10.0), n_nodes=st.integers(2, 16))
+@settings(max_examples=15, deadline=None)
+def test_partition_disjoint_and_covering(alpha, n_nodes):
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 10, size=500)
+    parts = dirichlet_partition(labels, n_nodes, alpha, rng)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(labels)
+    assert len(np.unique(all_idx)) == len(labels)  # disjoint + covering
+
+
+def test_skew_monotone_in_alpha():
+    rng = np.random.default_rng(1)
+    labels = rng.integers(0, 10, size=4000)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 8, alpha,
+                                    np.random.default_rng(42))
+        h = partition_stats(labels, parts, 10)
+        return np.mean(0.5 * np.abs(h - 0.1).sum(-1))
+
+    assert skew(0.05) > skew(1.0) > skew(100.0)
+
+
+def test_classification_data_learnable_structure():
+    d = make_classification_data(n_train=512, n_test=128, noise=0.3)
+    # nearest-mean classifier should beat chance by a lot
+    dists = ((d.test_x[:, None] - d.class_means[None]) ** 2
+             ).reshape(len(d.test_y), 10, -1).sum(-1)
+    acc = (dists.argmin(1) == d.test_y).mean()
+    assert acc > 0.8
+
+
+def test_public_data_kinds():
+    d = make_classification_data(n_train=256, n_test=64)
+    for kind in ("aligned", "shifted", "noise"):
+        pub = make_public_data(d, n_public=128, kind=kind)
+        assert pub.shape == (128, 16, 16, 3)
+        assert np.isfinite(pub).all()
+
+
+def test_lm_data_topic_structure():
+    tokens, topics = make_lm_data(vocab=100, seq_len=32, n_seqs=64,
+                                  num_topics=10)
+    assert tokens.shape == (64, 32)
+    assert (tokens >= 0).all() and (tokens < 100).all()
+    # sequences of topic t concentrate in slice [10t, 10(t+1))
+    t0 = tokens[topics == 0]
+    if len(t0):
+        in_slice = ((t0 >= 0) & (t0 < 10)).mean()
+        assert in_slice > 0.5
+
+
+def test_node_sampler_shapes():
+    parts = [np.arange(10), np.arange(10, 30)]
+    s = NodeSampler(parts, batch_size=8, seed=0)
+    idx = s.sample()
+    assert idx.shape == (2, 8)
+    assert (idx[0] < 10).all() and (idx[1] >= 10).all()
+
+
+def test_homogenized_sampler_mixes_sources():
+    parts = [np.arange(10), np.arange(10, 20)]
+    w = np.ones((2, 50), np.float32)
+    s = HomogenizedSampler(parts, w, batch_size=64, seed=0)
+    priv, pub, is_pub = s.sample()
+    assert is_pub.mean() > 0.5  # public pool much larger than private
+    assert (pub < 50).all()

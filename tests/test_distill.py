@@ -1,0 +1,75 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distill import (SparseLabels, average_labels, densify_labels,
+                                kd_loss, label_bytes, soft_labels,
+                                sparse_kd_loss, sparsify_labels)
+
+
+def test_soft_labels_normalized():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(8, 10)) * 5)
+    for T in (1.0, 10.0, 100.0):
+        s = soft_labels(logits, T)
+        assert np.allclose(np.asarray(s).sum(-1), 1.0, atol=1e-5)
+    # higher temperature => flatter labels
+    s1 = soft_labels(logits, 1.0)
+    s100 = soft_labels(logits, 100.0)
+    assert float(jnp.max(s100)) < float(jnp.max(s1))
+
+
+def test_kd_loss_minimized_at_teacher():
+    logits_t = jnp.asarray(np.random.default_rng(0).normal(size=(4, 10)))
+    probs = soft_labels(logits_t, 2.0)
+    l_same = kd_loss(logits_t, probs, 2.0).mean()
+    l_diff = kd_loss(logits_t + 3.0 * jnp.asarray(
+        np.random.default_rng(1).normal(size=(4, 10))), probs, 2.0).mean()
+    assert float(l_same) < float(l_diff)
+
+
+def test_average_labels_counts_only_contributors():
+    labels = jnp.asarray([[[1.0, 0.0]], [[0.0, 1.0]], [[0.5, 0.5]]])  # (3,1,2)
+    mask = jnp.asarray([[True], [True], [False]])
+    avg, any_mask = average_labels(labels, mask)
+    assert np.allclose(np.asarray(avg[0]), [0.5, 0.5])
+    assert bool(any_mask[0])
+    avg2, any2 = average_labels(labels, jnp.zeros((3, 1), bool))
+    assert not bool(any2[0])
+
+
+@given(c=st.integers(8, 64), k=st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_sparsify_densify_roundtrip(c, k):
+    """Property: densify(sparsify(p, k)) keeps exactly the top-k mass."""
+    rng = np.random.default_rng(c * 100 + k)
+    logits = jnp.asarray(rng.normal(size=(3, c)) * 3)
+    probs = soft_labels(logits, 1.0)
+    sp = sparsify_labels(probs, k)
+    dense = densify_labels(sp, c)
+    assert np.allclose(np.asarray(dense).sum(-1), 1.0, atol=1e-5)
+    # support is the top-k of the original
+    top = np.argsort(-np.asarray(probs), axis=-1)[:, :k]
+    nz = np.asarray(dense) > 0
+    for row in range(3):
+        assert set(np.flatnonzero(nz[row])) <= set(top[row]) | set(
+            np.flatnonzero(np.isclose(np.asarray(dense[row]), 0, atol=1e-12)))
+
+
+def test_sparse_kd_equals_dense_when_full_k():
+    rng = np.random.default_rng(0)
+    C = 12
+    t_logits = jnp.asarray(rng.normal(size=(5, C)) * 2)
+    s_logits = jnp.asarray(rng.normal(size=(5, C)) * 2)
+    probs = soft_labels(t_logits, 4.0)
+    sp = sparsify_labels(probs, C)
+    dense = kd_loss(s_logits, probs, 4.0)
+    sparse = sparse_kd_loss(s_logits, sp, 4.0)
+    assert np.allclose(np.asarray(dense), np.asarray(sparse), atol=1e-4)
+
+
+def test_label_bytes_sparse_much_smaller():
+    dense = label_bytes(1000, 151_936)
+    sparse = label_bytes(1000, 151_936, topk=8)
+    assert sparse < dense / 1000

@@ -1,0 +1,71 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import IDKDConfig
+from repro.core.idkd import (class_histogram, homogenization_round,
+                             skew_metric)
+from repro.core.topology import Topology
+
+
+def _make_logits(n, P, C, confident_frac, seed=0):
+    """Public logits where a known fraction is high-confidence."""
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(n, P, C)).astype(np.float32)
+    n_conf = int(P * confident_frac)
+    for i in range(n):
+        cls = rng.integers(0, C, size=n_conf)
+        logits[i, :n_conf, :] = -5.0
+        logits[i, np.arange(n_conf), cls] = 8.0
+    return jnp.asarray(logits)
+
+
+def test_homogenization_round_filters_low_confidence():
+    n, P, C = 4, 64, 10
+    topo = Topology.make("ring", n)
+    pub = _make_logits(n, P, C, confident_frac=0.5)
+    # private val: confident (ID-like); calibration: diffuse (OoD-like)
+    val = _make_logits(n, 32, C, confident_frac=1.0, seed=1)
+    cal = _make_logits(n, 32, C, confident_frac=0.0, seed=2)
+    out = homogenization_round(pub, val, cal, topo, IDKDConfig())
+    masks = np.asarray(out.id_masks)
+    # the confident half is kept, the diffuse half dropped
+    assert masks[:, :32].mean() > 0.9
+    assert masks[:, 32:].mean() < 0.1
+    # weights: union of self + 2 ring neighbours
+    w = np.asarray(out.weights)
+    assert w.shape == (n, P)
+    assert ((w == 0) | (w == 1)).all()
+    # labels normalized where weighted
+    lbl = np.asarray(out.labels)
+    sums = lbl.sum(-1)
+    assert np.allclose(sums[w > 0], 1.0, atol=1e-4)
+
+
+def test_label_average_over_ring_neighbors():
+    """Hand-check line 14: node 0's labels = mean over {0,1,n-1} ∩ ID."""
+    n, P, C = 4, 8, 4
+    topo = Topology.make("ring", n)
+    pub = _make_logits(n, P, C, confident_frac=1.0)
+    val = _make_logits(n, 8, C, confident_frac=1.0, seed=1)
+    cal = _make_logits(n, 8, C, confident_frac=0.0, seed=2)
+    out = homogenization_round(pub, val, cal, topo, IDKDConfig())
+    from repro.core.distill import soft_labels
+    labels = np.asarray(soft_labels(pub, IDKDConfig().temperature))
+    expect = labels[[0, 1, 3]].mean(0)  # self + both neighbours, all ID
+    assert np.allclose(np.asarray(out.labels[0]), expect, atol=1e-4)
+
+
+def test_class_histogram_soft_counting():
+    hard = jnp.asarray([0, 0, 1])
+    soft = jnp.asarray([[0.5, 0.5, 0.0]])
+    h = class_histogram(hard, soft, jnp.asarray([1.0]), num_classes=3)
+    expect = np.asarray([2.5, 1.5, 0.0]) / 4.0
+    assert np.allclose(np.asarray(h), expect, atol=1e-6)
+
+
+def test_skew_metric_uniform_is_zero():
+    uniform = jnp.ones((4, 10)) / 10.0
+    assert float(skew_metric(uniform)) == pytest.approx(0.0, abs=1e-6)
+    peaked = jnp.zeros((4, 10)).at[:, 0].set(1.0)
+    assert float(skew_metric(peaked)) > 0.8

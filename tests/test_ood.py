@@ -1,0 +1,58 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ood import (auroc, calibrate_threshold, msp_confidence,
+                            roc_curve, select_id_subset, sequence_confidence)
+
+
+def test_msp_confidence_range():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(32, 10)) * 3)
+    conf = msp_confidence(logits)
+    assert (np.asarray(conf) >= 1.0 / 10 - 1e-6).all()
+    assert (np.asarray(conf) <= 1.0).all()
+
+
+def test_confident_logits_have_high_msp():
+    logits = jnp.zeros((4, 10)).at[:, 0].set(20.0)
+    assert np.asarray(msp_confidence(logits)).min() > 0.99
+
+
+def test_calibration_separates_gaussians():
+    rng = np.random.default_rng(0)
+    id_scores = jnp.asarray(rng.normal(0.8, 0.05, size=500))
+    ood_scores = jnp.asarray(rng.normal(0.3, 0.05, size=500))
+    t = float(calibrate_threshold(id_scores, ood_scores))
+    assert 0.4 < t < 0.75
+    mask = select_id_subset(id_scores, t)
+    assert np.asarray(mask).mean() > 0.95
+    assert np.asarray(select_id_subset(ood_scores, t)).mean() < 0.05
+
+
+def test_auroc_extremes():
+    rng = np.random.default_rng(1)
+    sep_id = jnp.asarray(rng.normal(1.0, 0.01, 400))
+    sep_ood = jnp.asarray(rng.normal(0.0, 0.01, 400))
+    assert float(auroc(sep_id, sep_ood)) > 0.99
+    same = jnp.asarray(rng.normal(0.5, 0.1, 400))
+    assert 0.4 < float(auroc(same, same)) < 0.6
+
+
+@given(mu_gap=st.floats(0.05, 1.0), sigma=st.floats(0.01, 0.3))
+@settings(max_examples=15, deadline=None)
+def test_youden_threshold_is_optimal(mu_gap, sigma):
+    """Property: t_opt maximizes TPR−FPR over the sweep grid."""
+    rng = np.random.default_rng(42)
+    id_s = jnp.asarray(rng.normal(0.5 + mu_gap, sigma, 300))
+    ood_s = jnp.asarray(rng.normal(0.5, sigma, 300))
+    ts, tpr, fpr = roc_curve(id_s, ood_s)
+    t_opt = calibrate_threshold(id_s, ood_s)
+    j_opt = float(jnp.max(tpr - fpr))
+    i = int(jnp.argmin(jnp.abs(ts - t_opt)))
+    assert float(tpr[i] - fpr[i]) == pytest.approx(j_opt, abs=1e-6)
+
+
+def test_sequence_confidence_shape():
+    logits = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8, 32)))
+    assert sequence_confidence(logits).shape == (4,)

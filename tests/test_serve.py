@@ -1,0 +1,32 @@
+"""Batched serving driver smoke (tiny config, few tokens)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import BatchedServer, Request
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    return BatchedServer(cfg, batch_slots=2, context=32)
+
+
+def test_serves_all_requests(server):
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, 128, 4).astype(np.int32), 3)
+            for i in range(3)]
+    out = server.submit_all(reqs)
+    assert set(out) == {0, 1, 2}
+    assert all(len(v) == 3 for v in out.values())
+    assert all(0 <= t < 128 for v in out.values() for t in v)
+
+
+def test_greedy_decode_deterministic(server):
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, 128, 4).astype(np.int32)
+    out1 = server.submit_all([Request(0, prompt.copy(), 4)])
+    out2 = server.submit_all([Request(0, prompt.copy(), 4)])
+    assert out1[0] == out2[0]

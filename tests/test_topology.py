@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.topology import Topology, hierarchical_ring_edges
+
+
+@pytest.mark.parametrize("kind,n", [("ring", 8), ("ring", 16), ("ring", 32),
+                                    ("chain", 16), ("full", 8),
+                                    ("social", 15), ("torus", 16)])
+def test_mixing_matrix_doubly_stochastic(kind, n):
+    topo = Topology.make(kind, n)
+    W = topo.mixing_matrix()
+    assert np.allclose(W.sum(axis=0), 1.0)
+    assert np.allclose(W.sum(axis=1), 1.0)
+    assert np.allclose(W, W.T)
+    assert (W >= 0).all()
+    assert topo.is_connected()
+
+
+def test_spectral_gap_ordering():
+    """Better-connected graphs have larger spectral gaps (paper §4.1)."""
+    ring = Topology.make("ring", 16).spectral_gap()
+    torus = Topology.make("torus", 16).spectral_gap()
+    full = Topology.make("full", 16).spectral_gap()
+    assert ring < torus < full
+    assert full == pytest.approx(1.0)
+
+
+def test_social_graph_matches_florentine():
+    topo = Topology.make("social", 15)
+    assert topo.n == 15
+    # Medici is the hub of the Florentine marriage network
+    degrees = [topo.degree(i) for i in range(15)]
+    assert max(degrees) == 6
+    assert topo.is_connected()
+
+
+def test_chain_is_tree_ring_is_not():
+    assert Topology.make("chain", 8).is_tree()
+    assert not Topology.make("ring", 8).is_tree()
+
+
+def test_hierarchical_ring():
+    edges = hierarchical_ring_edges(2, 16)
+    topo = Topology(32, edges, "hier")
+    assert topo.is_connected()
+    W = topo.mixing_matrix()
+    assert np.allclose(W.sum(axis=1), 1.0)
+
+
+@given(n=st.integers(3, 64))
+@settings(max_examples=20, deadline=None)
+def test_ring_mixing_converges_to_consensus(n):
+    """Property: W^k x -> mean(x) for any connected gossip graph."""
+    W = Topology.make("ring", n).mixing_matrix()
+    x = np.random.default_rng(n).normal(size=(n,))
+    y = x.copy()
+    for _ in range(200 * n):
+        y = W @ y
+    assert np.allclose(y, x.mean(), atol=1e-3)
