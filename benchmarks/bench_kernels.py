@@ -1,14 +1,24 @@
 """Kernel micro-benchmarks: wall time of the jnp oracle (the XLA path used
 on CPU) + interpret-mode allclose checks of the Pallas kernels. Real-TPU
-timing is out of scope in this container (see EXPERIMENTS.md §Roofline)."""
+timing is out of scope in this container (see EXPERIMENTS.md §Roofline).
+
+``bench_labeling`` times the unified IDKD labeling engine (DESIGN.md §2)
+backend-vs-backend over a (P, C) grid and writes the committed
+``BENCH_labeling.json`` baseline that future PRs track.
+"""
 from __future__ import annotations
 
+import functools
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import IDKDConfig
+from repro.core import labeling
+from repro.core.topology import Topology
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.msp_select import msp_select, msp_select_ref
 from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
@@ -72,6 +82,55 @@ def run():
     return [], csv
 
 
+# -------------------------------------------------- labeling engine bench
+LABELING_GRID = [(1024, 10), (1024, 32_768), (8192, 10), (8192, 32_768)]
+LABELING_NODES = 4
+LABELING_TOPK = 8
+
+
+def bench_labeling(out_path: str | None = "BENCH_labeling.json"):
+    """Full IDKD round (score → calibrate → select → exchange → average),
+    dense vs fused vs sparse backends, over P∈{1k, 8k} × C∈{10, 32k}.
+
+    Every backend sees identical inputs on a ring of 4 nodes. Writes the
+    JSON baseline (µs per round) and returns the CSV rows.
+    """
+    topo = Topology.make("ring", LABELING_NODES)
+    cfg = IDKDConfig(label_topk=LABELING_TOPK)
+    rng = np.random.default_rng(0)
+    csv, cells = [], []
+    for P, C in LABELING_GRID:
+        pub = jnp.asarray(
+            rng.normal(size=(LABELING_NODES, P, C)).astype(np.float32) * 3)
+        val = jnp.asarray(
+            rng.normal(size=(LABELING_NODES, 128, C)).astype(np.float32) * 4)
+        # big dense cells: one full (n, P, C) label tensor per gather pass —
+        # a single timing iteration is plenty (and minutes cheaper)
+        iters = 1 if P * C >= 8192 * 32_768 else 3
+        for backend in ("dense", "fused", "sparse"):
+            # cal_logits=None: D_C = D_P score reuse, same as production
+            # (the object-identity fast path is invisible under jit)
+            fn = jax.jit(functools.partial(
+                labeling.label_round, cal_logits=None, topology=topo,
+                cfg=cfg, backend=backend))
+            us = _time(fn, pub, val, iters=iters)
+            name = f"labeling/{backend}_P{P}_C{C}"
+            csv.append((name, round(us, 1), "xla"))
+            cells.append({"P": P, "C": C, "backend": backend,
+                          "us_per_round": round(us, 1)})
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({"meta": {"nodes": LABELING_NODES, "topology": "ring",
+                                "label_topk": LABELING_TOPK,
+                                "jax_backend": jax.default_backend(),
+                                "what": "µs per full IDKD labeling round"},
+                       "cells": cells}, f, indent=2)
+            f.write("\n")
+    return [], csv
+
+
 if __name__ == "__main__":
     for row in run()[1]:
+        print(",".join(str(x) for x in row))
+    for row in bench_labeling()[1]:
         print(",".join(str(x) for x in row))

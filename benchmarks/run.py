@@ -28,6 +28,7 @@ SECTIONS = {
     "table7": lambda: table7_scale.run(),
     "fig3": lambda: fig3_homogenize.run()[:2],
     "kernels": lambda: bench_kernels.run(),
+    "labeling": lambda: bench_kernels.bench_labeling(),
     "roofline": lambda: roofline.run(),
 }
 

@@ -317,6 +317,10 @@ class IDKDConfig:
     label_topk: int = 0             # 0 => dense soft labels (paper);
                                     # >0 => top-k sparse (LLM-scale codec)
     detector: str = "msp"
+    label_backend: str = "dense"    # labeling engine backend (DESIGN.md §2):
+                                    # "dense" (jnp oracle) | "fused"
+                                    # (msp_select kernel pass) | "sparse"
+                                    # (top-k wire format end-to-end)
 
 
 @dataclass(frozen=True)

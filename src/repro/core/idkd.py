@@ -11,87 +11,58 @@ validation data D_V^i and a calibration set D_C, one homogenization round
   (line 14) average      per-sample mean of neighbour labels
   (line 15) D_Tr^i       D_T^i ∪ D_ID  (the homogenized train set)
 
-``homogenization_round`` runs lines 5–14 for *all* nodes at once on
-node-stacked predictions (simulation backend); the production backend does
-the same per node with ppermute label exchange (repro.launch.train).
+The round itself lives in the unified labeling engine
+(:mod:`repro.core.labeling`), which both the simulator and the production
+launch drive; ``homogenization_round`` is the paper-named entry point for
+the dense reference backend. This module keeps the paper's diagnostics
+(Figure 3a histograms, the skew metric).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, NamedTuple, Optional
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import IDKDConfig
-from repro.core import distill, ood
+from repro.core import distill, labeling
+from repro.core.labeling import HomogenizedSet  # noqa: F401 (re-export)
 from repro.core.topology import Topology
-
-
-class HomogenizedSet(NamedTuple):
-    """Per-node distilled public subset (node-stacked)."""
-    labels: jax.Array        # (n, P, C) averaged soft labels
-    weights: jax.Array       # (n, P) 1.0 where sample is in node's D_ID∪neigh
-    id_masks: jax.Array      # (n, P) the node's own D_ID mask (diagnostics)
-    thresholds: jax.Array    # (n,) calibrated t_opt per node
-
-
-def _neighbor_union(topology: Topology, id_mask, labels):
-    """Lines 9–14 for every node: union of own + neighbour ID sets with
-    per-sample label averaging over contributing nodes."""
-    n, P = id_mask.shape
-    C = labels.shape[-1]
-    # membership[i, j] = 1 if node j's labels reach node i (self + neighbours)
-    member = np.eye(n, dtype=np.float32)
-    for i in range(n):
-        for j in topology.neighbors(i):
-            member[i, j] = 1.0
-    member = jnp.asarray(member)
-    m = id_mask.astype(jnp.float32)                       # (n_src, P)
-    contrib = member[:, :, None] * m[None, :, :]          # (dst, src, P)
-    num = jnp.einsum("dsp,spc->dpc", contrib, labels.astype(jnp.float32))
-    cnt = jnp.sum(contrib, axis=1)                        # (dst, P)
-    avg = num / jnp.maximum(cnt, 1.0)[..., None]
-    return avg, (cnt > 0).astype(jnp.float32)
 
 
 def homogenization_round(public_logits, val_logits, cal_logits,
                          topology: Topology, cfg: IDKDConfig
                          ) -> HomogenizedSet:
-    """One IDKD round on node-stacked logits.
+    """One IDKD round on node-stacked logits (dense reference backend).
 
     public_logits: (n, P, C) — each node's logits on the public set D_P
     val_logits:    (n, V, C) — each node's logits on its private D_V^i (ID)
     cal_logits:    (n, K, C) — each node's logits on D_C (OoD calibration)
     """
-    # line 5: soft labels at distillation temperature
-    labels = distill.soft_labels(public_logits, cfg.temperature)
-    # line 6: per-node detector threshold (MSP by default; 'energy' is the
-    # paper-cited alternative — IDKDConfig.detector)
-    det = cfg.detector
-    conf_pub = ood.confidence(public_logits, det)         # (n, P)
-    conf_val = ood.confidence(val_logits, det)            # (n, V)
-    conf_cal = ood.confidence(cal_logits, det)            # (n, K)
-    thresholds = jax.vmap(ood.calibrate_threshold)(conf_val, conf_cal)
-    # line 7: D_ID^i
-    id_mask = conf_pub > thresholds[:, None]              # (n, P)
-    # lines 9–14: neighbour exchange + label average
-    avg_labels, weights = _neighbor_union(topology, id_mask, labels)
-    return HomogenizedSet(avg_labels, weights, id_mask, thresholds)
+    return labeling.label_round(public_logits, val_logits, cal_logits,
+                                topology, cfg, backend="dense")
 
 
 def class_histogram(hard_labels, soft_labels=None, weights=None,
                     num_classes: int = 10):
     """Paper Figure 3a: normalized per-class sample counts pre/post IDKD.
     Soft labels contribute fractionally (the paper counts soft labels for
-    every class with non-zero value)."""
+    every class with non-zero value). ``soft_labels`` may be a dense
+    (P, C) array or a :class:`repro.core.distill.SparseLabels` payload —
+    sparse counting is an O(P·k) scatter-add, never densified."""
     hist = jnp.bincount(hard_labels.astype(jnp.int32), length=num_classes
                         ).astype(jnp.float32)
     if soft_labels is not None:
-        w = weights if weights is not None else jnp.ones(soft_labels.shape[0])
-        hist = hist + jnp.einsum("p,pc->c", w.astype(jnp.float32),
-                                 soft_labels.astype(jnp.float32))
+        if isinstance(soft_labels, distill.SparseLabels):
+            w = (weights if weights is not None
+                 else jnp.ones(soft_labels.values.shape[0]))
+            contrib = (soft_labels.values.astype(jnp.float32)
+                       * w.astype(jnp.float32)[:, None])
+            hist = hist + jnp.zeros(num_classes, jnp.float32).at[
+                soft_labels.indices.reshape(-1)].add(contrib.reshape(-1))
+        else:
+            w = (weights if weights is not None
+                 else jnp.ones(soft_labels.shape[0]))
+            hist = hist + jnp.einsum("p,pc->c", w.astype(jnp.float32),
+                                     soft_labels.astype(jnp.float32))
     return hist / jnp.maximum(jnp.sum(hist), 1.0)
 
 

@@ -1,0 +1,254 @@
+"""Unified IDKD labeling engine — the paper's homogenization round
+(Algorithm 1, lines 5–14) as one backend-agnostic path.
+
+One call, :func:`label_round`, owns the whole round for every consumer:
+
+  (line 5)  soft labels     softmax(f_i(D_P) / T)
+  (line 6)  t_opt           ROC-calibrated detector threshold per node
+  (line 7)  D_ID^i          {p : conf_p > t_opt}
+  (l. 9-13) exchange        labels-only gossip with graph neighbours
+  (line 14) average         per-sample mean over contributing nodes
+
+Three interchangeable backends (``IDKDConfig.label_backend``):
+
+``dense``
+    The jnp reference and numerical oracle. Labels are full ``(n, P, C)``
+    probability tensors; the exchange is a scan over padded neighbour
+    slots (``Topology.neighbor_arrays``) — O(Σ deg · P · C) work and
+    O(n · P · C) memory. (The seed's ``(n, n, P)`` membership einsum was
+    O(n² · P · C); it is gone.)
+
+``fused``
+    Public-set logits are read once: detector confidence *and* the top-k
+    sparse soft-label payload come out of a single fused pass — the
+    ``msp_select`` Pallas kernel on TPU, its jnp oracle (which XLA fuses
+    the same way) elsewhere. Output is sparse, exchanged sparsely.
+
+``sparse``
+    Like ``fused`` but scored/sparsified with plain jnp ops. Labels cross
+    the "wire" as :class:`repro.core.distill.SparseLabels` (top-k values +
+    class indices) and are *never* densified to ``(n, P, C)``: neighbour
+    averaging concatenates the contributors' payloads along the k axis
+    with 1/cnt weights (exact — see DESIGN.md §2), and training consumes
+    them through ``distill.sparse_kd_loss``. Exchange cost is
+    O(Σ deg · P · k) instead of O(Σ deg · P · C).
+
+Simulation (``core.simulator``) and production launch (``launch.train``)
+both call this engine; classifier ``(n, P, C)`` and LM ``(n, P, S, V)``
+logit stacks are handled uniformly (sequence confidence = mean over S of
+the per-token detector score).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import IDKDConfig
+from repro.core import distill, ood
+from repro.core.topology import Topology
+from repro.kernels.msp_select import msp_select, msp_select_ref
+
+BACKENDS = ("dense", "fused", "sparse")
+DEFAULT_TOPK = 8
+
+
+class HomogenizedSet(NamedTuple):
+    """Per-node distilled public subset, dense labels (node-stacked)."""
+    labels: jax.Array        # (n, P[, S], C) averaged soft labels
+    weights: jax.Array       # (n, P) 1.0 where sample is in node's D_ID∪neigh
+    id_masks: jax.Array      # (n, P) the node's own D_ID mask (diagnostics)
+    thresholds: jax.Array    # (n,) calibrated t_opt per node
+
+
+class SparseHomogenizedSet(NamedTuple):
+    """Per-node distilled public subset with top-k sparse labels.
+
+    ``labels.values/indices`` have shape (n, P[, S], k_out) where
+    k_out = (max_degree + 1) · k; duplicate indices are legal (every
+    consumer — ``sparse_kd_loss``, ``densify_labels``, the histogram
+    diagnostics — accumulates them).
+    """
+    labels: distill.SparseLabels
+    weights: jax.Array       # (n, P)
+    id_masks: jax.Array      # (n, P)
+    thresholds: jax.Array    # (n,)
+
+    def densify(self, num_classes: int) -> jax.Array:
+        """Materialize (n, P[, S], C) labels — diagnostics/tests ONLY;
+        production paths keep the payload sparse end to end."""
+        return distill.densify_labels(self.labels, num_classes)
+
+
+HomogenizedResult = Union[HomogenizedSet, SparseHomogenizedSet]
+
+
+def detector_scores(logits, detector: str) -> jax.Array:
+    """Per-sample detector confidence. (n, P, C) -> (n, P); LM logit
+    stacks (n, P, S, V) reduce to sequence scores by the mean over S of
+    the per-token score (matches ``ood.sequence_confidence`` for MSP)."""
+    conf = ood.confidence(logits, detector)
+    if conf.ndim == 3:
+        conf = conf.mean(-1)
+    return conf
+
+
+def calibrate(conf_val, conf_cal) -> jax.Array:
+    """Per-node ROC thresholds (line 6): val = ID class, cal = OoD."""
+    return jax.vmap(ood.calibrate_threshold)(conf_val, conf_cal)
+
+
+# --------------------------------------------------------------- exchange
+def exchange_dense(topology: Topology, id_mask, labels
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Lines 9–14, dense labels: per-sample mean over the contributing
+    nodes (self + neighbours whose D_ID contains the sample).
+
+    Implemented as a scan over padded neighbour slots with a gathered
+    running mean — O(Σ deg · P · C) work, O(n · P · C) memory.
+    """
+    nbr, valid = topology.neighbor_arrays()
+    nbr = jnp.asarray(nbr)
+    valid = jnp.asarray(valid)
+    lf = labels.astype(jnp.float32)
+    m = id_mask.astype(jnp.float32)                        # (n, P)
+    extra = lf.ndim - m.ndim                               # trailing axes
+
+    def body(carry, slot):
+        num, cnt = carry
+        j, ok = slot                                       # (n,), (n,)
+        w = m[j] * ok[:, None]                             # (n, P)
+        num = num + w.reshape(w.shape + (1,) * extra) * lf[j]
+        cnt = cnt + w
+        return (num, cnt), None
+
+    init = (jnp.zeros_like(lf), jnp.zeros_like(m))
+    (num, cnt), _ = jax.lax.scan(body, init, (nbr.T, valid.T))
+    avg = num / jnp.maximum(cnt, 1.0).reshape(cnt.shape + (1,) * extra)
+    return avg, (cnt > 0).astype(jnp.float32)
+
+
+def exchange_sparse(topology: Topology, id_mask, sparse: distill.SparseLabels
+                    ) -> Tuple[distill.SparseLabels, jax.Array]:
+    """Lines 9–14 on top-k sparse payloads, without densifying.
+
+    The mean over contributors ``Σ_j m_j · dense(s_j) / cnt`` distributes
+    over the scatter, so it equals the *concatenation* of the
+    contributors' (values · m_j / cnt, indices) pairs along the k axis.
+    Output k_out = (max_degree + 1) · k with zero-valued padding slots;
+    O(Σ deg · P · k) work and bytes.
+    """
+    nbr, valid = topology.neighbor_arrays()
+    nbr = jnp.asarray(nbr)
+    valid = jnp.asarray(valid)
+    m = id_mask.astype(jnp.float32)
+    w = m[nbr] * valid[:, :, None]                         # (n, D, P)
+    cnt = jnp.sum(w, axis=1)                               # (n, P)
+    share = w / jnp.maximum(cnt, 1.0)[:, None, :]
+    vals = sparse.values[nbr]                              # (n, D, P[, S], k)
+    idx = sparse.indices[nbr]
+    extra = vals.ndim - share.ndim                         # e.g. the S axis
+    vals = vals * share.reshape(share.shape + (1,) * extra)
+    # merge the contributor axis into k: (n, P[, S], D·k)
+    vals = jnp.moveaxis(vals, 1, -2)
+    idx = jnp.moveaxis(idx, 1, -2)
+    vals = vals.reshape(vals.shape[:-2] + (-1,))
+    idx = idx.reshape(idx.shape[:-2] + (-1,))
+    return (distill.SparseLabels(vals.astype(jnp.float32),
+                                 idx.astype(jnp.int32)),
+            (cnt > 0).astype(jnp.float32))
+
+
+# ------------------------------------------------------------ fused pass
+_fused_oracle = jax.jit(
+    msp_select_ref,
+    static_argnames=("temperature", "threshold", "k", "detector"))
+
+
+def _fused_pass(logits, cfg: IDKDConfig, k: int
+                ) -> Tuple[jax.Array, distill.SparseLabels]:
+    """One read of the public logits: detector confidence + top-k payload.
+
+    TPU: the ``msp_select`` Pallas kernel (single HBM pass over the
+    (rows, C) logits). Elsewhere: its jnp oracle under jit — same fused
+    dataflow, so CPU tests exercise identical math.
+    """
+    lead, C = logits.shape[:-1], logits.shape[-1]
+    flat = logits.reshape(-1, C)
+    if jax.default_backend() == "tpu":
+        block = 8
+        pad = (-flat.shape[0]) % block
+        n_rows = flat.shape[0]
+        if pad:
+            flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        conf, vals, idx, _ = msp_select(
+            flat, temperature=cfg.temperature, threshold=0.0, k=k,
+            block_n=block, detector=cfg.detector)
+        conf, vals, idx = conf[:n_rows], vals[:n_rows], idx[:n_rows]
+    else:
+        conf, vals, idx, _ = _fused_oracle(
+            flat, temperature=cfg.temperature, threshold=0.0, k=k,
+            detector=cfg.detector)
+    conf = conf.reshape(lead)
+    if conf.ndim == 3:                                     # (n, P, S) tokens
+        conf = conf.mean(-1)
+    sparse = distill.SparseLabels(vals.reshape(lead + (k,)),
+                                  idx.reshape(lead + (k,)))
+    return conf, sparse
+
+
+# ------------------------------------------------------------ full round
+def label_round(public_logits, val_logits, cal_logits, topology: Topology,
+                cfg: IDKDConfig, *, backend: str = "dense",
+                filter_ood: bool = True) -> HomogenizedResult:
+    """One IDKD homogenization round on node-stacked logits.
+
+    public_logits: (n, P, C) or (n, P, S, V) — each node on the public set
+    val_logits:    (n, V, C) / (n, V, S, Vv) — each node on its private ID set
+    cal_logits:    (n, K, C) / ... — each node on the OoD calibration set,
+                   or None for D_C = D_P (the paper's default; the public
+                   scores are reused instead of re-read — pass None rather
+                   than public_logits under jit, where the identity check
+                   cannot see through tracers)
+    filter_ood:    False = the ``kd_mode="vanilla"`` baseline (no detector:
+                   every public sample is kept, thresholds are 0)
+
+    Returns :class:`HomogenizedSet` (dense backend) or
+    :class:`SparseHomogenizedSet` (fused / sparse backends).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown labeling backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    n = public_logits.shape[0]
+    k = min(cfg.label_topk or DEFAULT_TOPK, public_logits.shape[-1])
+
+    sparse = None
+    if backend == "fused":
+        conf_pub, sparse = _fused_pass(public_logits, cfg, k)
+    else:
+        conf_pub = detector_scores(public_logits, cfg.detector)
+
+    if filter_ood:
+        # D_C = D_P (None or the same array): reuse the public scores
+        # instead of re-reading the (n, P, C) logits a second time
+        conf_cal = (conf_pub
+                    if cal_logits is None or cal_logits is public_logits
+                    else detector_scores(cal_logits, cfg.detector))
+        thresholds = calibrate(detector_scores(val_logits, cfg.detector),
+                               conf_cal)
+        id_mask = conf_pub > thresholds[:, None]
+    else:
+        thresholds = jnp.zeros((n,), jnp.float32)
+        id_mask = jnp.ones(conf_pub.shape, bool)
+
+    if backend == "dense":
+        labels = distill.soft_labels(public_logits, cfg.temperature)
+        avg, weights = exchange_dense(topology, id_mask, labels)
+        return HomogenizedSet(avg, weights, id_mask, thresholds)
+
+    if sparse is None:                                     # backend == sparse
+        probs = distill.soft_labels(public_logits, cfg.temperature)
+        sparse = distill.sparsify_labels(probs, k)
+    merged, weights = exchange_sparse(topology, id_mask, sparse)
+    return SparseHomogenizedSet(merged, weights, id_mask, thresholds)

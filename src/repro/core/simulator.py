@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
-from repro.core import distill, idkd, ood
+from repro.core import distill, idkd, labeling
 from repro.core.algorithms import make_algorithm
 from repro.core.mixing import consensus_distance, make_dense_mixer
 from repro.core.topology import Topology
@@ -113,8 +113,22 @@ class DecentralizedSimulator:
             nll = jnp.where(is_pub, kd, hard_nll)
             return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
 
+        def sparse_kd_node_loss(params, images, values, indices, weights,
+                                is_pub):
+            """kd_node_loss on top-k sparse labels, never densified: the
+            private rows carry their one-hot as a k=1 sparse label, so
+            hard CE is the T=1 sparse soft-CE on the same payload."""
+            logits, _ = model.forward(params, {"images": images})
+            sp = distill.SparseLabels(values, indices)
+            hard_nll = distill.sparse_kd_loss(logits, sp, 1.0)
+            kd = distill.sparse_kd_loss(logits, sp, kd_T)
+            nll = jnp.where(is_pub, kd, hard_nll)
+            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
+
         grad_fn = jax.vmap(jax.grad(node_loss), in_axes=(0, 0, 0, 0))
         kd_grad_fn = jax.vmap(jax.grad(kd_node_loss), in_axes=(0, 0, 0, 0, 0))
+        sparse_kd_grad_fn = jax.vmap(jax.grad(sparse_kd_node_loss),
+                                     in_axes=(0, 0, 0, 0, 0, 0))
 
         @jax.jit
         def train_step(params, opt_state, images, soft_labels, weights, lr):
@@ -125,6 +139,13 @@ class DecentralizedSimulator:
         def kd_train_step(params, opt_state, images, soft_labels, weights,
                           is_pub, lr):
             grads = kd_grad_fn(params, images, soft_labels, weights, is_pub)
+            return algo.step(params, grads, opt_state, lr, mixer)
+
+        @jax.jit
+        def sparse_kd_train_step(params, opt_state, images, values, indices,
+                                 weights, is_pub, lr):
+            grads = sparse_kd_grad_fn(params, images, values, indices,
+                                      weights, is_pub)
             return algo.step(params, grads, opt_state, lr, mixer)
 
         @jax.jit
@@ -145,6 +166,7 @@ class DecentralizedSimulator:
 
         self._train_step = train_step
         self._kd_train_step = kd_train_step
+        self._sparse_kd_train_step = sparse_kd_train_step
         self._forward_logits = forward_logits
         self._consensus_eval = consensus_eval
 
@@ -188,10 +210,8 @@ class DecentralizedSimulator:
         result.pre_hist = partition_stats(self.data.train_y, self.parts,
                                           self.mcfg.num_classes)
 
-        hom: Optional[idkd.HomogenizedSet] = None
+        hom: Optional[labeling.HomogenizedResult] = None
         hom_sampler: Optional[HomogenizedSampler] = None
-        pub_labels = None
-        pub_weights = None
         idkd_cfg = tcfg.idkd or IDKDConfig()
         eye = np.eye(self.mcfg.num_classes, dtype=np.float32)
 
@@ -200,17 +220,25 @@ class DecentralizedSimulator:
             if (self.kd_mode and self.public_x is not None
                     and step == idkd_cfg.start_step):
                 hom = self._homogenize(params, idkd_cfg)
-                pub_labels = np.asarray(hom.labels)          # (n, P, C)
-                pub_weights = np.asarray(hom.weights)        # (n, P)
+                sparse_round = isinstance(hom, labeling.SparseHomogenizedSet)
+                payload = ((np.asarray(hom.labels.values),
+                            np.asarray(hom.labels.indices))
+                           if sparse_round else np.asarray(hom.labels))
                 hom_sampler = HomogenizedSampler(
-                    self.parts, pub_weights, tcfg.batch_size, tcfg.seed)
+                    self.parts, np.asarray(hom.weights), tcfg.batch_size,
+                    tcfg.seed, public_labels=payload)
                 result.thresholds = np.asarray(hom.thresholds)
                 result.id_fraction = float(np.mean(np.asarray(hom.id_masks)))
                 result.post_hist = self._post_histograms(hom)
+                # wire cost: sparse backends ship each node's own top-k
+                # payload; the dense backend always ships full (P, C) rows
+                k_wire = (min(idkd_cfg.label_topk or labeling.DEFAULT_TOPK,
+                              self.mcfg.num_classes)
+                          if sparse_round else 0)
                 result.label_bytes_total = float(
                     n * distill.label_bytes(
                         int(np.asarray(hom.id_masks).sum() / n),
-                        self.mcfg.num_classes, idkd_cfg.label_topk))
+                        self.mcfg.num_classes, k_wire))
 
             if hom_sampler is None:
                 idx = sampler.sample()                        # (n, B)
@@ -225,17 +253,32 @@ class DecentralizedSimulator:
                 img_pub = self.public_x[pub]
                 images = jnp.asarray(np.where(is_pub[..., None, None, None],
                                               img_pub, img_priv))
-                lab_priv = eye[self.data.train_y[priv]]
-                lab_pub = np.take_along_axis(
-                    pub_labels, pub[..., None], axis=1)
-                labels = jnp.asarray(np.where(is_pub[..., None],
-                                              lab_pub, lab_priv))
-                w_pub = np.take_along_axis(pub_weights, pub, axis=1)
+                w_pub = hom_sampler.gather_weights(pub)
                 weights = jnp.asarray(np.where(is_pub, w_pub, 1.0)
                                       ).astype(jnp.float32)
-                params, opt_state = self._kd_train_step(
-                    params, opt_state, images, labels, weights,
-                    jnp.asarray(is_pub), lr)
+                if hom_sampler.sparse:
+                    # sparse payload end-to-end: private one-hots ride the
+                    # same (values, indices) format at k=1
+                    vals, cls = hom_sampler.gather_public(pub)  # (n, B, k)
+                    pv = np.zeros_like(vals)
+                    pv[..., 0] = 1.0
+                    pi = np.zeros_like(cls)
+                    pi[..., 0] = self.data.train_y[priv]
+                    values = jnp.asarray(np.where(is_pub[..., None],
+                                                  vals, pv))
+                    indices = jnp.asarray(np.where(is_pub[..., None],
+                                                   cls, pi))
+                    params, opt_state = self._sparse_kd_train_step(
+                        params, opt_state, images, values, indices, weights,
+                        jnp.asarray(is_pub), lr)
+                else:
+                    lab_priv = eye[self.data.train_y[priv]]
+                    lab_pub = hom_sampler.gather_public(pub)
+                    labels = jnp.asarray(np.where(is_pub[..., None],
+                                                  lab_pub, lab_priv))
+                    params, opt_state = self._kd_train_step(
+                        params, opt_state, images, labels, weights,
+                        jnp.asarray(is_pub), lr)
 
             if step % self.eval_every == 0 or step == tcfg.steps - 1:
                 acc, nll = self._eval(params)
@@ -254,28 +297,29 @@ class DecentralizedSimulator:
         return result
 
     # ------------------------------------------------------------ IDKD round
-    def _homogenize(self, params, idkd_cfg: IDKDConfig) -> idkd.HomogenizedSet:
+    def _homogenize(self, params, idkd_cfg: IDKDConfig
+                    ) -> labeling.HomogenizedResult:
         pub_logits = jnp.asarray(self._node_logits(params, self.public_x))
         val_logits = jnp.asarray(self._per_node_val_logits(params))
-        # calibration set D_C = the public set (paper's default)
-        cal_logits = pub_logits
-        if self.kd_mode == "vanilla":
-            # vanilla KD: no OoD filter — every public sample is kept
-            labels = distill.soft_labels(pub_logits, idkd_cfg.temperature)
-            masks = jnp.ones(pub_logits.shape[:2], bool)
-            avg, w = idkd._neighbor_union(self.topology, masks, labels)
-            t = jnp.zeros((self.tcfg.num_nodes,))
-            return idkd.HomogenizedSet(avg, w, masks, t)
-        return idkd.homogenization_round(pub_logits, val_logits, cal_logits,
-                                         self.topology, idkd_cfg)
+        # cal_logits=None: D_C = the public set (paper's default);
+        # kd_mode="vanilla" is the no-OoD-filter baseline (every public
+        # sample kept) — the engine's filter_ood=False branch
+        return labeling.label_round(
+            pub_logits, val_logits, None, self.topology, idkd_cfg,
+            backend=idkd_cfg.label_backend,
+            filter_ood=self.kd_mode != "vanilla")
 
-    def _post_histograms(self, hom: idkd.HomogenizedSet) -> np.ndarray:
+    def _post_histograms(self, hom: labeling.HomogenizedResult) -> np.ndarray:
         C = self.mcfg.num_classes
+        sparse_round = isinstance(hom, labeling.SparseHomogenizedSet)
         hists = []
         for i in range(self.tcfg.num_nodes):
+            soft = (distill.SparseLabels(hom.labels.values[i],
+                                         hom.labels.indices[i])
+                    if sparse_round else hom.labels[i])
             h = idkd.class_histogram(
                 jnp.asarray(self.data.train_y[self.parts[i]]),
-                hom.labels[i], hom.weights[i], C)
+                soft, hom.weights[i], C)
             hists.append(np.asarray(h))
         return np.stack(hists)
 

@@ -89,6 +89,7 @@ class Topology:
     def __init__(self, n: int, edges: List[Tuple[int, int]], name: str = ""):
         self.n = n
         self.name = name
+        self._cache: Dict = {}
         self.adj: Dict[int, List[int]] = {i: [] for i in range(n)}
         for a, b in edges:
             if b not in self.adj[a]:
@@ -125,6 +126,34 @@ class Topology:
 
     def degree(self, i: int) -> int:
         return len(self.adj[i])
+
+    def max_degree(self) -> int:
+        return max(self.degree(i) for i in range(self.n))
+
+    def neighbor_arrays(self, include_self: bool = True
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded neighbour index lists for gather-based label exchange.
+
+        Returns ``(nbr (n, D) int32, valid (n, D) float32)`` with
+        D = max_degree (+1 when ``include_self``); slot d of row i is the
+        d-th contributor to node i (self first). Padding slots point at
+        node 0 with valid = 0 so gathers stay in bounds. Replaces dense
+        (n, n) membership matrices: exchanges built on these are
+        O(Σ deg) in the graph instead of O(n²).
+        """
+        key = ("nbr_arrays", include_self)
+        cached = self._cache.get(key)
+        if cached is not None:
+            return cached
+        D = self.max_degree() + (1 if include_self else 0)
+        nbr = np.zeros((self.n, max(D, 1)), np.int32)
+        valid = np.zeros((self.n, max(D, 1)), np.float32)
+        for i in range(self.n):
+            row = ([i] if include_self else []) + self.adj[i]
+            nbr[i, :len(row)] = row
+            valid[i, :len(row)] = 1.0
+        self._cache[key] = (nbr, valid)
+        return nbr, valid
 
     # -- mixing matrix ---------------------------------------------------------
     def mixing_matrix(self) -> np.ndarray:

@@ -32,16 +32,53 @@ class NodeSampler:
 class HomogenizedSampler:
     """Samples the union set: with prob proportional to sizes, a batch
     element comes from the private set (hard label) or the distilled
-    public subset (soft label + weight)."""
+    public subset (soft label + weight).
+
+    Optionally owns the post-round label payload (``public_labels``):
+    either a dense ``(n, P, C)`` array or a sparse top-k
+    ``(values (n, P, k), indices (n, P, k))`` pair — the sparse payload
+    is gathered per batch and handed to the KD step without ever being
+    densified to ``(n, P, C)``.
+    """
 
     def __init__(self, parts: List[np.ndarray], public_weights: np.ndarray,
-                 batch_size: int, seed: int):
+                 batch_size: int, seed: int, public_labels=None):
         # public_weights: (n_nodes, P) — 1 where sample in node's D_ID union
         self.parts = parts
+        self.public_weights = np.asarray(public_weights)
         self.public_idx = [np.flatnonzero(w > 0) for w in public_weights]
         self.batch_size = batch_size
         self.rngs = [np.random.default_rng(seed + 31 * i)
                      for i in range(len(parts))]
+        if public_labels is not None:
+            if isinstance(public_labels, (tuple, list)):
+                # sparse payload: a (values, indices) named/plain tuple
+                public_labels = (np.asarray(public_labels[0]),
+                                 np.asarray(public_labels[1]))
+            else:
+                # dense (n, P, C) array of any array flavour
+                public_labels = np.asarray(public_labels)
+        self.public_labels = public_labels
+
+    @property
+    def sparse(self) -> bool:
+        return isinstance(self.public_labels, tuple)
+
+    def gather_public(self, pub_idx: np.ndarray):
+        """Per-batch public label payload for (n, B) public indices:
+        dense (n, B, C), or (values (n, B, k), indices (n, B, k))."""
+        if self.public_labels is None:
+            raise ValueError("sampler was built without label payloads")
+        nidx = np.arange(len(self.parts))[:, None]
+        if self.sparse:
+            vals, idx = self.public_labels
+            return vals[nidx, pub_idx], idx[nidx, pub_idx]
+        return self.public_labels[nidx, pub_idx]
+
+    def gather_weights(self, pub_idx: np.ndarray) -> np.ndarray:
+        """Per-batch public sample weights: (n, B)."""
+        nidx = np.arange(len(self.parts))[:, None]
+        return self.public_weights[nidx, pub_idx]
 
     def sample(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Returns (private_idx (n, B), public_idx (n, B), is_public (n, B)).

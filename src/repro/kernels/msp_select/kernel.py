@@ -24,12 +24,17 @@ NEG_INF = -1e30
 
 
 def _msp_kernel(logits_ref, conf_ref, vals_ref, idx_ref, mask_ref, *,
-                temperature: float, threshold: float, k: int):
+                temperature: float, threshold: float, k: int,
+                detector: str):
     lf = logits_ref[...].astype(jnp.float32)               # (bn, C)
-    # MSP confidence at T=1 (stable softmax)
+    # detector confidence at T=1 from one stable softmax reduction:
+    # MSP = exp(0)/Σexp(lf−m1); energy = logsumexp = m1 + log Σexp(lf−m1)
     m1 = jnp.max(lf, axis=-1, keepdims=True)
     z1 = jnp.sum(jnp.exp(lf - m1), axis=-1)
-    conf = 1.0 / jnp.maximum(z1, 1e-30)                    # exp(0)/Σexp
+    if detector == "energy":
+        conf = m1[:, 0] + jnp.log(jnp.maximum(z1, 1e-30))
+    else:
+        conf = 1.0 / jnp.maximum(z1, 1e-30)
     conf_ref[...] = conf
     mask_ref[...] = conf > threshold
     # temperature softmax for the soft labels
@@ -59,13 +64,15 @@ def _msp_kernel(logits_ref, conf_ref, vals_ref, idx_ref, mask_ref, *,
 
 
 def msp_select_pallas(logits, *, temperature: float, threshold: float,
-                      k: int = 8, block_n: int = 8, interpret: bool = True):
+                      k: int = 8, block_n: int = 8, interpret: bool = True,
+                      detector: str = "msp"):
     """logits: (N, C) -> (conf (N,), vals (N,k), idx (N,k), mask (N,))."""
     N, C = logits.shape
     block_n = min(block_n, N)
     assert N % block_n == 0, "pad rows to a block multiple"
+    assert detector in ("msp", "energy"), detector
     kernel = functools.partial(_msp_kernel, temperature=temperature,
-                               threshold=threshold, k=k)
+                               threshold=threshold, k=k, detector=detector)
     return pl.pallas_call(
         kernel,
         grid=(N // block_n,),

@@ -5,18 +5,23 @@ import jax
 import jax.numpy as jnp
 
 
-def msp_select_ref(logits, *, temperature: float, threshold: float, k: int):
+def msp_select_ref(logits, *, temperature: float, threshold: float, k: int,
+                   detector: str = "msp"):
     """Fused IDKD labeling pass (Algorithm 1 lines 5–7) on (N, C) logits:
 
     Returns (conf (N,), topk_vals (N,k), topk_idx (N,k), id_mask (N,)):
-      * conf      — max softmax probability (MSP, at T=1)
+      * conf      — detector confidence at T=1: max softmax probability
+                    (MSP, the default) or the energy score logsumexp(z)
       * topk      — top-k of the *temperature* softmax, renormalized
                     (the sparse soft label payload)
       * id_mask   — conf > threshold (the D_ID membership test)
     """
     lf = logits.astype(jnp.float32)
-    probs1 = jax.nn.softmax(lf, axis=-1)
-    conf = jnp.max(probs1, axis=-1)
+    if detector == "energy":
+        conf = jax.nn.logsumexp(lf, axis=-1)
+    else:
+        probs1 = jax.nn.softmax(lf, axis=-1)
+        conf = jnp.max(probs1, axis=-1)
     probsT = jax.nn.softmax(lf / temperature, axis=-1)
     vals, idx = jax.lax.top_k(probsT, k)
     vals = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
-from repro.core import distill, ood
+from repro.core import distill, labeling
 from repro.core.topology import Topology
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_lm_data
@@ -33,12 +33,16 @@ from repro.models import build_model
 
 
 def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
-                     idkd_cfg: IDKDConfig, topology: Topology):
-    """LLM IDKD round: per-sequence MSP confidences + top-k soft labels on
-    the public corpus, ROC-calibrated threshold, ring label exchange.
+                     idkd_cfg: IDKDConfig, topology: Topology,
+                     backend: str = "sparse"):
+    """LLM IDKD round via the unified labeling engine: per-sequence
+    detector confidences + top-k soft labels on the public corpus,
+    ROC-calibrated threshold, sparse neighbour label exchange.
 
-    Returns (sparse_labels per node, weights (n, P)) where sparse labels
-    are neighbour-averaged *dense-then-resparsified* top-k payloads.
+    Returns (sparse_labels, weights (n, P), id_mask, thresholds). The
+    labels stay sparse end to end — neighbour averaging concatenates
+    payloads along the k axis (k_out = (max_deg+1)·k) instead of the
+    seed's densify→average→resparsify detour through (n, P, S, V).
     """
     n = params_stacked and jax.tree.leaves(params_stacked)[0].shape[0]
 
@@ -52,32 +56,10 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
     logits_pub = node_logits(params_stacked, pub)          # (n, P, S, V)
     priv = jnp.asarray(private_tokens)                      # (n, Vp, S)
     logits_priv = node_logits(params_stacked, priv)
-    conf_pub = ood.sequence_confidence(logits_pub)          # (n, P)
-    conf_priv = ood.sequence_confidence(logits_priv)        # (n, Vp)
-    thresholds = jax.vmap(ood.calibrate_threshold)(conf_priv, conf_pub)
-    id_mask = conf_pub > thresholds[:, None]                # (n, P)
-
-    k = idkd_cfg.label_topk or 8
-    probs = distill.soft_labels(logits_pub, idkd_cfg.temperature)
-    sparse = distill.sparsify_labels(probs, k)              # (n,P,S,k)
-
-    # ring label exchange: neighbour union with per-sample averaging done
-    # in dense space on the union (vocab can be large: average only kept
-    # samples' sparse payloads via densify->avg->resparsify)
-    member = np.eye(n, dtype=np.float32)
-    for i in range(topology.n):
-        for j in topology.neighbors(i):
-            member[i, j] = 1.0
-    member = jnp.asarray(member)
-    m = id_mask.astype(jnp.float32)
-    contrib = member[:, :, None] * m[None]                  # (dst, src, P)
-    dense = distill.densify_labels(sparse, probs.shape[-1])  # (n,P,S,V)
-    num = jnp.einsum("dsp,spxv->dpxv", contrib, dense)
-    cnt = jnp.sum(contrib, axis=1)                          # (dst, P)
-    avg = num / jnp.maximum(cnt, 1.0)[..., None, None]
-    weights = (cnt > 0).astype(jnp.float32)
-    avg_sparse = distill.sparsify_labels(avg, k)
-    return avg_sparse, weights, id_mask, thresholds
+    # val = the node's private corpus (ID); cal=None = the public corpus
+    out = labeling.label_round(logits_pub, logits_priv, None,
+                               topology, idkd_cfg, backend=backend)
+    return out.labels, out.weights, out.id_masks, out.thresholds
 
 
 def make_kd_train_step(model, tcfg: TrainConfig, num_nodes: int,
@@ -139,8 +121,17 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
             m_priv = max(1, min(16, min(len(p) for p in parts)))
             priv = np.stack([tokens[parts[i][:m_priv], :seq_len]
                              for i in range(n)])
+            backend = idkd_cfg.label_backend
+            if backend not in ("fused", "sparse"):
+                # the LM KD step consumes sparse payloads; the dense
+                # oracle backend is not an option at vocab scale
+                if verbose:
+                    print(f"[idkd] label_backend={backend!r} unsupported "
+                          "for LM stacks; using 'sparse'")
+                backend = "sparse"
             sparse, w, id_mask, thr = idkd_label_round(
-                model, params, public_tokens, priv, idkd_cfg, topo)
+                model, params, public_tokens, priv, idkd_cfg, topo,
+                backend=backend)
             pub_payload = {"vals": np.asarray(sparse.values),
                            "idx": np.asarray(sparse.indices),
                            "w": np.asarray(w)}

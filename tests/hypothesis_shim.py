@@ -1,0 +1,71 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+Property tests decorated with the real ``@given`` sweep randomized examples;
+under the shim they still *collect* normally and individually skip at run
+time, so a missing dev dependency costs a few skipped sweeps instead of
+erroring entire test modules out of collection. ``pip install -r
+requirements-dev.txt`` restores the real property sweeps (CI does).
+
+Usage in a test module::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypothesis_shim import given, settings, st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+
+import pytest
+
+
+class _Strategy:
+    """Opaque placeholder for a hypothesis strategy object."""
+
+    def __init__(self, name: str):
+        self._name = name
+
+    def __repr__(self):
+        return self._name
+
+    def __call__(self, *args, **kwargs):
+        return self
+
+    def __getattr__(self, name):
+        return _Strategy(f"{self._name}.{name}")
+
+
+class _StrategiesModule:
+    def __getattr__(self, name):
+        return _Strategy(f"st.{name}")
+
+
+st = _StrategiesModule()
+strategies = st
+
+
+def settings(*args, **kwargs):
+    """No-op replacement for ``hypothesis.settings`` used as a decorator."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*args, **kwargs):
+    """Replacement for ``hypothesis.given``: the test collects but skips."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            pytest.skip("hypothesis not installed (see requirements-dev.txt)")
+
+        # zero-arg signature so pytest does not treat the strategy params
+        # (alpha, n_nodes, ...) as fixtures
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -1,6 +1,10 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep: shim keeps collection
+    from hypothesis_shim import given, settings, st
+
 
 from repro.data.dirichlet import dirichlet_partition, partition_stats
 from repro.data.pipeline import HomogenizedSampler, NodeSampler

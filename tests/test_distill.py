@@ -2,7 +2,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep: shim keeps collection
+    from hypothesis_shim import given, settings, st
+
 
 from repro.core.distill import (SparseLabels, average_labels, densify_labels,
                                 kd_loss, label_bytes, soft_labels,

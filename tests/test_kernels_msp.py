@@ -2,7 +2,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep: shim keeps collection
+    from hypothesis_shim import given, settings, st
+
 
 from repro.kernels.msp_select import msp_select, msp_select_ref
 
@@ -23,6 +27,22 @@ def test_msp_select_matches_ref(N, C, k, T):
     logits = jnp.asarray(np.random.default_rng(N + C).normal(size=(N, C)) * 4,
                          jnp.float32)
     _check(logits, T, 0.4, k)
+
+
+@pytest.mark.parametrize("det", ["msp", "energy"])
+def test_msp_select_detector_matches_ref(det):
+    """Both OoD detectors come out of the kernel's one fused pass."""
+    logits = jnp.asarray(np.random.default_rng(7).normal(size=(16, 96)) * 4,
+                         jnp.float32)
+    thr = 0.4 if det == "msp" else 3.0
+    conf, vals, idx, mask = msp_select(logits, temperature=10.0,
+                                       threshold=thr, k=4, block_n=4,
+                                       interpret=True, detector=det)
+    cr, vr, ir, mr = msp_select_ref(logits, temperature=10.0, threshold=thr,
+                                    k=4, detector=det)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(cr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vr), atol=1e-5)
+    assert (np.asarray(mask) == np.asarray(mr)).all()
 
 
 def test_msp_select_bf16_logits():

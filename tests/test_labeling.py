@@ -1,0 +1,184 @@
+"""Unified labeling engine: backend equivalence + engine-specific behavior.
+
+The dense backend is the numerical oracle; the fused (msp_select-kernel
+dataflow) and sparse (top-k wire format) backends must agree with it —
+exactly on the D_ID masks, allclose on the averaged labels when k = C
+(lossless sparsification) — across detectors, topologies, and the
+``kd_mode="vanilla"`` no-filter branch.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.core import distill, labeling
+from repro.core.labeling import (SparseHomogenizedSet, exchange_dense,
+                                 exchange_sparse, label_round)
+from repro.core.topology import Topology
+
+N, P, C = 4, 48, 10
+
+
+@pytest.fixture(scope="module")
+def logits():
+    rng = np.random.default_rng(0)
+    pub = jnp.asarray(rng.normal(size=(N, P, C)) * 3, jnp.float32)
+    val = jnp.asarray(rng.normal(size=(N, 16, C)) * 5, jnp.float32)
+    cal = jnp.asarray(rng.normal(size=(N, 16, C)) * 0.5, jnp.float32)
+    return pub, val, cal
+
+
+@pytest.mark.parametrize("topo_kind", ["ring", "full"])
+@pytest.mark.parametrize("detector", ["msp", "energy"])
+@pytest.mark.parametrize("backend", ["fused", "sparse"])
+def test_backends_match_dense_oracle(logits, topo_kind, detector, backend):
+    pub, val, cal = logits
+    topo = Topology.make(topo_kind, N)
+    cfg = IDKDConfig(detector=detector, label_topk=C)   # k=C: lossless
+    ref = label_round(pub, val, cal, topo, cfg, backend="dense")
+    out = label_round(pub, val, cal, topo, cfg, backend=backend)
+    assert isinstance(out, SparseHomogenizedSet)
+    np.testing.assert_array_equal(np.asarray(out.id_masks),
+                                  np.asarray(ref.id_masks))
+    np.testing.assert_array_equal(np.asarray(out.weights),
+                                  np.asarray(ref.weights))
+    np.testing.assert_allclose(np.asarray(out.thresholds),
+                               np.asarray(ref.thresholds), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out.densify(C)),
+                               np.asarray(ref.labels), atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["dense", "fused", "sparse"])
+def test_vanilla_branch_keeps_everything(logits, backend):
+    """kd_mode="vanilla": no OoD filter — all samples kept, t = 0."""
+    pub, val, cal = logits
+    topo = Topology.make("ring", N)
+    cfg = IDKDConfig(label_topk=C)
+    out = label_round(pub, val, cal, topo, cfg, backend=backend,
+                      filter_ood=False)
+    assert np.asarray(out.id_masks).all()
+    assert (np.asarray(out.weights) == 1.0).all()
+    assert (np.asarray(out.thresholds) == 0.0).all()
+
+
+def test_sparse_backend_payload_stays_topk(logits):
+    """With k < C the sparse payload is (max_deg+1)·k wide — never a
+    (n, P, C) densification."""
+    pub, val, cal = logits
+    topo = Topology.make("ring", N)
+    out = label_round(pub, val, cal, topo, IDKDConfig(label_topk=4),
+                      backend="sparse")
+    k_out = (topo.max_degree() + 1) * 4
+    assert out.labels.values.shape == (N, P, k_out)
+    assert out.labels.indices.shape == (N, P, k_out)
+    assert k_out < C * N
+    # kept samples' merged payloads are convex combinations: sum to 1
+    sums = np.asarray(out.labels.values).sum(-1)
+    w = np.asarray(out.weights)
+    np.testing.assert_allclose(sums[w > 0], 1.0, atol=1e-4)
+    assert np.allclose(sums[w == 0], 0.0, atol=1e-6)
+
+
+def test_exchange_dense_matches_bruteforce():
+    """Gather/scan exchange == explicit per-node neighbour averaging."""
+    rng = np.random.default_rng(3)
+    topo = Topology.make("social", 15)
+    mask = jnp.asarray(rng.random((15, 20)) > 0.5)
+    labels = jnp.asarray(rng.random((15, 20, 6)), jnp.float32)
+    avg, w = exchange_dense(topo, mask, labels)
+    m = np.asarray(mask, np.float32)
+    lf = np.asarray(labels)
+    for i in range(15):
+        contributors = [i] + topo.neighbors(i)
+        num = sum(m[j][:, None] * lf[j] for j in contributors)
+        cnt = sum(m[j] for j in contributors)
+        expect = num / np.maximum(cnt, 1.0)[:, None]
+        np.testing.assert_allclose(np.asarray(avg[i]), expect, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(w[i]), (cnt > 0))
+
+
+def test_exchange_sparse_matches_dense_exchange():
+    """Sparse concat-exchange densifies to exactly the dense exchange of
+    the densified inputs (duplicate indices accumulate)."""
+    rng = np.random.default_rng(4)
+    topo = Topology.make("ring", 6)
+    k = 3
+    probs = jnp.asarray(rng.random((6, 10, 8)), jnp.float32)
+    probs = probs / probs.sum(-1, keepdims=True)
+    sp = distill.sparsify_labels(probs, k)
+    mask = jnp.asarray(rng.random((6, 10)) > 0.3)
+    merged, w_s = exchange_sparse(topo, mask, sp)
+    dense_in = distill.densify_labels(sp, 8)
+    avg_d, w_d = exchange_dense(topo, mask, dense_in)
+    np.testing.assert_array_equal(np.asarray(w_s), np.asarray(w_d))
+    np.testing.assert_allclose(np.asarray(distill.densify_labels(merged, 8)),
+                               np.asarray(avg_d), atol=1e-5)
+
+
+def test_lm_rank4_logits_supported():
+    """(n, P, S, V) stacks: sequence confidence + per-token sparse labels."""
+    rng = np.random.default_rng(5)
+    topo = Topology.make("ring", N)
+    S, V = 6, 16
+    pub = jnp.asarray(rng.normal(size=(N, 8, S, V)) * 2, jnp.float32)
+    prv = jnp.asarray(rng.normal(size=(N, 4, S, V)) * 3, jnp.float32)
+    cfg = IDKDConfig(label_topk=V)
+    ref = label_round(pub, prv, pub, topo, cfg, backend="dense")
+    out = label_round(pub, prv, pub, topo, cfg, backend="sparse")
+    assert out.labels.values.shape[:3] == (N, 8, S)
+    np.testing.assert_array_equal(np.asarray(out.id_masks),
+                                  np.asarray(ref.id_masks))
+    np.testing.assert_allclose(np.asarray(out.densify(V)),
+                               np.asarray(ref.labels), atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["dense", "fused", "sparse"])
+def test_cal_none_means_public_set(logits, backend):
+    """cal_logits=None == passing the public logits (D_C = D_P), and the
+    reuse survives jit (no object-identity dependence)."""
+    pub, val, _ = logits
+    topo = Topology.make("ring", N)
+    cfg = IDKDConfig(label_topk=C)
+    explicit = label_round(pub, val, pub, topo, cfg, backend=backend)
+    reused = label_round(pub, val, None, topo, cfg, backend=backend)
+    jitted = jax.jit(lambda p, v: label_round(p, v, None, topo, cfg,
+                                              backend=backend))(pub, val)
+    for out in (reused, jitted):
+        np.testing.assert_allclose(np.asarray(out.thresholds),
+                                   np.asarray(explicit.thresholds),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(out.id_masks),
+                                      np.asarray(explicit.id_masks))
+
+
+def test_unknown_backend_raises(logits):
+    pub, val, cal = logits
+    with pytest.raises(ValueError, match="backend"):
+        label_round(pub, val, cal, Topology.make("ring", N), IDKDConfig(),
+                    backend="nope")
+
+
+def test_simulator_runs_sparse_backend():
+    """End-to-end: the simulator trains through the sparse KD step with
+    top-k payloads (labels never densified to (n, P, C))."""
+    from repro.configs.resnet20_cifar import SMALL_CONFIG
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.data.synthetic import (make_classification_data,
+                                      make_public_data)
+    data = make_classification_data(image_size=8, n_train=256, n_val=64,
+                                    n_test=128, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=96, kind="aligned", seed=1)
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=4, alpha=0.05,
+                       steps=8, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=4, temperature=10.0,
+                                       label_topk=4, label_backend="sparse"))
+    sim = DecentralizedSimulator(SMALL_CONFIG.replace(image_size=8), tcfg,
+                                 data, pub, kd_mode="idkd", eval_every=7)
+    r = sim.run()
+    assert 0.0 < r.id_fraction <= 1.0
+    assert np.isfinite(r.loss_history).all()
+    assert r.post_hist is not None and np.isfinite(r.post_hist).all()
+    # top-k wire accounting: far below the dense label payload
+    dense_bytes = distill.label_bytes(96, 10)
+    assert r.label_bytes_total < 4 * dense_bytes

@@ -55,7 +55,16 @@ def test_reduced_forward_shapes_and_finite(arch):
     assert bool(jnp.isfinite(loss))
 
 
-@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+# default gossip-step coverage: one arch per family (dense / SSM / VLM);
+# the rest are the slow grid (pytest -m slow). Every arch still gets its
+# forward/loss smoke test by default.
+_FAST_STEP_ARCHS = {"qwen3-1.7b", "mamba2-780m", "paligemma-3b"}
+
+
+@pytest.mark.parametrize("arch", [
+    a if a in _FAST_STEP_ARCHS else pytest.param(a,
+                                                 marks=pytest.mark.slow)
+    for a in ASSIGNED_ARCHS])
 def test_reduced_decentralized_train_step(arch):
     """One QG-DSGDm-N gossip step over 4 nodes: params move, stay finite."""
     cfg = get_config(arch).reduced()

@@ -1,7 +1,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep: shim keeps collection
+    from hypothesis_shim import given, settings, st
+
 
 from repro.core.ood import (auroc, calibrate_threshold, msp_confidence,
                             roc_curve, select_id_subset, sequence_confidence)

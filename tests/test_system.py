@@ -4,6 +4,11 @@ These are the integration tests of the paper's Algorithm 1: a real
 decentralized run over the simulator with non-IID data, the IDKD round
 firing mid-training, and its observable effects (ID filtering, histogram
 flattening, accuracy).
+
+Each scenario runs at reduced-step "fast" settings by default; the
+original full-length settings are the ``full`` parametrizations, marked
+``slow`` (deselected by pytest.ini's ``-m "not slow"`` default, run via
+``pytest -m slow``).
 """
 import numpy as np
 import pytest
@@ -15,6 +20,9 @@ from repro.core.simulator import DecentralizedSimulator
 from repro.data.synthetic import make_classification_data, make_public_data
 import jax.numpy as jnp
 
+MODES = [pytest.param("fast", id="fast"),
+         pytest.param("full", id="full", marks=pytest.mark.slow)]
+
 
 @pytest.fixture(scope="module")
 def tiny_data():
@@ -24,10 +32,15 @@ def tiny_data():
     return data, pub
 
 
-def _cfg(**kw):
-    base = dict(algorithm="qg-dsgdm-n", num_nodes=4, alpha=0.05, steps=30,
-                batch_size=16, lr=0.3, seed=4,
-                idkd=IDKDConfig(start_step=20, temperature=10.0))
+def _cfg(mode="full", **kw):
+    if mode == "fast":
+        base = dict(algorithm="qg-dsgdm-n", num_nodes=4, alpha=0.05,
+                    steps=14, batch_size=16, lr=0.3, seed=4,
+                    idkd=IDKDConfig(start_step=8, temperature=10.0))
+    else:
+        base = dict(algorithm="qg-dsgdm-n", num_nodes=4, alpha=0.05,
+                    steps=30, batch_size=16, lr=0.3, seed=4,
+                    idkd=IDKDConfig(start_step=20, temperature=10.0))
     base.update(kw)
     return TrainConfig(**base)
 
@@ -37,62 +50,94 @@ def mcfg():
     return SMALL_CONFIG.replace(image_size=8)
 
 
-def test_training_reduces_loss(tiny_data, mcfg):
+@pytest.fixture(scope="module")
+def idkd_fast_run(tiny_data, mcfg):
+    """One shared fast IDKD run: the filtering / histogram / comm-cost
+    scenarios assert different observables of the same trajectory, so the
+    fast variants reuse one simulator (compile once) instead of three."""
     data, pub = tiny_data
-    sim = DecentralizedSimulator(mcfg, _cfg(steps=25), data, None,
-                                 kd_mode=None, eval_every=24)
+    tcfg = _cfg("fast")
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=tcfg.steps - 1)
+    return tcfg, sim.run()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_training_reduces_loss(tiny_data, mcfg, mode):
+    data, pub = tiny_data
+    steps = 14 if mode == "fast" else 25
+    sim = DecentralizedSimulator(mcfg, _cfg(mode, steps=steps), data, None,
+                                 kd_mode=None, eval_every=steps - 1)
     r = sim.run()
     assert len(r.acc_history) >= 2
     assert r.acc_history[-1] > 0.15          # better than 10-class chance
     assert np.isfinite(r.loss_history).all()
 
 
-def test_idkd_round_fires_and_filters(tiny_data, mcfg):
-    data, pub = tiny_data
-    sim = DecentralizedSimulator(mcfg, _cfg(), data, pub, kd_mode="idkd",
-                                 eval_every=29)
-    r = sim.run()
+@pytest.mark.parametrize("mode", MODES)
+def test_idkd_round_fires_and_filters(tiny_data, mcfg, idkd_fast_run, mode):
+    if mode == "fast":
+        _, r = idkd_fast_run
+    else:
+        data, pub = tiny_data
+        tcfg = _cfg(mode)
+        sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                     eval_every=tcfg.steps - 1)
+        r = sim.run()
     assert 0.0 < r.id_fraction < 1.0, "MSP filter kept everything/nothing"
     assert r.thresholds is not None and (r.thresholds > 0).all()
     assert r.post_hist is not None
 
 
-def test_idkd_homogenizes_class_distribution(tiny_data, mcfg):
+@pytest.mark.parametrize("mode", MODES)
+def test_idkd_homogenizes_class_distribution(tiny_data, mcfg, idkd_fast_run,
+                                             mode):
     """Paper Fig. 3a: post-IDKD per-node class histograms are flatter."""
-    data, pub = tiny_data
-    sim = DecentralizedSimulator(mcfg, _cfg(steps=40,
-                                            idkd=IDKDConfig(start_step=30)),
-                                 data, pub, kd_mode="idkd", eval_every=39)
-    r = sim.run()
+    if mode == "fast":
+        _, r = idkd_fast_run
+    else:
+        data, pub = tiny_data
+        tcfg = _cfg(mode, steps=40, idkd=IDKDConfig(start_step=30))
+        sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                     eval_every=tcfg.steps - 1)
+        r = sim.run()
     pre = float(skew_metric(jnp.asarray(r.pre_hist)))
     post = float(skew_metric(jnp.asarray(r.post_hist)))
     assert post < pre, f"IDKD did not reduce skew ({pre:.3f} -> {post:.3f})"
 
 
-def test_vanilla_kd_keeps_whole_public_set(tiny_data, mcfg):
+@pytest.mark.parametrize("mode", MODES)
+def test_vanilla_kd_keeps_whole_public_set(tiny_data, mcfg, mode):
     data, pub = tiny_data
-    sim = DecentralizedSimulator(mcfg, _cfg(), data, pub, kd_mode="vanilla",
-                                 eval_every=29)
+    tcfg = _cfg(mode)
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="vanilla",
+                                 eval_every=tcfg.steps - 1)
     r = sim.run()
     assert r.id_fraction == pytest.approx(1.0)
 
 
-def test_centralized_reference_runs(tiny_data, mcfg):
+@pytest.mark.parametrize("mode", MODES)
+def test_centralized_reference_runs(tiny_data, mcfg, mode):
     data, pub = tiny_data
-    sim = DecentralizedSimulator(mcfg, _cfg(algorithm="centralized",
-                                            steps=20, idkd=None),
-                                 data, None, eval_every=19)
+    steps = 10 if mode == "fast" else 20
+    sim = DecentralizedSimulator(mcfg, _cfg(mode, algorithm="centralized",
+                                            steps=steps, idkd=None),
+                                 data, None, eval_every=steps - 1)
     r = sim.run()
     assert np.isfinite(r.acc_history).all()
 
 
-def test_comm_cost_accounting(tiny_data, mcfg):
+@pytest.mark.parametrize("mode", MODES)
+def test_comm_cost_accounting(tiny_data, mcfg, idkd_fast_run, mode):
     """Label bytes must be a small fraction of cumulative gossip bytes
     (paper Table 6: ~2% overhead)."""
-    data, pub = tiny_data
-    tcfg = _cfg(steps=30)
-    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
-                                 eval_every=29)
-    r = sim.run()
+    if mode == "fast":
+        tcfg, r = idkd_fast_run
+    else:
+        data, pub = tiny_data
+        tcfg = _cfg(mode)
+        sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                     eval_every=tcfg.steps - 1)
+        r = sim.run()
     total_gossip = r.comm_bytes_per_iter * tcfg.steps
     assert r.label_bytes_total < 0.25 * total_gossip

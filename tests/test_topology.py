@@ -1,6 +1,10 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep: shim keeps collection
+    from hypothesis_shim import given, settings, st
+
 
 from repro.core.topology import Topology, hierarchical_ring_edges
 

@@ -13,7 +13,11 @@ def _tiny(arch):
         d_ff=128, vocab_size=128, dtype="float32")
 
 
-@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-780m"])
+# qwen covers the sparse-label IDKD path by default; the SSM variant is
+# the slow full-grid run (pytest -m slow)
+@pytest.mark.parametrize("arch", [
+    "qwen3-1.7b",
+    pytest.param("mamba2-780m", marks=pytest.mark.slow)])
 def test_run_training_with_idkd(arch):
     cfg = _tiny(arch)
     tcfg = TrainConfig(num_nodes=2, steps=6, lr=0.1, alpha=0.1, batch_size=4,
