@@ -16,9 +16,10 @@ import traceback
 
 sys.path.insert(0, "src")
 
-from benchmarks import (bench_kernels, fig3_homogenize, roofline,  # noqa: E402
-                        table2_noniid, table3_topology, table4_public,
-                        table6_comm, table7_scale)
+from benchmarks import (bench_driver, bench_kernels,  # noqa: E402
+                        fig3_homogenize, roofline, table2_noniid,
+                        table3_topology, table4_public, table6_comm,
+                        table7_scale)
 
 SECTIONS = {
     "table2": lambda: table2_noniid.run(),
@@ -29,6 +30,7 @@ SECTIONS = {
     "fig3": lambda: fig3_homogenize.run()[:2],
     "kernels": lambda: bench_kernels.run(),
     "labeling": lambda: bench_kernels.bench_labeling(),
+    "driver": lambda: bench_driver.run(),
     "roofline": lambda: roofline.run(),
 }
 

@@ -5,6 +5,15 @@
 * per-sample label averaging across neighbours (Algorithm 1, line 14),
 * top-k sparse soft-label codec — beyond-paper adaptation that keeps label
   exchange ~2% of the weight-exchange bytes at LLM vocab sizes (DESIGN.md §3).
+
+**Temperature convention (the one convention, both drivers):**
+:func:`kd_loss` and :func:`sparse_kd_loss` return the **T²-scaled**
+soft cross-entropy — Hinton et al.'s factor that keeps KD gradient
+magnitudes comparable to hard-CE gradients when the two are mixed
+(∂/∂z softCE(z/T) carries a 1/T² factor that the scaling cancels).
+Consumers must NOT rescale: the seed's LM KD step divided the T² back
+out, making the two drivers disagree by T² (= 100 at the paper's
+T = 10). Pinned by tests/test_driver.py::test_kd_temperature_convention.
 """
 from __future__ import annotations
 

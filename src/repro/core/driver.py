@@ -1,0 +1,405 @@
+"""One on-device decentralized training driver.
+
+Both consumers of the gossip step loop — the CPU accuracy simulator
+(``core.simulator.DecentralizedSimulator``) and the LM launch path
+(``launch.train.run_training``) — run on this engine instead of private
+Python loops. Three pieces compose:
+
+**Loss adapters + step factory.** :func:`make_step` builds the one
+decentralized train step — per-node ``value_and_grad`` via ``vmap`` on
+node-stacked params, then ``algo.step`` with an abstract gossip mixer —
+parameterized by a *loss adapter* ``adapter(model) -> node_loss(params,
+batch)``. Adapters exist for hard-CE classification, dense-KD, sparse-KD,
+LM next-token, and LM next-token + sparse-KD; they are the only per-task
+code. (The seed tree had five near-duplicate jitted step builders; they
+are gone.)
+
+**On-device sampling.** Per-node batch sampling runs under ``jit`` via
+``jax.random`` over padded partition-index arrays (:class:`PaddedParts`,
+a jit-friendly port of ``data.pipeline.NodeSampler`` /
+``HomogenizedSampler``), and the private/public image-label merge that
+the seed did with host-side ``np.where`` happens inside the jitted
+sampler. One behavioural delta vs the host samplers: draws are always
+with replacement (``jax.random.randint``), where the numpy samplers
+switched to without-replacement for large partitions.
+
+**Scan / host runners.** :func:`make_scan_runner` compiles the inner loop
+as one ``lax.scan`` over a chunk of steps between eval boundaries — no
+per-step Python dispatch or host↔device batch round-trips.
+:func:`make_host_runner` drives the *same* jitted step + sampler from a
+per-step Python loop; it exists as the dispatch-overhead baseline
+(``benchmarks/bench_driver.py``) and the equivalence oracle
+(``tests/test_driver.py``): both runners consume identical PRNG key
+sequences, so their trajectories match to float tolerance.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import IDKDConfig
+from repro.core import distill
+
+PyTree = Any
+Batch = Dict[str, jax.Array]
+NodeLoss = Callable[[PyTree, Batch], jax.Array]
+LossAdapter = Callable[..., NodeLoss]
+SampleFn = Callable[[jax.Array, jax.Array], Batch]
+
+RUNNER_MODES = ("scan", "host", "auto")
+
+
+def resolve_runner_mode(mode: str, arch_type: str = "") -> str:
+    """``auto`` → the empirically fastest runner for the backend.
+
+    On XLA:CPU, convolutions inside ``while`` loops fall off the threaded
+    fast path (~5× slower; measured in ``benchmarks/bench_driver.py``),
+    so conv models keep the per-step host loop there; everything else —
+    and every accelerator backend — gets the scan driver.
+    """
+    if mode != "auto":
+        return mode
+    if arch_type == "cnn" and jax.default_backend() == "cpu":
+        return "host"
+    return "scan"
+
+
+# --------------------------------------------------------------- adapters
+def classification_adapter(model) -> NodeLoss:
+    """Weighted soft-CE on (soft or one-hot) labels — the plain phase."""
+    def node_loss(params, batch):
+        logits, _ = model.forward(params, {"images": batch["images"]})
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+        nll = -jnp.sum(batch["labels"] * logp, axis=-1)
+        w = batch["weights"]
+        return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return node_loss
+
+
+def dense_kd_adapter(temperature: float) -> LossAdapter:
+    """Private rows: hard CE. Public rows: T²-scaled KD loss (the one
+    distillation convention, ``distill.kd_loss`` — Hinton's T² factor
+    keeps KD gradients comparable to the hard-CE gradients)."""
+    def adapter(model) -> NodeLoss:
+        def node_loss(params, batch):
+            logits, _ = model.forward(params, {"images": batch["images"]})
+            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+            hard_nll = -jnp.sum(batch["labels"] * logp, axis=-1)
+            kd = distill.kd_loss(logits, batch["labels"], temperature)
+            nll = jnp.where(batch["is_pub"], kd, hard_nll)
+            w = batch["weights"]
+            return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+        return node_loss
+    return adapter
+
+
+def sparse_kd_adapter(temperature: float) -> LossAdapter:
+    """dense_kd on top-k sparse labels, never densified: private rows
+    carry their one-hot as a k=1 sparse label, so hard CE is the T=1
+    sparse soft-CE on the same payload."""
+    def adapter(model) -> NodeLoss:
+        def node_loss(params, batch):
+            logits, _ = model.forward(params, {"images": batch["images"]})
+            sp = distill.SparseLabels(batch["values"], batch["indices"])
+            hard_nll = distill.sparse_kd_loss(logits, sp, 1.0)
+            kd = distill.sparse_kd_loss(logits, sp, temperature)
+            nll = jnp.where(batch["is_pub"], kd, hard_nll)
+            w = batch["weights"]
+            return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+        return node_loss
+    return adapter
+
+
+def lm_adapter(model) -> NodeLoss:
+    """Next-token LM loss. The whole batch goes to ``model.loss`` —
+    frontend keys (VLM images, audio conditioning) ride along."""
+    def node_loss(params, batch):
+        loss, _ = model.loss(params, batch)
+        return loss
+    return node_loss
+
+
+def lm_sparse_kd_adapter(idkd_cfg: IDKDConfig) -> LossAdapter:
+    """LM next-token loss + sparse-KD on homogenized public batches.
+
+    The KD term is ``distill.sparse_kd_loss`` — T²-scaled, the same
+    convention as the classification adapters (the seed's LM step divided
+    the T² back out, so the two drivers disagreed by a factor of T²).
+    """
+    def adapter(model) -> NodeLoss:
+        def node_loss(params, batch):
+            base, _ = model.loss(params, batch)
+            logits, _ = model.forward(params, {"tokens": batch["pub_tokens"]})
+            kd = distill.sparse_kd_loss(
+                logits, distill.SparseLabels(batch["pub_vals"],
+                                             batch["pub_idx"]),
+                idkd_cfg.temperature)
+            kd = jnp.sum(kd.mean(-1) * batch["pub_w"]) / \
+                jnp.maximum(jnp.sum(batch["pub_w"]), 1.0)
+            return base + idkd_cfg.kd_weight * kd
+        return node_loss
+    return adapter
+
+
+# ----------------------------------------------------------- step factory
+def make_step(model, algo, mixer, loss_adapter) -> Callable:
+    """The one decentralized train step.
+
+    ``loss_adapter`` is either ``adapter(model) -> node_loss`` directly
+    (``classification_adapter``, ``lm_adapter``) or the result of a
+    parameterized factory (``dense_kd_adapter(T)`` etc.). Returns
+    ``step(params, opt_state, batch, lr) -> (params, opt_state, loss)``
+    on node-stacked pytrees, with ``step.init_opt = algo.init``.
+    """
+    node_loss = loss_adapter(model)
+    grad_fn = jax.vmap(jax.value_and_grad(node_loss))
+
+    def step(params, opt_state, batch, lr):
+        losses, grads = grad_fn(params, batch)
+        params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
+        return params, opt_state, jnp.mean(losses)
+
+    step.init_opt = algo.init
+    return step
+
+
+# ------------------------------------------------------ on-device sampling
+class PaddedParts(NamedTuple):
+    """Padded per-node partition indices, samplable under jit."""
+    idx: jax.Array    # (n, Pmax) int32 — rows padded (padding never drawn)
+    size: jax.Array   # (n,) int32 — true row lengths (may be 0)
+
+
+def pad_partitions(parts: List[np.ndarray]) -> PaddedParts:
+    n = len(parts)
+    pmax = max(max((len(p) for p in parts), default=0), 1)
+    idx = np.zeros((n, pmax), np.int32)
+    size = np.zeros((n,), np.int32)
+    for i, p in enumerate(parts):
+        p = np.asarray(p, np.int64)
+        idx[i, :len(p)] = p
+        size[i] = len(p)
+    return PaddedParts(jnp.asarray(idx), jnp.asarray(size))
+
+
+def sample_partition(parts: PaddedParts, key, batch_size: int) -> jax.Array:
+    """(n, B) global indices, node i drawn uniformly from its partition.
+    Empty partitions yield index 0 — mask on ``parts.size > 0``."""
+    keys = jax.random.split(key, parts.idx.shape[0])
+
+    def one(k, row, size):
+        r = jax.random.randint(k, (batch_size,), 0, jnp.maximum(size, 1))
+        return row[r]
+
+    return jax.vmap(one)(keys, parts.idx, parts.size)
+
+
+def _bcast(mask, ndim: int):
+    """Broadcast a (n, B) mask over trailing sample axes."""
+    return mask.reshape(mask.shape + (1,) * (ndim - mask.ndim))
+
+
+def _require_nonempty(parts: PaddedParts, what: str) -> None:
+    """Private partitions must be non-empty: sample_partition would
+    silently return index 0 for an empty row (the host samplers raised
+    there). Empty *public* D_ID rows stay legal — ``is_pub`` masks them."""
+    sizes = np.asarray(parts.size)
+    if (sizes == 0).any():
+        empty = np.flatnonzero(sizes == 0).tolist()
+        raise ValueError(f"empty {what} partition for node(s) {empty}; "
+                         "cannot sample a training batch from them")
+
+
+def make_classification_sampler(parts: PaddedParts, train_x, train_y,
+                                num_classes: int,
+                                batch_size: int) -> SampleFn:
+    """Plain-phase batches: private images + one-hot labels."""
+    _require_nonempty(parts, "private")
+    train_x = jnp.asarray(train_x)
+    train_y = jnp.asarray(train_y)
+
+    def sample(key, step) -> Batch:
+        idx = sample_partition(parts, key, batch_size)
+        return {"images": train_x[idx],
+                "labels": jax.nn.one_hot(train_y[idx], num_classes,
+                                         dtype=jnp.float32),
+                "weights": jnp.ones(idx.shape, jnp.float32)}
+
+    return sample
+
+
+def make_homogenized_sampler(priv_parts: PaddedParts, pub_parts: PaddedParts,
+                             train_x, train_y, public_x, hom_weights,
+                             payload, num_classes: int,
+                             batch_size: int) -> SampleFn:
+    """KD-phase batches from D_T^i ∪ D_ID (Algorithm 1 line 15), merged
+    inside jit: each slot is public with probability |D_ID| / (|D_T| +
+    |D_ID|); images, labels, and weights are ``jnp.where``-selected from
+    the private or public source.
+
+    ``payload`` is the post-round label payload: a dense (n, P, C) array,
+    or a ``distill.SparseLabels`` / (values, indices) pair — sparse rides
+    through un-densified, with private one-hots as k=1 sparse labels.
+    """
+    _require_nonempty(priv_parts, "private")
+    train_x = jnp.asarray(train_x)
+    train_y = jnp.asarray(train_y)
+    public_x = jnp.asarray(public_x)
+    hom_weights = jnp.asarray(hom_weights, jnp.float32)
+    n = hom_weights.shape[0]
+    p_pub = pub_parts.size / jnp.maximum(priv_parts.size + pub_parts.size, 1)
+    sparse = isinstance(payload, (tuple, list, distill.SparseLabels))
+    if sparse:
+        pay_vals = jnp.asarray(payload[0])
+        pay_idx = jnp.asarray(payload[1])
+    else:
+        pay_dense = jnp.asarray(payload)
+    nidx = jnp.arange(n)[:, None]
+
+    def sample(key, step) -> Batch:
+        kp, kq, ku = jax.random.split(key, 3)
+        priv = sample_partition(priv_parts, kp, batch_size)    # (n, B)
+        pub = sample_partition(pub_parts, kq, batch_size)
+        u = jax.random.uniform(ku, priv.shape)
+        is_pub = (u < p_pub[:, None]) & (pub_parts.size > 0)[:, None]
+        img_priv = train_x[priv]
+        images = jnp.where(_bcast(is_pub, img_priv.ndim),
+                           public_x[pub], img_priv)
+        weights = jnp.where(is_pub, hom_weights[nidx, pub], 1.0
+                            ).astype(jnp.float32)
+        batch = {"images": images, "weights": weights, "is_pub": is_pub}
+        if sparse:
+            vals = pay_vals[nidx, pub]                         # (n, B, k)
+            cls = pay_idx[nidx, pub]
+            pv = jnp.zeros_like(vals).at[..., 0].set(1.0)
+            pi = jnp.zeros_like(cls).at[..., 0].set(
+                train_y[priv].astype(cls.dtype))
+            batch["values"] = jnp.where(is_pub[..., None], vals, pv)
+            batch["indices"] = jnp.where(is_pub[..., None], cls, pi)
+        else:
+            lab_priv = jax.nn.one_hot(train_y[priv], num_classes,
+                                      dtype=jnp.float32)
+            batch["labels"] = jnp.where(is_pub[..., None],
+                                        pay_dense[nidx, pub], lab_priv)
+        return batch
+
+    return sample
+
+
+def make_lm_sampler(parts: PaddedParts, tokens, batch_size: int) -> SampleFn:
+    """LM batches: (n, B, S) token/next-token pairs from per-node shards."""
+    _require_nonempty(parts, "private")
+    tokens = jnp.asarray(tokens)
+
+    def sample(key, step) -> Batch:
+        idx = sample_partition(parts, key, batch_size)
+        seq = tokens[idx]                                      # (n, B, S+1)
+        return {"tokens": seq[..., :-1], "labels": seq[..., 1:]}
+
+    return sample
+
+
+def make_lm_kd_sampler(parts: PaddedParts, tokens, batch_size: int,
+                       public_tokens, pub_vals, pub_idx, pub_w,
+                       pub_batch: int) -> SampleFn:
+    """LM batches + a per-node public sub-batch with its sparse payload."""
+    base = make_lm_sampler(parts, tokens, batch_size)
+    public_tokens = jnp.asarray(public_tokens)
+    pub_vals = jnp.asarray(pub_vals)
+    pub_idx = jnp.asarray(pub_idx)
+    pub_w = jnp.asarray(pub_w, jnp.float32)
+    n = pub_w.shape[0]
+    nidx = jnp.arange(n)[:, None]
+
+    def sample(key, step) -> Batch:
+        k1, k2 = jax.random.split(key)
+        batch = base(k1, step)
+        pb = jax.random.randint(k2, (n, pub_batch), 0, len(public_tokens))
+        batch["pub_tokens"] = public_tokens[pb]
+        batch["pub_vals"] = pub_vals[nidx, pb]
+        batch["pub_idx"] = pub_idx[nidx, pb]
+        batch["pub_w"] = pub_w[nidx, pb]
+        return batch
+
+    return sample
+
+
+# ---------------------------------------------------------------- runners
+def make_scan_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
+    """``run(params, opt_state, key, step0, num_steps)`` — the whole chunk
+    of steps is one ``lax.scan`` under jit (sampling included): zero
+    per-step dispatch. ``step0`` is traced (chunks at different offsets
+    share one executable); ``num_steps`` is static (one compile per
+    distinct chunk length).
+    """
+    @functools.partial(jax.jit, static_argnums=(4,))
+    def run(params, opt_state, key, step0, num_steps):
+        def body(carry, t):
+            params, opt_state, key = carry
+            key, sub = jax.random.split(key)
+            batch = sample_fn(sub, step0 + t)
+            params, opt_state, loss = step_fn(params, opt_state, batch,
+                                              lr_fn(step0 + t))
+            return (params, opt_state, key), loss
+
+        (params, opt_state, key), losses = jax.lax.scan(
+            body, (params, opt_state, key), jnp.arange(num_steps))
+        return params, opt_state, key, losses
+
+    return run
+
+
+def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
+    """Same contract as :func:`make_scan_runner`, but a per-step Python
+    loop around one jitted step — the dispatch-overhead baseline. Key
+    handling matches the scan body exactly, so trajectories agree."""
+    @jax.jit
+    def one(params, opt_state, key, t):
+        key, sub = jax.random.split(key)
+        batch = sample_fn(sub, t)
+        params, opt_state, loss = step_fn(params, opt_state, batch,
+                                          lr_fn(t))
+        return params, opt_state, key, loss
+
+    def run(params, opt_state, key, step0, num_steps):
+        losses = []
+        for t in range(num_steps):
+            params, opt_state, key, loss = one(
+                params, opt_state, key, jnp.asarray(step0 + t, jnp.int32))
+            losses.append(loss)
+        return (params, opt_state, key,
+                jnp.stack(losses) if losses else jnp.zeros((0,), jnp.float32))
+
+    return run
+
+
+def make_runner(step_fn, sample_fn: SampleFn, lr_fn,
+                mode: str = "scan", arch_type: str = "") -> Callable:
+    if mode not in RUNNER_MODES:
+        raise ValueError(f"unknown driver mode {mode!r}; "
+                         f"expected one of {RUNNER_MODES}")
+    mode = resolve_runner_mode(mode, arch_type)
+    maker = make_scan_runner if mode == "scan" else make_host_runner
+    return maker(step_fn, sample_fn, lr_fn)
+
+
+def eval_boundaries(steps: int, eval_every: int,
+                    extra: Optional[int] = None) -> List[Tuple[int, int]]:
+    """Chunk [start, stop) spans between eval/homogenization boundaries.
+
+    Chunks end right after each eval step (``s % eval_every == 0`` or the
+    last step) and break *before* ``extra`` (the homogenization step), so
+    the driver can swap samplers between chunks. Chunk lengths take only
+    a few distinct values → a few scan compiles per run.
+    """
+    cuts = {0, steps}
+    cuts |= {s + 1 for s in range(steps)
+             if s % eval_every == 0 or s == steps - 1}
+    if extra is not None and 0 <= extra < steps:
+        cuts.add(extra)
+    edges = sorted(cuts)
+    return [(a, b) for a, b in zip(edges[:-1], edges[1:])]

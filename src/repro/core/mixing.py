@@ -1,21 +1,39 @@
-"""Gossip mixing backends.
+"""Gossip mixing backends behind one entry point.
 
-Two implementations of x_i ← Σ_j W_ij x_j over a pytree of parameters:
+:func:`make_mixer` builds x_i ← Σ_j W_ij x_j over a pytree of parameters
+for any :class:`~repro.core.topology.Topology`, with interchangeable
+backends:
 
-* :func:`make_dense_mixer` — simulation backend. Node-stacked pytrees
-  (leading axis = node) mixed by a dense (n, n) matrix ``einsum``. Used by
-  the CPU accuracy experiments (paper repro) where all nodes live in one
-  process via ``vmap``.
+* ``dense`` — simulation reference. Node-stacked pytrees (leading axis =
+  node) mixed by the dense (n, n) Metropolis matrix via ``einsum``. Used
+  by the CPU accuracy experiments (paper repro) where all nodes live in
+  one process via ``vmap``. O(n²) work per leaf regardless of graph
+  sparsity — the numerical oracle the other backends are tested against.
 
-* :func:`make_ppermute_mixer` — production backend. Inside ``shard_map``
-  over the mesh node axes, each node `lax.ppermute`s its parameter shard to
+* ``gather`` — neighbour-gather on node-stacked arrays. Each node gathers
+  its padded neighbour slots (``Topology.neighbor_arrays``) and combines
+  with the gathered Metropolis weights — O(Σ deg) work, and the form that
+  shards: a gather over a static index array lowers to neighbour-local
+  collectives when the node axis is sharded.
+
+* ``roll`` — ring-only fast path. ``jnp.roll`` along the node axis, which
+  XLA lowers to ``collective-permute`` between neighbouring node groups
+  when that axis is sharded over the mesh (the launch path's production
+  gossip; no cross-node all-reduce appears in the HLO).
+
+* ``ppermute`` — explicit production backend. Inside ``shard_map`` over
+  the mesh node axes, each node `lax.ppermute`s its parameter shard to
   its graph neighbours and combines with its Metropolis row. Communication
   is therefore exactly the paper's peer-to-peer exchange (no all-reduce),
   visible in the compiled HLO as `collective-permute` ops.
+
+All node-stacked backends take ``wire_dtype``: "native" moves parameters
+between nodes in their storage dtype (bf16 params → bf16 gossip traffic,
+§Perf byte-halving) and accumulates the weighted sum in f32; "float32"
+upcasts before the exchange (paper-faithful full-precision mixing).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Sequence, Tuple
 
 import jax
@@ -33,17 +51,115 @@ Mixer = Callable[[PyTree], PyTree]
 # ---------------------------------------------------------------------------
 
 
-def make_dense_mixer(W: np.ndarray) -> Mixer:
+def make_dense_mixer(W: np.ndarray, wire_dtype: str = "float32") -> Mixer:
     Wj = jnp.asarray(W, jnp.float32)
 
     def mix(stacked: PyTree) -> PyTree:
         def mix_leaf(x):
-            xf = x.astype(jnp.float32)
-            y = jnp.einsum("ij,j...->i...", Wj, xf)
+            # the einsum accumulates in f32 either way; "native" keeps the
+            # operand in storage dtype (the bytes a real wire would carry)
+            xf = x.astype(jnp.float32) if wire_dtype == "float32" else x
+            y = jnp.einsum("ij,j...->i...", Wj, xf,
+                           preferred_element_type=jnp.float32)
             return y.astype(x.dtype)
         return jax.tree.map(mix_leaf, stacked)
 
     return mix
+
+
+def make_gather_mixer(topology: Topology,
+                      wire_dtype: str = "native") -> Mixer:
+    """Neighbour-gather gossip on node-stacked pytrees.
+
+    Row i combines x[nbr[i, d]] with the gathered Metropolis weights
+    W[i, nbr[i, d]]; padding slots carry weight 0. Exactly equals the
+    dense-W einsum (W is supported on self ∪ neighbours) at O(Σ deg)
+    work instead of O(n²).
+    """
+    nbr, valid = topology.neighbor_arrays(include_self=True)
+    W = topology.mixing_matrix()
+    w = W[np.arange(topology.n)[:, None], nbr] * valid      # (n, D)
+    nbr_j = jnp.asarray(nbr)
+    w_j = jnp.asarray(w, jnp.float32)
+
+    def mix(stacked: PyTree) -> PyTree:
+        def mix_leaf(x):
+            xw = x.astype(jnp.float32) if wire_dtype == "float32" else x
+            g = xw[nbr_j]                                   # (n, D, ...)
+            y = jnp.einsum("nd,nd...->n...", w_j, g.astype(jnp.float32))
+            return y.astype(x.dtype)
+        return jax.tree.map(mix_leaf, stacked)
+
+    return mix
+
+
+def _is_ring(topology: Topology) -> bool:
+    n = topology.n
+    if n <= 2:
+        return True
+    return all(topology.neighbors(i) == sorted({(i - 1) % n, (i + 1) % n})
+               for i in range(n))
+
+
+def make_roll_mixer(num_nodes: int, wire_dtype: str = "native") -> Mixer:
+    """Ring gossip via rolls along the node axis (→ collective-permute).
+
+    Metropolis weights for a ring: 1/3 self + 1/3 each neighbour
+    (n == 2 degenerates to 1/2, 1/2; n == 1 to identity).
+    """
+    if num_nodes <= 1:
+        return lambda t: t
+
+    def mix(tree):
+        def leaf(x):
+            xw = x.astype(jnp.float32) if wire_dtype == "float32" else x
+            fwd = jnp.roll(xw, 1, axis=0).astype(jnp.float32)
+            if num_nodes == 2:
+                y = 0.5 * x.astype(jnp.float32) + 0.5 * fwd
+            else:
+                bwd = jnp.roll(xw, -1, axis=0).astype(jnp.float32)
+                y = (x.astype(jnp.float32) + fwd + bwd) / 3.0
+            return y.astype(x.dtype)
+        return jax.tree.map(leaf, tree)
+
+    return mix
+
+
+def make_mixer(topology: Topology, backend: str = "auto",
+               wire_dtype: str = "native", **ppermute_kw) -> Mixer:
+    """One entry point for every gossip backend (see module docstring).
+
+    ``backend="auto"`` picks the roll fast path on rings (lowers to
+    collective-permute when the node axis is sharded) and neighbour-gather
+    everywhere else. ``backend="roll"`` requires a ring topology;
+    ``backend="ppermute"`` forwards ``axis_names`` / ``axis_sizes`` /
+    ``self_weight`` to :func:`make_ppermute_mixer` (for use inside
+    ``shard_map``) — that backend implements ring / ring-of-rings gossip
+    over the mesh axes only, so it too rejects non-ring topologies, and
+    it always moves shards in their storage dtype (``wire_dtype`` other
+    than "native" is rejected rather than silently dropped).
+    """
+    if backend == "auto":
+        backend = "roll" if _is_ring(topology) else "gather"
+    if backend == "dense":
+        return make_dense_mixer(topology.mixing_matrix(), wire_dtype)
+    if backend == "gather":
+        return make_gather_mixer(topology, wire_dtype)
+    if backend == "roll":
+        if not _is_ring(topology):
+            raise ValueError(
+                f"roll mixer requires a ring topology, got {topology.name!r}")
+        return make_roll_mixer(topology.n, wire_dtype)
+    if backend == "ppermute":
+        if not _is_ring(topology):
+            raise ValueError("ppermute mixer implements ring/ring-of-rings "
+                             f"gossip over mesh axes; got {topology.name!r}")
+        if wire_dtype != "native":
+            raise ValueError("ppermute mixer moves shards in their storage "
+                             f"dtype; wire_dtype={wire_dtype!r} unsupported")
+        return make_ppermute_mixer(**ppermute_kw)
+    raise ValueError(f"unknown mixer backend {backend!r}; expected one of "
+                     "('auto', 'dense', 'gather', 'roll', 'ppermute')")
 
 
 # ---------------------------------------------------------------------------

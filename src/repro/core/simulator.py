@@ -5,6 +5,12 @@ All N nodes live in one process: parameters are node-stacked pytrees
 dense mixing matrix — mathematically identical to the paper's MPI cluster
 under synchronous rounds, which is what the paper runs.
 
+The step loop is the unified driver (``core.driver``): loss adapters +
+``make_step`` build the jitted steps, per-node sampling runs on device,
+and the inner loop executes as ``lax.scan`` chunks between eval
+boundaries (``driver_mode="auto"`` keeps conv models on the per-step
+host runner on CPU — DESIGN.md §5 CPU caveats).
+
 Supports the full method grid of Tables 2–7:
   * algorithms: dsgd / dsgdm / qg-dsgdm-n / d2 / relaysgd / centralized
   * ``kd_mode``: None (no distillation), "vanilla" (no OoD filter — the
@@ -12,22 +18,20 @@ Supports the full method grid of Tables 2–7:
 """
 from __future__ import annotations
 
-import functools
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
-from repro.core import distill, idkd, labeling
+from repro.core import distill, driver, idkd, labeling
 from repro.core.algorithms import make_algorithm
 from repro.core.mixing import consensus_distance, make_dense_mixer
 from repro.core.topology import Topology
 from repro.data.dirichlet import dirichlet_partition, partition_stats
-from repro.data.pipeline import HomogenizedSampler, NodeSampler
 from repro.data.synthetic import ClassificationData
 from repro.models import build_model
 from repro.optim.schedules import step_decay
@@ -52,7 +56,7 @@ class DecentralizedSimulator:
     def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
                  data: ClassificationData, public_x: Optional[np.ndarray] = None,
                  kd_mode: Optional[str] = None, eval_every: int = 50,
-                 eval_batches: int = 4):
+                 eval_batches: int = 4, driver_mode: str = "auto"):
         self.mcfg = model_cfg
         self.tcfg = train_cfg
         self.data = data
@@ -60,6 +64,8 @@ class DecentralizedSimulator:
         self.kd_mode = kd_mode
         self.eval_every = eval_every
         self.eval_batches = eval_batches
+        self.driver_mode = driver.resolve_runner_mode(driver_mode,
+                                                      model_cfg.arch_type)
 
         n = train_cfg.num_nodes
         self.topology = Topology.make(train_cfg.topology, n)
@@ -91,62 +97,18 @@ class DecentralizedSimulator:
 
     # ------------------------------------------------------------------ setup
     def _build_jits(self):
+        """Steps come from the unified driver (core.driver.make_step);
+        only the diagnostics (forward/eval) are built here."""
         model, mixer, algo = self.model, self.mixer, self.algo
-        C = self.mcfg.num_classes
         kd_T = (self.tcfg.idkd.temperature if self.tcfg.idkd
                 else IDKDConfig().temperature)
 
-        def node_loss(params, images, soft_labels, weights):
-            logits, _ = model.forward(params, {"images": images})
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
-            nll = -jnp.sum(soft_labels * logp, axis=-1)
-            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
-
-        def kd_node_loss(params, images, soft_labels, weights, is_pub):
-            """Private part: hard CE. Public part: T²-scaled KD loss
-            (Hinton's T² factor keeps KD gradients comparable to the hard
-            CE gradients when mixing the two)."""
-            logits, _ = model.forward(params, {"images": images})
-            logp = jax.nn.log_softmax(logits.astype(jnp.float32))
-            hard_nll = -jnp.sum(soft_labels * logp, axis=-1)
-            kd = distill.kd_loss(logits, soft_labels, kd_T)
-            nll = jnp.where(is_pub, kd, hard_nll)
-            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
-
-        def sparse_kd_node_loss(params, images, values, indices, weights,
-                                is_pub):
-            """kd_node_loss on top-k sparse labels, never densified: the
-            private rows carry their one-hot as a k=1 sparse label, so
-            hard CE is the T=1 sparse soft-CE on the same payload."""
-            logits, _ = model.forward(params, {"images": images})
-            sp = distill.SparseLabels(values, indices)
-            hard_nll = distill.sparse_kd_loss(logits, sp, 1.0)
-            kd = distill.sparse_kd_loss(logits, sp, kd_T)
-            nll = jnp.where(is_pub, kd, hard_nll)
-            return jnp.sum(nll * weights) / jnp.maximum(jnp.sum(weights), 1.0)
-
-        grad_fn = jax.vmap(jax.grad(node_loss), in_axes=(0, 0, 0, 0))
-        kd_grad_fn = jax.vmap(jax.grad(kd_node_loss), in_axes=(0, 0, 0, 0, 0))
-        sparse_kd_grad_fn = jax.vmap(jax.grad(sparse_kd_node_loss),
-                                     in_axes=(0, 0, 0, 0, 0, 0))
-
-        @jax.jit
-        def train_step(params, opt_state, images, soft_labels, weights, lr):
-            grads = grad_fn(params, images, soft_labels, weights)
-            return algo.step(params, grads, opt_state, lr, mixer)
-
-        @jax.jit
-        def kd_train_step(params, opt_state, images, soft_labels, weights,
-                          is_pub, lr):
-            grads = kd_grad_fn(params, images, soft_labels, weights, is_pub)
-            return algo.step(params, grads, opt_state, lr, mixer)
-
-        @jax.jit
-        def sparse_kd_train_step(params, opt_state, images, values, indices,
-                                 weights, is_pub, lr):
-            grads = sparse_kd_grad_fn(params, images, values, indices,
-                                      weights, is_pub)
-            return algo.step(params, grads, opt_state, lr, mixer)
+        self._plain_step = driver.make_step(
+            model, algo, mixer, driver.classification_adapter)
+        self._kd_step = driver.make_step(
+            model, algo, mixer, driver.dense_kd_adapter(kd_T))
+        self._sparse_kd_step = driver.make_step(
+            model, algo, mixer, driver.sparse_kd_adapter(kd_T))
 
         @jax.jit
         def forward_logits(params, images):
@@ -155,18 +117,18 @@ class DecentralizedSimulator:
                 lambda p, x: model.forward(p, {"images": x})[0])(params, images)
 
         @jax.jit
-        def consensus_eval(params, images, labels):
+        def consensus_eval(params, images, labels, mask):
             mean_p = jax.tree.map(lambda t: jnp.mean(
                 t.astype(jnp.float32), axis=0).astype(t.dtype), params)
             logits, _ = model.forward(mean_p, {"images": images})
-            acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+            hit = (jnp.argmax(logits, -1) == labels).astype(jnp.float32)
+            cnt = jnp.maximum(jnp.sum(mask), 1.0)
+            acc = jnp.sum(hit * mask) / cnt
             logp = jax.nn.log_softmax(logits.astype(jnp.float32))
-            nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+            per = -jnp.take_along_axis(logp, labels[:, None], 1)[:, 0]
+            nll = jnp.sum(per * mask) / cnt
             return acc, nll
 
-        self._train_step = train_step
-        self._kd_train_step = kd_train_step
-        self._sparse_kd_train_step = sparse_kd_train_step
         self._forward_logits = forward_logits
         self._consensus_eval = consensus_eval
 
@@ -200,33 +162,50 @@ class DecentralizedSimulator:
 
     # ------------------------------------------------------------------- run
     def run(self) -> SimResult:
+        """Chunked scan driver: the inner step loop runs on device
+        (``core.driver``), breaking only at eval boundaries and at the
+        homogenization step (where the sampler/step pair is swapped)."""
         t0 = time.time()
         tcfg = self.tcfg
         n = tcfg.num_nodes
+        C = self.mcfg.num_classes
         params = self._stacked_init()
         opt_state = self.algo.init(params)
-        sampler = NodeSampler(self.parts, tcfg.batch_size, tcfg.seed)
         result = SimResult(final_acc=0.0)
         result.pre_hist = partition_stats(self.data.train_y, self.parts,
                                           self.mcfg.num_classes)
 
-        hom: Optional[labeling.HomogenizedResult] = None
-        hom_sampler: Optional[HomogenizedSampler] = None
         idkd_cfg = tcfg.idkd or IDKDConfig()
-        eye = np.eye(self.mcfg.num_classes, dtype=np.float32)
+        kd_active = (self.kd_mode is not None and self.public_x is not None
+                     and idkd_cfg.start_step < tcfg.steps)
+        priv_parts = driver.pad_partitions(self.parts)
+        sampler = driver.make_classification_sampler(
+            priv_parts, self.data.train_x, self.data.train_y, C,
+            tcfg.batch_size)
+        runner = driver.make_runner(self._plain_step, sampler, self.lr_fn,
+                                    self.driver_mode)
+        key = jax.random.PRNGKey(tcfg.seed)
+        hom: Optional[labeling.HomogenizedResult] = None
 
-        for step in range(tcfg.steps):
-            lr = self.lr_fn(step)
-            if (self.kd_mode and self.public_x is not None
-                    and step == idkd_cfg.start_step):
+        for a, b in driver.eval_boundaries(
+                tcfg.steps, self.eval_every,
+                idkd_cfg.start_step if kd_active else None):
+            if kd_active and hom is None and a == idkd_cfg.start_step:
                 hom = self._homogenize(params, idkd_cfg)
                 sparse_round = isinstance(hom, labeling.SparseHomogenizedSet)
-                payload = ((np.asarray(hom.labels.values),
-                            np.asarray(hom.labels.indices))
-                           if sparse_round else np.asarray(hom.labels))
-                hom_sampler = HomogenizedSampler(
-                    self.parts, np.asarray(hom.weights), tcfg.batch_size,
-                    tcfg.seed, public_labels=payload)
+                payload = (hom.labels if sparse_round
+                           else np.asarray(hom.labels))
+                pub_parts = driver.pad_partitions(
+                    [np.flatnonzero(w > 0)
+                     for w in np.asarray(hom.weights)])
+                sampler = driver.make_homogenized_sampler(
+                    priv_parts, pub_parts, self.data.train_x,
+                    self.data.train_y, self.public_x,
+                    np.asarray(hom.weights), payload, C, tcfg.batch_size)
+                step_fn = (self._sparse_kd_step if sparse_round
+                           else self._kd_step)
+                runner = driver.make_runner(step_fn, sampler, self.lr_fn,
+                                            self.driver_mode)
                 result.thresholds = np.asarray(hom.thresholds)
                 result.id_fraction = float(np.mean(np.asarray(hom.id_masks)))
                 result.post_hist = self._post_histograms(hom)
@@ -240,47 +219,11 @@ class DecentralizedSimulator:
                         int(np.asarray(hom.id_masks).sum() / n),
                         self.mcfg.num_classes, k_wire))
 
-            if hom_sampler is None:
-                idx = sampler.sample()                        # (n, B)
-                images = jnp.asarray(self.data.train_x[idx])
-                labels = jnp.asarray(eye[self.data.train_y[idx]])
-                weights = jnp.ones(idx.shape, jnp.float32)
-                params, opt_state = self._train_step(
-                    params, opt_state, images, labels, weights, lr)
-            else:
-                priv, pub, is_pub = hom_sampler.sample()
-                img_priv = self.data.train_x[priv]            # (n, B, ...)
-                img_pub = self.public_x[pub]
-                images = jnp.asarray(np.where(is_pub[..., None, None, None],
-                                              img_pub, img_priv))
-                w_pub = hom_sampler.gather_weights(pub)
-                weights = jnp.asarray(np.where(is_pub, w_pub, 1.0)
-                                      ).astype(jnp.float32)
-                if hom_sampler.sparse:
-                    # sparse payload end-to-end: private one-hots ride the
-                    # same (values, indices) format at k=1
-                    vals, cls = hom_sampler.gather_public(pub)  # (n, B, k)
-                    pv = np.zeros_like(vals)
-                    pv[..., 0] = 1.0
-                    pi = np.zeros_like(cls)
-                    pi[..., 0] = self.data.train_y[priv]
-                    values = jnp.asarray(np.where(is_pub[..., None],
-                                                  vals, pv))
-                    indices = jnp.asarray(np.where(is_pub[..., None],
-                                                   cls, pi))
-                    params, opt_state = self._sparse_kd_train_step(
-                        params, opt_state, images, values, indices, weights,
-                        jnp.asarray(is_pub), lr)
-                else:
-                    lab_priv = eye[self.data.train_y[priv]]
-                    lab_pub = hom_sampler.gather_public(pub)
-                    labels = jnp.asarray(np.where(is_pub[..., None],
-                                                  lab_pub, lab_priv))
-                    params, opt_state = self._kd_train_step(
-                        params, opt_state, images, labels, weights,
-                        jnp.asarray(is_pub), lr)
+            params, opt_state, key, _ = runner(
+                params, opt_state, key, jnp.asarray(a, jnp.int32), b - a)
 
-            if step % self.eval_every == 0 or step == tcfg.steps - 1:
+            last = b - 1
+            if last % self.eval_every == 0 or last == tcfg.steps - 1:
                 acc, nll = self._eval(params)
                 result.acc_history.append(acc)
                 result.loss_history.append(nll)
@@ -324,14 +267,31 @@ class DecentralizedSimulator:
         return np.stack(hists)
 
     # ------------------------------------------------------------------ eval
-    def _eval(self, params):
-        accs, nlls = [], []
-        B = 256
-        for b in range(self.eval_batches):
-            lo = (b * B) % len(self.data.test_y)
-            xb = jnp.asarray(self.data.test_x[lo:lo + B])
-            yb = jnp.asarray(self.data.test_y[lo:lo + B])
-            a, l = self._consensus_eval(params, xb, yb)
-            accs.append(float(a))
-            nlls.append(float(l))
-        return float(np.mean(accs)), float(np.mean(nlls))
+    def _eval(self, params, batch: int = 256):
+        """Deterministic test-set sweep: contiguous batches, each sample
+        counted at most once (the seed's ``(b*B) % len`` wraparound could
+        short-batch and double-count, adding noise to every accuracy
+        number). The last batch is zero-padded with a mask so the jitted
+        eval keeps one shape; means are weighted by true sample count."""
+        N = len(self.data.test_y)
+        num_batches = min(self.eval_batches, -(-N // batch))
+        tot_acc = tot_nll = tot_cnt = 0.0
+        for b in range(num_batches):
+            lo = b * batch
+            hi = min(lo + batch, N)
+            cnt = hi - lo
+            xb = self.data.test_x[lo:hi]
+            yb = self.data.test_y[lo:hi]
+            if cnt < batch:
+                pad = batch - cnt
+                xb = np.concatenate([xb, np.zeros((pad,) + xb.shape[1:],
+                                                  xb.dtype)])
+                yb = np.concatenate([yb, np.zeros((pad,), yb.dtype)])
+            mask = np.zeros((batch,), np.float32)
+            mask[:cnt] = 1.0
+            a, l = self._consensus_eval(params, jnp.asarray(xb),
+                                        jnp.asarray(yb), jnp.asarray(mask))
+            tot_acc += float(a) * cnt
+            tot_nll += float(l) * cnt
+            tot_cnt += cnt
+        return tot_acc / tot_cnt, tot_nll / tot_cnt

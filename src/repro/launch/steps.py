@@ -1,55 +1,29 @@
 """Jit-compatible distributed step functions.
 
-``make_train_step`` builds the decentralized QG-DSGDm-N training step on
-node-stacked params: per-node fwd/bwd via vmap (the node axis is sharded
-over the mesh's gossip axes, so "vmap over nodes" is SPMD across node
-groups), then ring-gossip mixing expressed as ``jnp.roll`` along the node
-axis — which XLA lowers to ``collective-permute`` between neighbouring
-node groups. **No cross-node all-reduce of gradients exists in the HLO**:
-that is the decentralized point (verified by tests/test_dryrun_small.py).
+``make_train_step`` is a thin wrapper over the unified driver
+(``core.driver.make_step`` with the LM loss adapter): per-node fwd/bwd via
+vmap on node-stacked params (the node axis is sharded over the mesh's
+gossip axes, so "vmap over nodes" is SPMD across node groups), then
+topology gossip from ``core.mixing.make_mixer`` — on the default ring this
+is ``jnp.roll`` along the node axis, which XLA lowers to
+``collective-permute`` between neighbouring node groups. **No cross-node
+all-reduce of gradients exists in the HLO**: that is the decentralized
+point (verified by tests/test_dryrun_small.py).
 
 ``make_prefill_step`` / ``make_decode_step`` serve the consensus model.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.base import TrainConfig
 from repro.core.algorithms import make_algorithm
-
-
-def make_ring_mixer(num_nodes: int, wire_dtype: str = "native"):
-    """Gossip mixing on node-stacked pytrees via rolls (→ ppermute).
-
-    Metropolis weights for a ring: 1/3 self + 1/3 each neighbour
-    (n == 2 degenerates to 1/2, 1/2; n == 1 to identity).
-
-    ``wire_dtype`` controls what goes over the ICI links:
-      * "native"  — roll the parameter in its storage dtype (bf16 params →
-        bf16 ppermute traffic), accumulate the weighted sum in f32.
-        §Perf iteration 1: halves gossip bytes vs the f32 wire.
-      * "float32" — upcast before the roll (paper-faithful full-precision
-        mixing; the baseline recorded in EXPERIMENTS.md)."""
-    if num_nodes <= 1:
-        return lambda t: t
-
-    def mix(tree):
-        def leaf(x):
-            xw = x.astype(jnp.float32) if wire_dtype == "float32" else x
-            fwd = jnp.roll(xw, 1, axis=0).astype(jnp.float32)
-            if num_nodes == 2:
-                y = 0.5 * x.astype(jnp.float32) + 0.5 * fwd
-            else:
-                bwd = jnp.roll(xw, -1, axis=0).astype(jnp.float32)
-                y = (x.astype(jnp.float32) + fwd + bwd) / 3.0
-            return y.astype(x.dtype)
-        return jax.tree.map(leaf, tree)
-
-    return mix
+from repro.core.driver import lm_adapter, make_step
+from repro.core.mixing import make_mixer
+from repro.core.topology import Topology
 
 
 def stack_params(params, num_nodes: int):
@@ -67,24 +41,20 @@ def consensus_params(stacked):
 
 def make_train_step(model, tcfg: TrainConfig, num_nodes: int,
                     wire_dtype: str = "native") -> Callable:
+    """Decentralized LM train step on ``tcfg.topology`` (metrics-dict
+    contract kept for dryrun/serve; new code uses ``core.driver``)."""
     algo = make_algorithm(tcfg.algorithm, momentum=tcfg.momentum,
                           weight_decay=tcfg.weight_decay)
-    mixer = make_ring_mixer(num_nodes, wire_dtype)
-
-    def node_loss(p, batch):
-        loss, _ = model.loss(p, batch)
-        return loss
+    mixer = make_mixer(Topology.make(tcfg.topology, num_nodes),
+                       wire_dtype=wire_dtype)
+    inner = make_step(model, algo, mixer, lm_adapter)
 
     def train_step(params, opt_state, batch, lr):
         """params/opt_state: node-stacked pytrees; batch: (N, B, ...)."""
-        losses, grads = jax.vmap(jax.value_and_grad(node_loss))(params, batch)
-        params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
-        return params, opt_state, {"loss": jnp.mean(losses)}
+        params, opt_state, loss = inner(params, opt_state, batch, lr)
+        return params, opt_state, {"loss": loss}
 
-    def init_opt(params):
-        return algo.init(params)
-
-    train_step.init_opt = init_opt
+    train_step.init_opt = inner.init_opt
     return train_step
 
 

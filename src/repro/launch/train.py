@@ -7,6 +7,13 @@ public corpus. On CPU this drives reduced configs end-to-end; on a TPU
 cluster the same functions run under the production mesh (dryrun.py proves
 the latter lowers + compiles for every assigned arch × shape).
 
+The step loop is the unified on-device driver (``core.driver``): one
+``make_step`` per phase (plain LM / LM + sparse-KD), per-node batch
+sampling under jit, and the inner loop compiled as a ``lax.scan`` between
+log boundaries. Params-gossip and the IDKD label exchange share one
+``tcfg.topology`` graph (the seed gossiped on a hardwired ring while
+labels moved on ``tcfg.topology``).
+
 Usage (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
         --steps 40 --nodes 8 --idkd
@@ -15,21 +22,35 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
-from repro.core import distill, labeling
+from repro.core import driver, labeling
+from repro.core.algorithms import make_algorithm
+from repro.core.mixing import Mixer, make_mixer
 from repro.core.topology import Topology
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_lm_data
-from repro.launch.steps import (consensus_params, make_ring_mixer,
-                                make_train_step, stack_params)
+from repro.launch.steps import consensus_params, stack_params
 from repro.models import build_model
+
+
+def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native"
+                      ) -> Tuple[Topology, Mixer]:
+    """The (topology, mixer) pair ``run_training`` gossips params on.
+
+    Built from ``tcfg.topology`` — the same graph object the IDKD label
+    exchange uses, so params-gossip and label-exchange always agree.
+    ``wire_dtype`` applies to every phase, KD included (the seed's KD step
+    silently built an f32-wire mixer, losing the §Perf bf16-wire halving).
+    """
+    topo = Topology.make(tcfg.topology, tcfg.num_nodes)
+    return topo, make_mixer(topo, wire_dtype=wire_dtype)
 
 
 def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
@@ -62,43 +83,17 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
     return out.labels, out.weights, out.id_masks, out.thresholds
 
 
-def make_kd_train_step(model, tcfg: TrainConfig, num_nodes: int,
-                       idkd_cfg: IDKDConfig):
-    """Train step whose loss adds sparse-KD on homogenized public batches."""
-    from repro.core.algorithms import make_algorithm
-    algo = make_algorithm(tcfg.algorithm, momentum=tcfg.momentum,
-                          weight_decay=tcfg.weight_decay)
-    mixer = make_ring_mixer(num_nodes)
-
-    def node_loss(p, batch):
-        base, _ = model.loss(p, {"tokens": batch["tokens"],
-                                 "labels": batch["labels"]})
-        logits, _ = model.forward(p, {"tokens": batch["pub_tokens"]})
-        kd = distill.sparse_kd_loss(
-            logits, distill.SparseLabels(batch["pub_vals"],
-                                         batch["pub_idx"]),
-            idkd_cfg.temperature) / (idkd_cfg.temperature ** 2)
-        kd = jnp.sum(kd.mean(-1) * batch["pub_w"]) / \
-            jnp.maximum(jnp.sum(batch["pub_w"]), 1.0)
-        return base + idkd_cfg.kd_weight * kd
-
-    def step(params, opt_state, batch, lr):
-        losses, grads = jax.vmap(jax.value_and_grad(node_loss))(params, batch)
-        params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
-        return params, opt_state, {"loss": jnp.mean(losses)}
-
-    step.init_opt = algo.init
-    return step
-
-
 def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
                  n_seqs: int = 512, n_public: int = 64, log_every: int = 10,
-                 use_idkd: bool = False, verbose: bool = True
+                 use_idkd: bool = False, verbose: bool = True,
+                 wire_dtype: str = "native", driver_mode: str = "scan"
                  ) -> Dict[str, Any]:
     """End-to-end reduced-scale decentralized LM training (CPU-friendly)."""
     n = tcfg.num_nodes
     model = build_model(cfg)
-    topo = Topology.make(tcfg.topology, n)
+    topo, mixer = make_gossip_mixer(tcfg, wire_dtype)
+    algo = make_algorithm(tcfg.algorithm, momentum=tcfg.momentum,
+                          weight_decay=tcfg.weight_decay)
     tokens, topics = make_lm_data(cfg.vocab_size, seq_len + 1, n_seqs,
                                   seed=tcfg.seed)
     parts = dirichlet_partition(topics, n, tcfg.alpha,
@@ -108,16 +103,24 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
     params = stack_params(model.init(jax.random.PRNGKey(tcfg.seed)), n)
     idkd_cfg = tcfg.idkd or IDKDConfig(label_topk=8)
 
-    plain_step = jax.jit(make_train_step(model, tcfg, n))
-    kd_step = jax.jit(make_kd_train_step(model, tcfg, n, idkd_cfg))
+    plain_step = driver.make_step(model, algo, mixer, driver.lm_adapter)
+    kd_step = driver.make_step(model, algo, mixer,
+                               driver.lm_sparse_kd_adapter(idkd_cfg))
     opt_state = plain_step.init_opt(params)
 
-    rngs = [np.random.default_rng(tcfg.seed + 5 * i) for i in range(n)]
-    pub_payload: Optional[Dict[str, Any]] = None
+    priv_parts = driver.pad_partitions(parts)
+    sampler = driver.make_lm_sampler(priv_parts, tokens, tcfg.batch_size)
+    lr_fn = lambda s: jnp.asarray(tcfg.lr, jnp.float32)   # noqa: E731
+    runner = driver.make_runner(plain_step, sampler, lr_fn, driver_mode)
+    key = jax.random.PRNGKey(tcfg.seed + 1)
+
+    kd_fires = use_idkd and 0 <= idkd_cfg.start_step < tcfg.steps
     history = []
     t0 = time.time()
-    for step_i in range(tcfg.steps):
-        if (use_idkd and step_i == idkd_cfg.start_step):
+    for a, b in driver.eval_boundaries(
+            tcfg.steps, log_every,
+            idkd_cfg.start_step if kd_fires else None):
+        if kd_fires and a == idkd_cfg.start_step:
             m_priv = max(1, min(16, min(len(p) for p in parts)))
             priv = np.stack([tokens[parts[i][:m_priv], :seq_len]
                              for i in range(n)])
@@ -132,39 +135,26 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
             sparse, w, id_mask, thr = idkd_label_round(
                 model, params, public_tokens, priv, idkd_cfg, topo,
                 backend=backend)
-            pub_payload = {"vals": np.asarray(sparse.values),
-                           "idx": np.asarray(sparse.indices),
-                           "w": np.asarray(w)}
+            sampler = driver.make_lm_kd_sampler(
+                priv_parts, tokens, tcfg.batch_size, public_tokens,
+                sparse.values, sparse.indices, w,
+                pub_batch=min(4, len(public_tokens)))
+            runner = driver.make_runner(kd_step, sampler, lr_fn,
+                                        driver_mode)
             if verbose:
-                print(f"[idkd] step {step_i}: kept "
+                print(f"[idkd] step {a}: kept "
                       f"{float(np.asarray(id_mask).mean()):.2f} of public "
                       f"set; thresholds {np.asarray(thr).round(3)}")
-        idx = np.stack([r.choice(parts[i], size=tcfg.batch_size,
-                                 replace=len(parts[i]) < tcfg.batch_size)
-                        for i, r in enumerate(rngs)])
-        batch = {"tokens": jnp.asarray(tokens[idx][:, :, :-1]),
-                 "labels": jnp.asarray(tokens[idx][:, :, 1:])}
-        lr = tcfg.lr
-        if pub_payload is None:
-            params, opt_state, metrics = plain_step(params, opt_state, batch,
-                                                    lr)
-        else:
-            pb = np.stack([r.integers(0, len(public_tokens),
-                                      size=min(4, len(public_tokens)))
-                           for r in rngs])
-            batch["pub_tokens"] = jnp.asarray(public_tokens[pb])
-            nidx = np.arange(n)[:, None]
-            batch["pub_vals"] = jnp.asarray(pub_payload["vals"][nidx, pb])
-            batch["pub_idx"] = jnp.asarray(pub_payload["idx"][nidx, pb])
-            batch["pub_w"] = jnp.asarray(pub_payload["w"][nidx, pb])
-            params, opt_state, metrics = kd_step(params, opt_state, batch, lr)
-        if step_i % log_every == 0 or step_i == tcfg.steps - 1:
-            history.append(float(metrics["loss"]))
+        params, opt_state, key, losses = runner(
+            params, opt_state, key, jnp.asarray(a, jnp.int32), b - a)
+        last = b - 1
+        if last % log_every == 0 or last == tcfg.steps - 1:
+            history.append(float(losses[-1]))
             if verbose:
-                print(f"[train] step {step_i}: loss {history[-1]:.4f} "
+                print(f"[train] step {last}: loss {history[-1]:.4f} "
                       f"({time.time()-t0:.1f}s)", flush=True)
     return {"params": consensus_params(params), "loss_history": history,
-            "model": model}
+            "model": model, "topology": topo}
 
 
 def main():
@@ -173,7 +163,11 @@ def main():
     ap.add_argument("--steps", type=int, default=40)
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--topology", default="ring")
     ap.add_argument("--idkd", action="store_true")
+    ap.add_argument("--wire-dtype", default="native",
+                    choices=["native", "float32"])
+    ap.add_argument("--driver", default="scan", choices=["scan", "host"])
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-reduced) config — TPU scale")
     args = ap.parse_args()
@@ -182,9 +176,11 @@ def main():
         cfg = cfg.reduced()
     tcfg = TrainConfig(num_nodes=args.nodes, steps=args.steps, lr=0.1,
                        alpha=args.alpha, batch_size=8,
+                       topology=args.topology,
                        idkd=IDKDConfig(start_step=args.steps // 2,
                                        label_topk=8))
-    out = run_training(cfg, tcfg, use_idkd=args.idkd)
+    out = run_training(cfg, tcfg, use_idkd=args.idkd,
+                       wire_dtype=args.wire_dtype, driver_mode=args.driver)
     print(f"final loss: {out['loss_history'][-1]:.4f}")
 
 

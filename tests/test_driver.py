@@ -1,0 +1,264 @@
+"""Unified decentralized driver tests (core/driver.py).
+
+* scan-driver vs host-loop equivalence on fixed seeds — both runners
+  consume identical PRNG key sequences, so trajectories must match to
+  float tolerance (sim + LM paths, plain + KD phases);
+* launch params-gossip and label-exchange share one ``tcfg.topology``;
+* the T²-scaled KD temperature convention, pinned across both drivers;
+* deterministic test-set eval (no wraparound double-counting);
+* on-device sampler unit behaviour.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.configs.resnet20_cifar import SMALL_CONFIG
+from repro.core import distill, driver
+from repro.core.mixing import make_dense_mixer
+from repro.core.simulator import DecentralizedSimulator
+from repro.core.topology import Topology
+from repro.data.synthetic import make_classification_data, make_public_data
+from repro.launch.train import make_gossip_mixer, run_training
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    data = make_classification_data(image_size=8, n_train=512, n_val=64,
+                                    n_test=300, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=128, kind="aligned", seed=1)
+    return data, pub
+
+
+@pytest.fixture(scope="module")
+def mcfg():
+    return SMALL_CONFIG.replace(image_size=8)
+
+
+# ------------------------------------------------- scan == host (sim path)
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_sim_scan_equals_host(tiny_data, mcfg, backend):
+    """Same seeds → identical trajectories from the scan and host runners,
+    through both the plain phase and the KD phase (label backend dense or
+    sparse payloads)."""
+    data, pub = tiny_data
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=3, alpha=0.05,
+                       steps=8, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=4, temperature=10.0,
+                                       label_topk=4, label_backend=backend))
+    runs = {}
+    for mode in ("scan", "host"):
+        sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                     eval_every=3, driver_mode=mode)
+        runs[mode] = sim.run()
+    assert np.allclose(runs["scan"].acc_history, runs["host"].acc_history,
+                       atol=1e-5)
+    assert np.allclose(runs["scan"].loss_history, runs["host"].loss_history,
+                       atol=1e-4)
+    # consensus distances are ~1e-6 (same-init nodes barely diverge in 8
+    # steps): compare loosely — fp reassociation between the scan-compiled
+    # and per-step-compiled executables moves the last couple of digits
+    assert np.allclose(runs["scan"].consensus_history,
+                       runs["host"].consensus_history, rtol=0.05, atol=1e-8)
+
+
+def test_sim_plain_scan_equals_host(tiny_data, mcfg):
+    data, _ = tiny_data
+    tcfg = TrainConfig(algorithm="dsgd", num_nodes=3, alpha=0.1, steps=6,
+                       batch_size=8, lr=0.2, seed=7)
+    runs = {}
+    for mode in ("scan", "host"):
+        sim = DecentralizedSimulator(mcfg, tcfg, data, None, kd_mode=None,
+                                     eval_every=5, driver_mode=mode)
+        runs[mode] = sim.run()
+    assert np.allclose(runs["scan"].acc_history, runs["host"].acc_history,
+                       atol=1e-5)
+
+
+# -------------------------------------------------- scan == host (LM path)
+def _lm_cfg():
+    from repro.configs import get_config
+    return get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+
+
+@pytest.mark.parametrize("use_idkd", [False, True])
+def test_lm_scan_equals_host(use_idkd):
+    cfg = _lm_cfg()
+    tcfg = TrainConfig(num_nodes=2, steps=6, lr=0.1, alpha=0.1, batch_size=4,
+                       idkd=IDKDConfig(start_step=3, label_topk=4,
+                                       kd_weight=0.3))
+    hist = {}
+    for mode in ("scan", "host"):
+        out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                           use_idkd=use_idkd, log_every=2, verbose=False,
+                           driver_mode=mode)
+        hist[mode] = out["loss_history"]
+    assert np.allclose(hist["scan"], hist["host"], rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------ launch topology unification
+def test_launch_gossip_follows_tcfg_topology():
+    """The launch driver's params-gossip mixer is built from
+    ``tcfg.topology`` — the same graph the IDKD label exchange uses — not
+    a hardwired ring."""
+    tcfg = TrainConfig(num_nodes=9, topology="torus")
+    topo, mixer = make_gossip_mixer(tcfg)
+    assert topo.name == "torus9"
+    rng = np.random.default_rng(0)
+    x = {"w": jnp.asarray(rng.normal(size=(9, 5, 3)), jnp.float32)}
+    torus_ref = make_dense_mixer(topo.mixing_matrix())(x)
+    ring_ref = make_dense_mixer(
+        Topology.make("ring", 9).mixing_matrix())(x)
+    assert np.allclose(np.asarray(mixer(x)["w"]), np.asarray(torus_ref["w"]),
+                       atol=1e-5)
+    assert not np.allclose(np.asarray(mixer(x)["w"]),
+                           np.asarray(ring_ref["w"]), atol=1e-3)
+
+
+def test_run_training_shares_topology_with_label_round():
+    """End to end on a non-ring graph: run_training reports the one
+    Topology object used for both gossip and the label round."""
+    cfg = _lm_cfg()
+    tcfg = TrainConfig(num_nodes=4, steps=4, lr=0.1, batch_size=4,
+                       topology="full",
+                       idkd=IDKDConfig(start_step=2, label_topk=4,
+                                       kd_weight=0.3))
+    out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                       use_idkd=True, log_every=2, verbose=False)
+    assert out["topology"].name == "full4"
+    assert all(np.isfinite(out["loss_history"]))
+
+
+# ------------------------------------------------ KD temperature convention
+class _ToyLM:
+    """Minimal model: fixed logits, fixed base loss — isolates the KD term."""
+    BASE = 2.5
+
+    def __init__(self, vocab=16):
+        self.vocab = vocab
+
+    def forward(self, params, batch):
+        B, S = batch["tokens"].shape
+        logits = jnp.broadcast_to(params["w"], (B, S, self.vocab))
+        return logits, jnp.zeros(())
+
+    def loss(self, params, batch):
+        return jnp.asarray(self.BASE) + 0.0 * params["w"].sum(), {}
+
+
+def test_kd_temperature_convention():
+    """Both drivers use distill's T²-scaled KD losses verbatim: the LM
+    adapter's KD term carries Hinton's T² factor (the seed divided it
+    back out, so sim and launch disagreed by T² = 100 at T = 10)."""
+    T, kd_w = 10.0, 0.5
+    icfg = IDKDConfig(temperature=T, kd_weight=kd_w, label_topk=4)
+    model = _ToyLM()
+    params = {"w": jnp.linspace(-1.0, 1.0, model.vocab)}
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.zeros((2, 3), jnp.int32),
+        "labels": jnp.zeros((2, 3), jnp.int32),
+        "pub_tokens": jnp.zeros((2, 3), jnp.int32),
+        "pub_vals": jnp.asarray(rng.dirichlet(np.ones(4), size=(2, 3)),
+                                jnp.float32),
+        "pub_idx": jnp.asarray(rng.integers(0, 16, size=(2, 3, 4)),
+                               jnp.int32),
+        "pub_w": jnp.asarray([1.0, 0.5], jnp.float32),
+    }
+    loss = driver.lm_sparse_kd_adapter(icfg)(model)(params, batch)
+    logits, _ = model.forward(params, {"tokens": batch["pub_tokens"]})
+    kd = distill.sparse_kd_loss(
+        logits, distill.SparseLabels(batch["pub_vals"], batch["pub_idx"]), T)
+    kd = float(jnp.sum(kd.mean(-1) * batch["pub_w"])
+               / jnp.sum(batch["pub_w"]))
+    expected = _ToyLM.BASE + kd_w * kd
+    assert float(loss) == pytest.approx(expected, rel=1e-5)
+    # the un-T²-scaled (seed launch) convention must NOT match
+    assert float(loss) != pytest.approx(_ToyLM.BASE + kd_w * kd / T ** 2,
+                                        rel=1e-3)
+    # and distill itself pins the T² factor: kd_loss == T² · soft-CE
+    sl = jnp.asarray(rng.normal(size=(3, 8)), jnp.float32)
+    probs = distill.soft_labels(sl, T)
+    ce = -jnp.sum(probs * jax.nn.log_softmax(sl / T, -1), -1)
+    assert np.allclose(np.asarray(distill.kd_loss(sl, probs, T)),
+                       np.asarray(T ** 2 * ce), rtol=1e-5)
+
+
+# ----------------------------------------------------- deterministic eval
+def test_eval_covers_test_set_deterministically(tiny_data, mcfg):
+    """_eval == exact full-test-set metrics when eval_batches suffices
+    (no 256-batch wraparound double-counting; N=300 exercises the ragged
+    final batch)."""
+    data, _ = tiny_data
+    tcfg = TrainConfig(num_nodes=3, steps=2, batch_size=8, seed=0)
+    sim = DecentralizedSimulator(mcfg, tcfg, data, None, eval_batches=50)
+    params = sim._stacked_init()
+    acc, nll = sim._eval(params)
+    mean_p = jax.tree.map(lambda t: jnp.mean(t, axis=0), params)
+    logits, _ = sim.model.forward(mean_p,
+                                  {"images": jnp.asarray(data.test_x)})
+    acc_ref = float(jnp.mean(
+        (jnp.argmax(logits, -1) == jnp.asarray(data.test_y))
+        .astype(jnp.float32)))
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll_ref = float(-jnp.mean(jnp.take_along_axis(
+        logp, jnp.asarray(data.test_y)[:, None], 1)))
+    assert acc == pytest.approx(acc_ref, abs=1e-5)
+    assert nll == pytest.approx(nll_ref, abs=1e-4)
+    # repeated calls are deterministic
+    assert sim._eval(params) == (acc, nll)
+
+
+# ------------------------------------------------------ on-device sampling
+def test_sample_partition_respects_membership():
+    parts = driver.pad_partitions([np.asarray([5, 6, 7]),
+                                   np.asarray([10]),
+                                   np.asarray([], np.int64)])
+    idx = np.asarray(driver.sample_partition(parts, jax.random.PRNGKey(0),
+                                             batch_size=64))
+    assert idx.shape == (3, 64)
+    assert set(idx[0]) <= {5, 6, 7}
+    assert set(idx[1]) == {10}
+    assert set(idx[2]) == {0}            # empty partition → masked index 0
+    assert int(parts.size[2]) == 0
+
+
+def test_samplers_reject_empty_private_partition():
+    """The host samplers raised on empty partitions (np choice); the
+    device samplers must too, instead of silently training on index 0."""
+    parts = driver.pad_partitions([np.arange(4), np.asarray([], np.int64)])
+    x = np.zeros((4, 2, 2, 1), np.float32)
+    y = np.zeros((4,), np.int64)
+    with pytest.raises(ValueError, match="empty private"):
+        driver.make_classification_sampler(parts, x, y, 4, 2)
+    with pytest.raises(ValueError, match="empty private"):
+        driver.make_lm_sampler(parts, np.zeros((4, 9), np.int32), 2)
+
+
+def test_homogenized_sampler_merges_sources():
+    rng = np.random.default_rng(0)
+    n, B, C, P = 2, 256, 4, 6
+    train_x = rng.normal(size=(12, 2, 2, 1)).astype(np.float32)
+    train_y = rng.integers(0, C, size=12)
+    public_x = rng.normal(size=(P, 2, 2, 1)).astype(np.float32) + 100.0
+    weights = np.asarray([[1, 1, 0, 0, 1, 0], [0, 0, 0, 0, 0, 0]],
+                         np.float32)
+    priv = driver.pad_partitions([np.arange(6), np.arange(6, 12)])
+    pub = driver.pad_partitions([np.flatnonzero(w) for w in weights])
+    labels = rng.dirichlet(np.ones(C), size=(n, P)).astype(np.float32)
+    sample = driver.make_homogenized_sampler(
+        priv, pub, train_x, train_y, public_x, weights, labels, C, B)
+    batch = sample(jax.random.PRNGKey(1), jnp.asarray(0))
+    is_pub = np.asarray(batch["is_pub"])
+    # node 1 has an empty D_ID → never draws public
+    assert not is_pub[1].any() and is_pub[0].any()
+    # images selected from the right source (public shifted by +100)
+    assert (np.asarray(batch["images"])[is_pub] > 50).all()
+    assert (np.asarray(batch["images"])[~is_pub] < 50).all()
+    # private rows carry one-hot labels, weight 1
+    lab = np.asarray(batch["labels"])
+    assert np.allclose(lab[~is_pub].max(-1), 1.0)
+    assert np.allclose(np.asarray(batch["weights"])[~is_pub], 1.0)
