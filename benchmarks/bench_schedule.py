@@ -1,0 +1,120 @@
+"""Federation scheduler benchmark: round count × scenario grid.
+
+Times the scheduler-driven simulator (``repro.sched`` + ``core.driver``)
+end to end for {1, 4, 16}-round schedules × {static ring, churn, rewire}
+scenarios at the bench_driver node scale, and records each run's
+per-round communication ledger (wire-dtype-aware param gossip + label
+payload bytes, per node per round). Writes ``BENCH_schedule.json``.
+
+The interesting ratios:
+
+* ``us_per_step`` across round counts — what a 16× rehomogenization
+  schedule costs over one-shot IDKD (labeling rounds + sampler ctx
+  refreshes; the ctx rides through one compiled runner, so extra rounds
+  cost labeling work, not recompiles);
+* churn / rewire vs static — the masked-mixer / remade-step compiles are
+  cached per availability mask, so a down-up cycle costs two compiles,
+  not one per chunk.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro import sched
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.configs.resnet20_cifar import SMALL_CONFIG
+from repro.core.simulator import DecentralizedSimulator
+from repro.data.synthetic import make_classification_data, make_public_data
+
+NODES = 8
+STEPS = 36
+EVAL_EVERY = 18
+START = 2          # first homogenization step
+ROUND_GRID = (1, 4, 16)
+SCENARIOS = ("static_ring", "churn", "rewire")
+
+
+def _scenario_events(name: str):
+    if name == "static_ring":
+        return ()
+    if name == "churn":
+        # one node drops for the middle third, another straggles briefly
+        return (sched.ChurnEvent(step=STEPS // 3, down=(NODES - 1,)),
+                sched.ChurnEvent(step=2 * STEPS // 3, up=(NODES - 1,)))
+    if name == "rewire":
+        return (sched.RewireEvent(step=STEPS // 2, topology="exponential"),)
+    raise ValueError(name)
+
+
+def _make_sim(rounds: int):
+    data = make_classification_data(image_size=8, n_train=1024, n_val=64,
+                                    n_test=128, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=256, kind="aligned", seed=1)
+    mcfg = SMALL_CONFIG.replace(image_size=8, cnn_stages=(1, 1, 1),
+                                cnn_width=8)
+    every_k = sched.fit_every_k(STEPS - 2, START, rounds)
+    tcfg = TrainConfig(num_nodes=NODES, steps=STEPS, batch_size=16, seed=4,
+                       idkd=IDKDConfig(start_step=START, temperature=10.0,
+                                       every_k_steps=every_k,
+                                       num_rounds=rounds))
+    return DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                  eval_every=EVAL_EVERY)
+
+
+def _cell(scenario: str, rounds: int):
+    sim = _make_sim(rounds)
+    schedule = sched.compile_schedule(
+        STEPS, EVAL_EVERY,
+        round_steps=sim.default_schedule().round_steps,
+        events=_scenario_events(scenario))
+    r = sim.run(schedule=schedule)          # warm-up: compiles + first run
+    t0 = time.time()
+    r = sim.run(schedule=schedule)
+    wall = time.time() - t0
+    return {
+        "scenario": scenario,
+        "rounds_requested": rounds,
+        "rounds_fired": len(r.rounds),
+        "us_per_step": round(wall / STEPS * 1e6, 1),
+        "wall_s": round(wall, 3),
+        "final_acc": round(r.final_acc, 4),
+        "gossip_bytes": r.ledger["gossip_bytes"],
+        "label_bytes": r.ledger["label_bytes"],
+        "per_round": r.ledger["per_round"],
+    }
+
+
+def run(out_path: str | None = "BENCH_schedule.json"):
+    csv, cells = [], []
+    for scenario in SCENARIOS:
+        for rounds in ROUND_GRID:
+            cell = _cell(scenario, rounds)
+            cells.append(cell)
+            name = f"schedule/{scenario}_r{rounds}"
+            csv.append((name, cell["us_per_step"],
+                        f"{cell['rounds_fired']} rounds, "
+                        f"{cell['label_bytes']/1e3:.1f}kB labels"))
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump({"meta": {
+                "nodes": NODES, "steps": STEPS,
+                "eval_every": EVAL_EVERY,
+                "round_grid": list(ROUND_GRID),
+                "scenarios": list(SCENARIOS),
+                "jax_backend": jax.default_backend(),
+                "what": ("scheduler-driven simulator µs/step (second run "
+                         "after warm-up) per {rounds}×{scenario} cell, "
+                         "with the per-round communication ledger "
+                         "(param-gossip + label payload bytes per node)")},
+                "cells": cells}, f, indent=2)
+            f.write("\n")
+    return [], csv
+
+
+if __name__ == "__main__":
+    for row in run()[1]:
+        print(",".join(str(x) for x in row))

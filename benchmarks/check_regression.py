@@ -1,0 +1,103 @@
+"""Bench regression guard: fresh BENCH_*.json vs the committed baseline.
+
+Extracts every named hot-path metric (``us_per_step`` / ``us_per_call`` /
+``wall_s`` leaves, named by the string fields of their enclosing cell)
+from both documents and fails when any shared metric slowed down by more
+than ``--threshold`` (default 1.5×). Metrics present on only one side are
+reported but never fail the guard — benches are allowed to grow cells.
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_driver.json --fresh /tmp/BENCH_driver.json \
+        [--threshold 1.5] [--include 'scan|host']
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict
+
+METRIC_KEYS = ("us_per_step", "us_per_call", "wall_s")
+
+
+def extract_metrics(doc, metric_keys=METRIC_KEYS) -> Dict[str, float]:
+    """name -> value for every metric leaf. A cell's name is built from
+    its own string/bool fields (order-stable), so it survives list
+    reordering between bench runs."""
+    out: Dict[str, float] = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            labels = "|".join(
+                f"{k}={node[k]}" for k in sorted(node)
+                if isinstance(node[k], (str, bool)) or
+                (isinstance(node[k], int) and k not in metric_keys))
+            for k in sorted(node):
+                v = node[k]
+                if k in metric_keys and isinstance(v, (int, float)):
+                    name = "/".join([p for p in path if p] + [labels, k])
+                    while name in out:       # collisions get a suffix
+                        name += "+"
+                    out[name] = float(v)
+                elif isinstance(v, (dict, list)):
+                    walk(v, path + [k])
+        elif isinstance(node, list):
+            for v in node:
+                walk(v, path)
+
+    walk(doc, [])
+    return out
+
+
+def compare(baseline: Dict[str, float], fresh: Dict[str, float],
+            threshold: float, include: str = "") -> int:
+    """Print the comparison; return the number of failures (>threshold
+    slowdowns, or 1 when the documents share no metrics at all)."""
+    pat = re.compile(include) if include else None
+    shared = sorted(set(baseline) & set(fresh))
+    if pat is not None:
+        shared = [n for n in shared if pat.search(n)]
+    regressions = 0
+    for name in shared:
+        base, new = baseline[name], fresh[name]
+        ratio = new / base if base > 0 else float("inf") if new > 0 else 1.0
+        flag = ""
+        if ratio > threshold:
+            regressions += 1
+            flag = f"  << REGRESSION (> {threshold:.2f}x)"
+        print(f"{name}: {base:.1f} -> {new:.1f} ({ratio:.2f}x){flag}")
+    for name in sorted(set(baseline) ^ set(fresh)):
+        side = "baseline" if name in baseline else "fresh"
+        print(f"{name}: only in {side} (skipped)")
+    if not shared:
+        # schema/label drift must fail loudly, not leave CI green with a
+        # guard that checks nothing
+        print("ERROR: no shared metrics between baseline and fresh "
+              "documents — refresh the committed baseline")
+        return 1
+    return regressions
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--threshold", type=float, default=1.5)
+    ap.add_argument("--include", default="",
+                    help="regex filter on metric names (default: all)")
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        base = extract_metrics(json.load(f))
+    with open(args.fresh) as f:
+        fresh = extract_metrics(json.load(f))
+    bad = compare(base, fresh, args.threshold, args.include)
+    if bad:
+        print(f"\nbench regression guard failed ({bad} issue(s), "
+              f"threshold {args.threshold:.2f}x)")
+        sys.exit(1)
+    print("\nno bench regressions")
+
+
+if __name__ == "__main__":
+    main()

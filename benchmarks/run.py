@@ -17,9 +17,9 @@ import traceback
 sys.path.insert(0, "src")
 
 from benchmarks import (bench_driver, bench_kernels,  # noqa: E402
-                        fig3_homogenize, roofline, table2_noniid,
-                        table3_topology, table4_public, table6_comm,
-                        table7_scale)
+                        bench_schedule, fig3_homogenize, roofline,
+                        table2_noniid, table3_topology, table4_public,
+                        table6_comm, table7_scale)
 
 SECTIONS = {
     "table2": lambda: table2_noniid.run(),
@@ -31,6 +31,7 @@ SECTIONS = {
     "kernels": lambda: bench_kernels.run(),
     "labeling": lambda: bench_kernels.bench_labeling(),
     "driver": lambda: bench_driver.run(),
+    "schedule": lambda: bench_schedule.run(),
     "roofline": lambda: roofline.run(),
 }
 

@@ -312,8 +312,15 @@ class IDKDConfig:
 
     temperature: float = 10.0       # best distillation temperature (paper §4.2)
     start_step: int = 0             # "local convergence" trigger
-    every_k_steps: int = 100        # label-exchange period (paper: k epochs)
-    kd_weight: float = 1.0          # weight of soft-CE on D_ID
+    every_k_steps: int = 100        # label-exchange period: rounds fire at
+                                    # start_step + j*every_k_steps for
+                                    # j < num_rounds (sched.idkd_round_steps)
+    num_rounds: int = 1             # homogenization rounds in the schedule
+                                    # (1 = the paper's single round at
+                                    # start_step; the federation scheduler
+                                    # re-labels every round)
+    kd_weight: float = 1.0          # weight of soft-CE on D_ID (applied in
+                                    # every KD adapter, cls and LM alike)
     label_topk: int = 0             # 0 => dense soft labels (paper);
                                     # >0 => top-k sparse (LLM-scale codec)
     detector: str = "msp"

@@ -128,27 +128,50 @@ def make_qg_dsgdm_n(momentum: float = 0.9, weight_decay: float = 1e-4,
     displacement — instead of the biased local gradient. With ``normalize``
     the local stochastic gradient is L2-normalized (the “-N” variant),
     making the local step scale-free under heterogeneous gradients.
+
+    The step is *fused* into four whole-tree passes — the grad-norm
+    reduction (weight decay folded in), one map computing the momentum
+    half-step x − η(βm + ĝ), the gossip mix, and one map for the
+    momentum EMA from the total displacement. The unfused form walked the
+    tree ~9 times (wd, norm, scale, two axpys, mix, sub, scale, EMA),
+    which on CPU dominated the step with hundreds of tiny thunks at small
+    scale (ROADMAP thunk-floor item; measured in bench_driver).
     """
     def init(params):
         return {"m": tree_zeros_like(params)}
 
     def step(params, grads, state, lr, mix: Mixer):
-        grads = _apply_weight_decay(params, grads, weight_decay)
+        wd = weight_decay
         if normalize:
-            gn = global_grad_norm(grads)
-            grads = tree_scale(1.0 / (gn + eps), grads)
-        # local step with quasi-global momentum
-        upd = tree_axpy(momentum, state["m"], grads)
-        half = tree_axpy(-lr, upd, params)
-        # gossip
+            sq = jax.tree.map(
+                lambda g, p: jnp.sum((g.astype(jnp.float32)
+                                      + wd * p.astype(jnp.float32)) ** 2)
+                if wd else jnp.sum(g.astype(jnp.float32) ** 2),
+                grads, params)
+            scale = 1.0 / (jnp.sqrt(sum(jax.tree.leaves(sq))) + eps)
+        else:
+            scale = 1.0
+
+        def half_leaf(p, g, m):
+            gf = g.astype(jnp.float32)
+            if wd:
+                gf = gf + wd * p.astype(jnp.float32)
+            gf = scale * gf
+            upd = momentum * m.astype(jnp.float32) + gf
+            return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+
+        half = jax.tree.map(half_leaf, params, grads, state["m"])
         new_params = mix(half)
-        # quasi-global momentum update from total displacement
-        d = tree_scale(1.0 / lr, tree_sub(params, new_params))
-        m = jax.tree.map(
-            lambda mi, di: (momentum * mi.astype(jnp.float32)
-                            + (1 - momentum) * di.astype(jnp.float32)
-                            ).astype(mi.dtype), state["m"], d)
-        return new_params, {"m": m}
+
+        inv_lr = 1.0 / lr
+
+        def m_leaf(m, p, y):
+            d = (p.astype(jnp.float32) - y.astype(jnp.float32)) * inv_lr
+            return (momentum * m.astype(jnp.float32)
+                    + (1 - momentum) * d).astype(m.dtype)
+
+        new_m = jax.tree.map(m_leaf, state["m"], params, new_params)
+        return new_params, {"m": new_m}
 
     return Algorithm("qg-dsgdm-n", init, step)
 

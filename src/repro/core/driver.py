@@ -80,24 +80,28 @@ def classification_adapter(model) -> NodeLoss:
     return node_loss
 
 
-def dense_kd_adapter(temperature: float) -> LossAdapter:
+def dense_kd_adapter(temperature: float,
+                     kd_weight: float = 1.0) -> LossAdapter:
     """Private rows: hard CE. Public rows: T²-scaled KD loss (the one
     distillation convention, ``distill.kd_loss`` — Hinton's T² factor
-    keeps KD gradients comparable to the hard-CE gradients)."""
+    keeps KD gradients comparable to the hard-CE gradients), scaled by
+    ``IDKDConfig.kd_weight`` (the LM adapter always honoured it; the
+    classification adapters silently dropped it)."""
     def adapter(model) -> NodeLoss:
         def node_loss(params, batch):
             logits, _ = model.forward(params, {"images": batch["images"]})
             logp = jax.nn.log_softmax(logits.astype(jnp.float32))
             hard_nll = -jnp.sum(batch["labels"] * logp, axis=-1)
             kd = distill.kd_loss(logits, batch["labels"], temperature)
-            nll = jnp.where(batch["is_pub"], kd, hard_nll)
+            nll = jnp.where(batch["is_pub"], kd_weight * kd, hard_nll)
             w = batch["weights"]
             return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
         return node_loss
     return adapter
 
 
-def sparse_kd_adapter(temperature: float) -> LossAdapter:
+def sparse_kd_adapter(temperature: float,
+                      kd_weight: float = 1.0) -> LossAdapter:
     """dense_kd on top-k sparse labels, never densified: private rows
     carry their one-hot as a k=1 sparse label, so hard CE is the T=1
     sparse soft-CE on the same payload."""
@@ -107,7 +111,7 @@ def sparse_kd_adapter(temperature: float) -> LossAdapter:
             sp = distill.SparseLabels(batch["values"], batch["indices"])
             hard_nll = distill.sparse_kd_loss(logits, sp, 1.0)
             kd = distill.sparse_kd_loss(logits, sp, temperature)
-            nll = jnp.where(batch["is_pub"], kd, hard_nll)
+            nll = jnp.where(batch["is_pub"], kd_weight * kd, hard_nll)
             w = batch["weights"]
             return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
         return node_loss
@@ -164,6 +168,34 @@ def make_step(model, algo, mixer, loss_adapter) -> Callable:
         return params, opt_state, jnp.mean(losses)
 
     step.init_opt = algo.init
+    return step
+
+
+def make_frozen_step(step_fn, active) -> Callable:
+    """Churn wrapper: nodes with ``active[i] == False`` hold their params
+    and node-stacked optimizer state — they neither train nor gossip
+    (pair with a masked mixer, ``make_mixer(..., active=...)``, so the
+    surviving nodes' Metropolis weights stay doubly stochastic). Leaves
+    without a leading node axis (e.g. D²'s scalar step counter) pass
+    through untouched. The per-step PRNG spend is unchanged — frozen
+    nodes still draw (and discard) their batches — so a node rejoining
+    later leaves every other node's trajectory byte-identical.
+    """
+    act = jnp.asarray(np.asarray(active, bool))
+    n = act.shape[0]
+
+    def select(new, old):
+        if new.ndim >= 1 and new.shape[0] == n:
+            return jnp.where(act.reshape((n,) + (1,) * (new.ndim - 1)),
+                             new, old)
+        return new
+
+    def step(params, opt_state, batch, lr):
+        new_p, new_o, loss = step_fn(params, opt_state, batch, lr)
+        return (jax.tree.map(select, new_p, params),
+                jax.tree.map(select, new_o, opt_state), loss)
+
+    step.init_opt = step_fn.init_opt
     return step
 
 
@@ -232,6 +264,35 @@ def make_classification_sampler(parts: PaddedParts, train_x, train_y,
     return sample
 
 
+def homogenized_ctx(hom_weights, payload, capacity: int) -> Dict:
+    """Round-varying KD sampler state as one pytree.
+
+    The scheduler refreshes the :func:`make_homogenized_sampler` between
+    chunks by passing a new ctx through the runner instead of rebuilding
+    (and recompiling) the sampler: padded public partitions are sized to
+    the fixed ``capacity`` (the public set size) so every round shares
+    one compiled executable. Keys: ``pub_idx`` (n, capacity), ``pub_size``
+    (n,), ``weights`` (n, P), and ``labels`` (dense) or
+    ``values``/``indices`` (sparse top-k payload).
+    """
+    w = np.asarray(hom_weights, np.float32)
+    n = w.shape[0]
+    idx = np.zeros((n, max(capacity, 1)), np.int32)
+    size = np.zeros((n,), np.int32)
+    for i, row in enumerate(w):
+        nz = np.flatnonzero(row > 0)
+        idx[i, :len(nz)] = nz
+        size[i] = len(nz)
+    ctx = {"pub_idx": jnp.asarray(idx), "pub_size": jnp.asarray(size),
+           "weights": jnp.asarray(w)}
+    if isinstance(payload, (tuple, list, distill.SparseLabels)):
+        ctx["values"] = jnp.asarray(payload[0])
+        ctx["indices"] = jnp.asarray(payload[1])
+    else:
+        ctx["labels"] = jnp.asarray(payload)
+    return ctx
+
+
 def make_homogenized_sampler(priv_parts: PaddedParts, pub_parts: PaddedParts,
                              train_x, train_y, public_x, hom_weights,
                              payload, num_classes: int,
@@ -244,6 +305,13 @@ def make_homogenized_sampler(priv_parts: PaddedParts, pub_parts: PaddedParts,
     ``payload`` is the post-round label payload: a dense (n, P, C) array,
     or a ``distill.SparseLabels`` / (values, indices) pair — sparse rides
     through un-densified, with private one-hots as k=1 sparse labels.
+
+    ``sample(key, step, ctx=None)``: with ``ctx`` (see
+    :func:`homogenized_ctx`) the round-varying state — D_ID membership,
+    weights, label payload — is read from the passed pytree instead of
+    the factory arguments, so repeated homogenization rounds reuse one
+    compiled runner. The draws are identical either way: partition
+    padding width never affects which indices are sampled.
     """
     _require_nonempty(priv_parts, "private")
     train_x = jnp.asarray(train_x)
@@ -251,30 +319,37 @@ def make_homogenized_sampler(priv_parts: PaddedParts, pub_parts: PaddedParts,
     public_x = jnp.asarray(public_x)
     hom_weights = jnp.asarray(hom_weights, jnp.float32)
     n = hom_weights.shape[0]
-    p_pub = pub_parts.size / jnp.maximum(priv_parts.size + pub_parts.size, 1)
     sparse = isinstance(payload, (tuple, list, distill.SparseLabels))
     if sparse:
-        pay_vals = jnp.asarray(payload[0])
-        pay_idx = jnp.asarray(payload[1])
+        default_ctx = {"pub_idx": pub_parts.idx, "pub_size": pub_parts.size,
+                       "weights": hom_weights,
+                       "values": jnp.asarray(payload[0]),
+                       "indices": jnp.asarray(payload[1])}
     else:
-        pay_dense = jnp.asarray(payload)
+        default_ctx = {"pub_idx": pub_parts.idx, "pub_size": pub_parts.size,
+                       "weights": hom_weights,
+                       "labels": jnp.asarray(payload)}
     nidx = jnp.arange(n)[:, None]
 
-    def sample(key, step) -> Batch:
+    def sample(key, step, ctx=None) -> Batch:
+        c = default_ctx if ctx is None else ctx
+        pub_c = PaddedParts(c["pub_idx"], c["pub_size"])
+        p_pub = c["pub_size"] / jnp.maximum(priv_parts.size + c["pub_size"],
+                                            1)
         kp, kq, ku = jax.random.split(key, 3)
         priv = sample_partition(priv_parts, kp, batch_size)    # (n, B)
-        pub = sample_partition(pub_parts, kq, batch_size)
+        pub = sample_partition(pub_c, kq, batch_size)
         u = jax.random.uniform(ku, priv.shape)
-        is_pub = (u < p_pub[:, None]) & (pub_parts.size > 0)[:, None]
+        is_pub = (u < p_pub[:, None]) & (c["pub_size"] > 0)[:, None]
         img_priv = train_x[priv]
         images = jnp.where(_bcast(is_pub, img_priv.ndim),
                            public_x[pub], img_priv)
-        weights = jnp.where(is_pub, hom_weights[nidx, pub], 1.0
+        weights = jnp.where(is_pub, c["weights"][nidx, pub], 1.0
                             ).astype(jnp.float32)
         batch = {"images": images, "weights": weights, "is_pub": is_pub}
         if sparse:
-            vals = pay_vals[nidx, pub]                         # (n, B, k)
-            cls = pay_idx[nidx, pub]
+            vals = c["values"][nidx, pub]                      # (n, B, k)
+            cls = c["indices"][nidx, pub]
             pv = jnp.zeros_like(vals).at[..., 0].set(1.0)
             pi = jnp.zeros_like(cls).at[..., 0].set(
                 train_y[priv].astype(cls.dtype))
@@ -284,7 +359,7 @@ def make_homogenized_sampler(priv_parts: PaddedParts, pub_parts: PaddedParts,
             lab_priv = jax.nn.one_hot(train_y[priv], num_classes,
                                       dtype=jnp.float32)
             batch["labels"] = jnp.where(is_pub[..., None],
-                                        pay_dense[nidx, pub], lab_priv)
+                                        c["labels"][nidx, pub], lab_priv)
         return batch
 
     return sample
@@ -303,26 +378,37 @@ def make_lm_sampler(parts: PaddedParts, tokens, batch_size: int) -> SampleFn:
     return sample
 
 
+def lm_kd_ctx(pub_vals, pub_idx, pub_w) -> Dict:
+    """Round-varying LM-KD sampler state (see :func:`make_lm_kd_sampler`):
+    the sparse label payload + weights refreshed by each homogenization
+    round, passed through the runner so one compiled executable serves
+    every round."""
+    return {"pub_vals": jnp.asarray(pub_vals),
+            "pub_idx": jnp.asarray(pub_idx),
+            "pub_w": jnp.asarray(pub_w, jnp.float32)}
+
+
 def make_lm_kd_sampler(parts: PaddedParts, tokens, batch_size: int,
                        public_tokens, pub_vals, pub_idx, pub_w,
                        pub_batch: int) -> SampleFn:
-    """LM batches + a per-node public sub-batch with its sparse payload."""
+    """LM batches + a per-node public sub-batch with its sparse payload.
+    ``sample(key, step, ctx=None)`` — ``ctx`` (:func:`lm_kd_ctx`)
+    overrides the factory payload for post-first-round refreshes."""
     base = make_lm_sampler(parts, tokens, batch_size)
     public_tokens = jnp.asarray(public_tokens)
-    pub_vals = jnp.asarray(pub_vals)
-    pub_idx = jnp.asarray(pub_idx)
-    pub_w = jnp.asarray(pub_w, jnp.float32)
-    n = pub_w.shape[0]
+    default_ctx = lm_kd_ctx(pub_vals, pub_idx, pub_w)
+    n = default_ctx["pub_w"].shape[0]
     nidx = jnp.arange(n)[:, None]
 
-    def sample(key, step) -> Batch:
+    def sample(key, step, ctx=None) -> Batch:
+        c = default_ctx if ctx is None else ctx
         k1, k2 = jax.random.split(key)
         batch = base(k1, step)
         pb = jax.random.randint(k2, (n, pub_batch), 0, len(public_tokens))
         batch["pub_tokens"] = public_tokens[pb]
-        batch["pub_vals"] = pub_vals[nidx, pb]
-        batch["pub_idx"] = pub_idx[nidx, pb]
-        batch["pub_w"] = pub_w[nidx, pb]
+        batch["pub_vals"] = c["pub_vals"][nidx, pb]
+        batch["pub_idx"] = c["pub_idx"][nidx, pb]
+        batch["pub_w"] = c["pub_w"][nidx, pb]
         return batch
 
     return sample
@@ -330,18 +416,21 @@ def make_lm_kd_sampler(parts: PaddedParts, tokens, batch_size: int,
 
 # ---------------------------------------------------------------- runners
 def make_scan_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
-    """``run(params, opt_state, key, step0, num_steps)`` — the whole chunk
-    of steps is one ``lax.scan`` under jit (sampling included): zero
-    per-step dispatch. ``step0`` is traced (chunks at different offsets
-    share one executable); ``num_steps`` is static (one compile per
-    distinct chunk length).
+    """``run(params, opt_state, key, step0, num_steps, ctx=None)`` — the
+    whole chunk of steps is one ``lax.scan`` under jit (sampling
+    included): zero per-step dispatch. ``step0`` is traced (chunks at
+    different offsets share one executable); ``num_steps`` is static (one
+    compile per distinct chunk length); ``ctx`` is the round-varying
+    sampler state (traced — the scheduler swaps label payloads between
+    homogenization rounds without triggering a recompile).
     """
     @functools.partial(jax.jit, static_argnums=(4,))
-    def run(params, opt_state, key, step0, num_steps):
+    def run(params, opt_state, key, step0, num_steps, ctx=None):
         def body(carry, t):
             params, opt_state, key = carry
             key, sub = jax.random.split(key)
-            batch = sample_fn(sub, step0 + t)
+            batch = (sample_fn(sub, step0 + t) if ctx is None
+                     else sample_fn(sub, step0 + t, ctx))
             params, opt_state, loss = step_fn(params, opt_state, batch,
                                               lr_fn(step0 + t))
             return (params, opt_state, key), loss
@@ -358,18 +447,19 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
     loop around one jitted step — the dispatch-overhead baseline. Key
     handling matches the scan body exactly, so trajectories agree."""
     @jax.jit
-    def one(params, opt_state, key, t):
+    def one(params, opt_state, key, t, ctx=None):
         key, sub = jax.random.split(key)
-        batch = sample_fn(sub, t)
+        batch = sample_fn(sub, t) if ctx is None else sample_fn(sub, t, ctx)
         params, opt_state, loss = step_fn(params, opt_state, batch,
                                           lr_fn(t))
         return params, opt_state, key, loss
 
-    def run(params, opt_state, key, step0, num_steps):
+    def run(params, opt_state, key, step0, num_steps, ctx=None):
         losses = []
         for t in range(num_steps):
             params, opt_state, key, loss = one(
-                params, opt_state, key, jnp.asarray(step0 + t, jnp.int32))
+                params, opt_state, key, jnp.asarray(step0 + t, jnp.int32),
+                ctx)
             losses.append(loss)
         return (params, opt_state, key,
                 jnp.stack(losses) if losses else jnp.zeros((0,), jnp.float32))

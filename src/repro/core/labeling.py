@@ -201,7 +201,7 @@ def _fused_pass(logits, cfg: IDKDConfig, k: int
 # ------------------------------------------------------------ full round
 def label_round(public_logits, val_logits, cal_logits, topology: Topology,
                 cfg: IDKDConfig, *, backend: str = "dense",
-                filter_ood: bool = True) -> HomogenizedResult:
+                filter_ood: bool = True, active=None) -> HomogenizedResult:
     """One IDKD homogenization round on node-stacked logits.
 
     public_logits: (n, P, C) or (n, P, S, V) — each node on the public set
@@ -213,6 +213,11 @@ def label_round(public_logits, val_logits, cal_logits, topology: Topology,
                    cannot see through tracers)
     filter_ood:    False = the ``kd_mode="vanilla"`` baseline (no detector:
                    every public sample is kept, thresholds are 0)
+    active:        optional (n,) availability mask (scheduler churn): a
+                   down node contributes no D_ID labels to the exchange
+                   and receives none (its weights come back all-zero), so
+                   repeated rounds under churn only ever move labels
+                   between live nodes
 
     Returns :class:`HomogenizedSet` (dense backend) or
     :class:`SparseHomogenizedSet` (fused / sparse backends).
@@ -241,14 +246,21 @@ def label_round(public_logits, val_logits, cal_logits, topology: Topology,
     else:
         thresholds = jnp.zeros((n,), jnp.float32)
         id_mask = jnp.ones(conf_pub.shape, bool)
+    if active is not None:
+        act = jnp.asarray(active, bool)
+        id_mask = id_mask & act[:, None]
 
     if backend == "dense":
         labels = distill.soft_labels(public_logits, cfg.temperature)
         avg, weights = exchange_dense(topology, id_mask, labels)
+        if active is not None:
+            weights = weights * act[:, None]
         return HomogenizedSet(avg, weights, id_mask, thresholds)
 
     if sparse is None:                                     # backend == sparse
         probs = distill.soft_labels(public_logits, cfg.temperature)
         sparse = distill.sparsify_labels(probs, k)
     merged, weights = exchange_sparse(topology, id_mask, sparse)
+    if active is not None:
+        weights = weights * act[:, None]
     return SparseHomogenizedSet(merged, weights, id_mask, thresholds)

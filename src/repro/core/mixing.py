@@ -67,17 +67,20 @@ def make_dense_mixer(W: np.ndarray, wire_dtype: str = "float32") -> Mixer:
     return mix
 
 
-def make_gather_mixer(topology: Topology,
-                      wire_dtype: str = "native") -> Mixer:
+def make_gather_mixer(topology: Topology, wire_dtype: str = "native",
+                      active=None) -> Mixer:
     """Neighbour-gather gossip on node-stacked pytrees.
 
     Row i combines x[nbr[i, d]] with the gathered Metropolis weights
     W[i, nbr[i, d]]; padding slots carry weight 0. Exactly equals the
     dense-W einsum (W is supported on self ∪ neighbours) at O(Σ deg)
-    work instead of O(n²).
+    work instead of O(n²). With an ``active`` mask the gathered weights
+    come from the masked Metropolis matrix (down nodes keep identity
+    rows, active ones renormalize over surviving neighbours) — same
+    gather structure, so churn costs no recompile of the index plumbing.
     """
     nbr, valid = topology.neighbor_arrays(include_self=True)
-    W = topology.mixing_matrix()
+    W = topology.mixing_matrix(active)
     w = W[np.arange(topology.n)[:, None], nbr] * valid      # (n, D)
     nbr_j = jnp.asarray(nbr)
     w_j = jnp.asarray(w, jnp.float32)
@@ -126,7 +129,8 @@ def make_roll_mixer(num_nodes: int, wire_dtype: str = "native") -> Mixer:
 
 
 def make_mixer(topology: Topology, backend: str = "auto",
-               wire_dtype: str = "native", **ppermute_kw) -> Mixer:
+               wire_dtype: str = "native", active=None,
+               **ppermute_kw) -> Mixer:
     """One entry point for every gossip backend (see module docstring).
 
     ``backend="auto"`` picks the roll fast path on rings (lowers to
@@ -138,19 +142,44 @@ def make_mixer(topology: Topology, backend: str = "auto",
     over the mesh axes only, so it too rejects non-ring topologies, and
     it always moves shards in their storage dtype (``wire_dtype`` other
     than "native" is rejected rather than silently dropped).
+
+    ``active`` is the churn path: an (n,) availability mask that switches
+    the mixing weights to the masked Metropolis matrix
+    (``Topology.mixing_matrix(active)`` — doubly stochastic on the active
+    subgraph, identity on down nodes). A ring with a hole is no longer a
+    ring, so ``auto`` routes masked rings to the gather backend and the
+    roll/ppermute fast paths reject masks. The node-stacked backends
+    (dense / gather / roll / auto) return a mixer carrying a
+    ``remake(active=...)`` handle that rebuilds the same
+    backend/wire-dtype mixer for a new availability mask — the scheduler
+    path as nodes leave and rejoin. The ppermute backend has no masked
+    path and no remake handle (shard_map gossip under churn is an open
+    item).
     """
+    requested = backend
+    masked = active is not None and not np.all(np.asarray(active, bool))
+    if not masked:
+        active = None
     if backend == "auto":
-        backend = "roll" if _is_ring(topology) else "gather"
+        backend = "roll" if _is_ring(topology) and not masked else "gather"
+    mix: Mixer
     if backend == "dense":
-        return make_dense_mixer(topology.mixing_matrix(), wire_dtype)
-    if backend == "gather":
-        return make_gather_mixer(topology, wire_dtype)
-    if backend == "roll":
+        mix = make_dense_mixer(topology.mixing_matrix(active), wire_dtype)
+    elif backend == "gather":
+        mix = make_gather_mixer(topology, wire_dtype, active)
+    elif backend == "roll":
+        if masked:
+            raise ValueError("roll mixer cannot mask churned nodes (a ring "
+                             "with a hole is not a ring); use backend="
+                             "'gather' or 'auto' for time-varying masks")
         if not _is_ring(topology):
             raise ValueError(
                 f"roll mixer requires a ring topology, got {topology.name!r}")
-        return make_roll_mixer(topology.n, wire_dtype)
-    if backend == "ppermute":
+        mix = make_roll_mixer(topology.n, wire_dtype)
+    elif backend == "ppermute":
+        if masked:
+            raise ValueError("ppermute mixer has no masked path; churn "
+                             "runs use the gather/dense backends")
         if not _is_ring(topology):
             raise ValueError("ppermute mixer implements ring/ring-of-rings "
                              f"gossip over mesh axes; got {topology.name!r}")
@@ -158,8 +187,12 @@ def make_mixer(topology: Topology, backend: str = "auto",
             raise ValueError("ppermute mixer moves shards in their storage "
                              f"dtype; wire_dtype={wire_dtype!r} unsupported")
         return make_ppermute_mixer(**ppermute_kw)
-    raise ValueError(f"unknown mixer backend {backend!r}; expected one of "
-                     "('auto', 'dense', 'gather', 'roll', 'ppermute')")
+    else:
+        raise ValueError(f"unknown mixer backend {backend!r}; expected one "
+                         "of ('auto', 'dense', 'gather', 'roll', 'ppermute')")
+    mix.remake = lambda active=None: make_mixer(topology, requested,
+                                                wire_dtype, active=active)
+    return mix
 
 
 # ---------------------------------------------------------------------------

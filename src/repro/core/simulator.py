@@ -11,6 +11,16 @@ and the inner loop executes as ``lax.scan`` chunks between eval
 boundaries (``driver_mode="auto"`` keeps conv models on the per-step
 host runner on CPU — DESIGN.md §5 CPU caveats).
 
+The *outer* loop is the federation scheduler (``repro.sched``, DESIGN.md
+§6): ``run()`` compiles a :class:`~repro.sched.Schedule` (or accepts a
+custom one) and replays it through ``sched.run_schedule`` — periodic
+re-homogenization rounds every ``IDKDConfig.every_k_steps``, churn
+(nodes dropping out and rejoining with masked Metropolis mixing), graph
+rewires, mid-run checkpoint capture/resume, and a unified per-round
+communication ledger all ride on that one loop. A 1-round schedule is
+byte-identical to the pre-scheduler behaviour (degenerate-schedule
+equivalence).
+
 Supports the full method grid of Tables 2–7:
   * algorithms: dsgd / dsgdm / qg-dsgdm-n / d2 / relaysgd / centralized
   * ``kd_mode``: None (no distillation), "vanilla" (no OoD filter — the
@@ -20,16 +30,17 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sched
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
 from repro.core import distill, driver, idkd, labeling
 from repro.core.algorithms import make_algorithm
-from repro.core.mixing import consensus_distance, make_dense_mixer
+from repro.core.mixing import consensus_distance, make_mixer
 from repro.core.topology import Topology
 from repro.data.dirichlet import dirichlet_partition, partition_stats
 from repro.data.synthetic import ClassificationData
@@ -50,6 +61,121 @@ class SimResult:
     comm_bytes_per_iter: float = 0.0
     label_bytes_total: float = 0.0
     wall_seconds: float = 0.0
+    rounds: List[Dict] = field(default_factory=list)  # per-round diagnostics
+    ledger: Optional[Dict] = None            # sched.CommLedger.as_dict()
+    captured: Optional[Dict] = None          # run(capture_at=...) snapshot
+
+
+class _SimFederation(sched.CompiledFederationHooks):
+    """Scheduler hooks binding the simulator's samplers, steps, and
+    mixers to the federation loop (cache machinery lives on
+    :class:`sched.CompiledFederationHooks`); the prebuilt default-mixer
+    steps from ``sim._build_jits`` are reused for the all-up mask on the
+    run's own gossip graph."""
+
+    def __init__(self, sim: "DecentralizedSimulator", result: SimResult,
+                 idkd_cfg: IDKDConfig):
+        super().__init__()
+        self.sim = sim
+        self.model = sim.model
+        self.algo = sim.algo
+        self.lr_fn = sim.lr_fn
+        self.driver_mode = sim.driver_mode
+        self.result = result
+        self.idkd_cfg = idkd_cfg
+        self.sparse_round = False
+        self.priv_parts = driver.pad_partitions(sim.parts)
+        self.plain_sampler = driver.make_classification_sampler(
+            self.priv_parts, sim.data.train_x, sim.data.train_y,
+            sim.mcfg.num_classes, sim.tcfg.batch_size)
+        self.kd_sampler = None
+
+    def reset(self, result: SimResult) -> None:
+        """Rebind for a fresh run, keeping the compiled mixer/step/runner
+        caches (repeated ``sim.run()`` calls — the bench warm-up path and
+        checkpoint-resume runs — pay zero recompiles)."""
+        self.result = result
+        self.phase = "plain"
+        self.ctx = None
+        self.sparse_round = False
+
+    # ----------------------------------------------------- cache plumbing
+    def _make_mixer(self, topo: Topology, active):
+        if active is None and topo.edge_key() == \
+                self.sim.gossip_topo.edge_key():
+            return self.sim.mixer
+        return make_mixer(topo, "dense", wire_dtype="float32",
+                          active=active)
+
+    def _adapter(self):
+        return {
+            "plain": driver.classification_adapter,
+            "kd_dense": driver.dense_kd_adapter(
+                self.idkd_cfg.temperature, self.idkd_cfg.kd_weight),
+            "kd_sparse": driver.sparse_kd_adapter(
+                self.idkd_cfg.temperature, self.idkd_cfg.kd_weight),
+        }[self.phase]
+
+    def _sampler(self):
+        return (self.plain_sampler if self.phase == "plain"
+                else self.kd_sampler)
+
+    def _base_step(self, topo: Topology, active: np.ndarray):
+        sim = self.sim
+        if active.all() and topo.edge_key() == sim.gossip_topo.edge_key():
+            return {"plain": sim._plain_step, "kd_dense": sim._kd_step,
+                    "kd_sparse": sim._sparse_kd_step}[self.phase]
+        return super()._base_step(topo, active)
+
+    # -------------------------------------------------------------- hooks
+    def on_round(self, params, round_index: int, step: int, topo: Topology,
+                 active: np.ndarray) -> np.ndarray:
+        sim = self.sim
+        cfg = self.idkd_cfg
+        hom = sim._homogenize(params, cfg, topo,
+                              None if active.all() else active)
+        self.sparse_round = isinstance(hom, labeling.SparseHomogenizedSet)
+        payload = ((hom.labels.values, hom.labels.indices)
+                   if self.sparse_round else np.asarray(hom.labels))
+        weights = np.asarray(hom.weights)
+        self.ctx = driver.homogenized_ctx(weights, payload,
+                                          len(sim.public_x))
+        if self.kd_sampler is None:
+            self.kd_sampler = driver.make_homogenized_sampler(
+                self.priv_parts,
+                driver.PaddedParts(self.ctx["pub_idx"],
+                                   self.ctx["pub_size"]),
+                sim.data.train_x, sim.data.train_y, sim.public_x,
+                weights, payload, sim.mcfg.num_classes,
+                sim.tcfg.batch_size)
+        self.phase = "kd_sparse" if self.sparse_round else "kd_dense"
+
+        # diagnostics: last round wins the summary fields, every round is
+        # appended to result.rounds
+        res = self.result
+        res.thresholds = np.asarray(hom.thresholds)
+        res.id_fraction = float(np.mean(np.asarray(hom.id_masks)))
+        res.post_hist = sim._post_histograms(hom)
+        # wire cost: sparse backends ship each node's own top-k payload;
+        # the dense backend always ships full (P, C) rows
+        k_wire = (min(cfg.label_topk or labeling.DEFAULT_TOPK,
+                      sim.mcfg.num_classes) if self.sparse_round else 0)
+        id_counts = np.asarray(hom.id_masks).sum(axis=1)
+        per_node = np.array([distill.label_bytes(int(c),
+                                                 sim.mcfg.num_classes,
+                                                 k_wire)
+                             for c in id_counts], np.float64)
+        res.rounds.append({"step": step, "round": round_index,
+                           "id_fraction": res.id_fraction,
+                           "label_bytes": float(per_node.sum())})
+        return per_node
+
+    def on_eval(self, params, step: int, losses) -> None:
+        acc, nll = self.sim._eval(params)
+        self.result.acc_history.append(acc)
+        self.result.loss_history.append(nll)
+        self.result.consensus_history.append(
+            float(consensus_distance(params)))
 
 
 class DecentralizedSimulator:
@@ -70,11 +196,14 @@ class DecentralizedSimulator:
         n = train_cfg.num_nodes
         self.topology = Topology.make(train_cfg.topology, n)
         if train_cfg.algorithm == "centralized":
-            # exact averaging reference: fully-connected uniform mixing
-            W = np.full((n, n), 1.0 / n)
-            self.mixer = make_dense_mixer(W)
+            # exact averaging reference: the complete graph's Metropolis
+            # matrix is exactly uniform 1/n mixing — and its masked path
+            # averages over the surviving nodes under churn
+            self.gossip_topo = Topology.make("full", n)
         else:
-            self.mixer = make_dense_mixer(self.topology.mixing_matrix())
+            self.gossip_topo = self.topology
+        self.mixer = make_mixer(self.gossip_topo, "dense",
+                                wire_dtype="float32")
         self.algo = make_algorithm(train_cfg.algorithm,
                                    topology=self.topology,
                                    momentum=train_cfg.momentum,
@@ -93,6 +222,7 @@ class DecentralizedSimulator:
         self.lr_fn = step_decay(train_cfg.lr, train_cfg.steps,
                                 train_cfg.lr_decay_milestones,
                                 train_cfg.lr_decay_factor)
+        self._fed: Optional[_SimFederation] = None
         self._build_jits()
 
     # ------------------------------------------------------------------ setup
@@ -100,15 +230,16 @@ class DecentralizedSimulator:
         """Steps come from the unified driver (core.driver.make_step);
         only the diagnostics (forward/eval) are built here."""
         model, mixer, algo = self.model, self.mixer, self.algo
-        kd_T = (self.tcfg.idkd.temperature if self.tcfg.idkd
-                else IDKDConfig().temperature)
+        icfg = self.tcfg.idkd or IDKDConfig()
 
         self._plain_step = driver.make_step(
             model, algo, mixer, driver.classification_adapter)
         self._kd_step = driver.make_step(
-            model, algo, mixer, driver.dense_kd_adapter(kd_T))
+            model, algo, mixer,
+            driver.dense_kd_adapter(icfg.temperature, icfg.kd_weight))
         self._sparse_kd_step = driver.make_step(
-            model, algo, mixer, driver.sparse_kd_adapter(kd_T))
+            model, algo, mixer,
+            driver.sparse_kd_adapter(icfg.temperature, icfg.kd_weight))
 
         @jax.jit
         def forward_logits(params, images):
@@ -161,86 +292,89 @@ class DecentralizedSimulator:
         return np.asarray(self._forward_logits(params, xb))
 
     # ------------------------------------------------------------------- run
-    def run(self) -> SimResult:
-        """Chunked scan driver: the inner step loop runs on device
-        (``core.driver``), breaking only at eval boundaries and at the
-        homogenization step (where the sampler/step pair is swapped)."""
+    def default_schedule(self) -> sched.Schedule:
+        """The schedule this simulator's config asks for: eval boundaries
+        plus the IDKD rounds (``start_step`` + ``num_rounds`` ×
+        ``every_k_steps``) when KD is active."""
+        idkd_cfg = self.tcfg.idkd or IDKDConfig()
+        rounds = (sched.idkd_round_steps(idkd_cfg, self.tcfg.steps)
+                  if self._kd_active(idkd_cfg) else ())
+        return sched.compile_schedule(self.tcfg.steps, self.eval_every,
+                                      round_steps=rounds)
+
+    def _kd_active(self, idkd_cfg: IDKDConfig) -> bool:
+        return (self.kd_mode is not None and self.public_x is not None
+                and idkd_cfg.start_step < self.tcfg.steps)
+
+    def run(self, schedule: Optional[sched.Schedule] = None,
+            resume: Optional[Dict] = None,
+            capture_at: Optional[int] = None) -> SimResult:
+        """Replay the federation schedule through the scheduler: chunked
+        scan/host runners between boundaries, homogenization rounds
+        re-labeling and refreshing the KD sampler as they fire, churn /
+        rewire events remaking the mixer, and every byte of gossip and
+        label traffic logged to the communication ledger.
+
+        ``resume`` is a ``{"params", "opt_state", "key", "step"}`` state
+        (as produced by ``capture_at``) restarting mid-schedule at a legal
+        boundary; ``capture_at`` snapshots the state at that boundary into
+        ``result.captured``.
+        """
         t0 = time.time()
         tcfg = self.tcfg
         n = tcfg.num_nodes
-        C = self.mcfg.num_classes
-        params = self._stacked_init()
-        opt_state = self.algo.init(params)
+        idkd_cfg = tcfg.idkd or IDKDConfig()
+        kd_active = self._kd_active(idkd_cfg)
+        if schedule is None:
+            schedule = self.default_schedule()
+        elif schedule.round_steps and not kd_active:
+            raise ValueError(
+                "schedule contains homogenization rounds but the simulator "
+                "has no kd_mode/public data to run them")
+
         result = SimResult(final_acc=0.0)
         result.pre_hist = partition_stats(self.data.train_y, self.parts,
                                           self.mcfg.num_classes)
+        if resume is not None:
+            params, opt_state = resume["params"], resume["opt_state"]
+            key, resume_step = resume["key"], int(resume["step"])
+        else:
+            params = self._stacked_init()
+            opt_state = self.algo.init(params)
+            key = jax.random.PRNGKey(tcfg.seed)
+            resume_step = 0
 
-        idkd_cfg = tcfg.idkd or IDKDConfig()
-        kd_active = (self.kd_mode is not None and self.public_x is not None
-                     and idkd_cfg.start_step < tcfg.steps)
-        priv_parts = driver.pad_partitions(self.parts)
-        sampler = driver.make_classification_sampler(
-            priv_parts, self.data.train_x, self.data.train_y, C,
-            tcfg.batch_size)
-        runner = driver.make_runner(self._plain_step, sampler, self.lr_fn,
-                                    self.driver_mode)
-        key = jax.random.PRNGKey(tcfg.seed)
-        hom: Optional[labeling.HomogenizedResult] = None
-
-        for a, b in driver.eval_boundaries(
-                tcfg.steps, self.eval_every,
-                idkd_cfg.start_step if kd_active else None):
-            if kd_active and hom is None and a == idkd_cfg.start_step:
-                hom = self._homogenize(params, idkd_cfg)
-                sparse_round = isinstance(hom, labeling.SparseHomogenizedSet)
-                payload = (hom.labels if sparse_round
-                           else np.asarray(hom.labels))
-                pub_parts = driver.pad_partitions(
-                    [np.flatnonzero(w > 0)
-                     for w in np.asarray(hom.weights)])
-                sampler = driver.make_homogenized_sampler(
-                    priv_parts, pub_parts, self.data.train_x,
-                    self.data.train_y, self.public_x,
-                    np.asarray(hom.weights), payload, C, tcfg.batch_size)
-                step_fn = (self._sparse_kd_step if sparse_round
-                           else self._kd_step)
-                runner = driver.make_runner(step_fn, sampler, self.lr_fn,
-                                            self.driver_mode)
-                result.thresholds = np.asarray(hom.thresholds)
-                result.id_fraction = float(np.mean(np.asarray(hom.id_masks)))
-                result.post_hist = self._post_histograms(hom)
-                # wire cost: sparse backends ship each node's own top-k
-                # payload; the dense backend always ships full (P, C) rows
-                k_wire = (min(idkd_cfg.label_topk or labeling.DEFAULT_TOPK,
-                              self.mcfg.num_classes)
-                          if sparse_round else 0)
-                result.label_bytes_total = float(
-                    n * distill.label_bytes(
-                        int(np.asarray(hom.id_masks).sum() / n),
-                        self.mcfg.num_classes, k_wire))
-
-            params, opt_state, key, _ = runner(
-                params, opt_state, key, jnp.asarray(a, jnp.int32), b - a)
-
-            last = b - 1
-            if last % self.eval_every == 0 or last == tcfg.steps - 1:
-                acc, nll = self._eval(params)
-                result.acc_history.append(acc)
-                result.loss_history.append(nll)
-                result.consensus_history.append(
-                    float(consensus_distance(params)))
-
-        result.final_acc = result.acc_history[-1]
-        # ring: each node sends its params to deg neighbours every iteration
-        deg = np.mean([self.topology.degree(i) for i in range(n)])
         nparams = sum(x.size for x in jax.tree.leaves(self.model.init(
             jax.random.PRNGKey(0))))
-        result.comm_bytes_per_iter = float(deg * nparams * 4)
+        ledger = sched.CommLedger(n, meta={
+            "topology": self.gossip_topo.name, "wire_dtype": "float32",
+            "param_count": int(nparams)})
+        if self._fed is None:
+            self._fed = _SimFederation(self, result, idkd_cfg)
+        else:
+            self._fed.reset(result)
+        fed = self._fed
+        params, opt_state, key, captured = sched.run_schedule(
+            schedule, fed, params, opt_state, key,
+            topology=self.gossip_topo, ledger=ledger,
+            param_count=int(nparams), elem_bytes=4,
+            resume_step=resume_step, capture_at=capture_at)
+
+        result.final_acc = (result.acc_history[-1]
+                            if result.acc_history else 0.0)
+        steps_run = ledger.gossip_steps()
+        result.comm_bytes_per_iter = (
+            ledger.gossip_bytes / steps_run / n if steps_run else 0.0)
+        result.label_bytes_total = ledger.label_bytes
+        result.ledger = ledger.as_dict()
+        result.captured = captured
         result.wall_seconds = time.time() - t0
         return result
 
     # ------------------------------------------------------------ IDKD round
-    def _homogenize(self, params, idkd_cfg: IDKDConfig
+    def _homogenize(self, params, idkd_cfg: IDKDConfig,
+                    topology: Optional[Topology] = None,
+                    active: Optional[np.ndarray] = None
                     ) -> labeling.HomogenizedResult:
         pub_logits = jnp.asarray(self._node_logits(params, self.public_x))
         val_logits = jnp.asarray(self._per_node_val_logits(params))
@@ -248,9 +382,9 @@ class DecentralizedSimulator:
         # kd_mode="vanilla" is the no-OoD-filter baseline (every public
         # sample kept) — the engine's filter_ood=False branch
         return labeling.label_round(
-            pub_logits, val_logits, None, self.topology, idkd_cfg,
-            backend=idkd_cfg.label_backend,
-            filter_ood=self.kd_mode != "vanilla")
+            pub_logits, val_logits, None, topology or self.topology,
+            idkd_cfg, backend=idkd_cfg.label_backend,
+            filter_ood=self.kd_mode != "vanilla", active=active)
 
     def _post_histograms(self, hom: labeling.HomogenizedResult) -> np.ndarray:
         C = self.mcfg.num_classes
@@ -295,3 +429,4 @@ class DecentralizedSimulator:
             tot_nll += float(l) * cnt
             tot_cnt += cnt
         return tot_acc / tot_cnt, tot_nll / tot_cnt
+

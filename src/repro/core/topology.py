@@ -124,6 +124,19 @@ class Topology:
     def neighbors(self, i: int) -> List[int]:
         return self.adj[i]
 
+    def edge_key(self) -> Tuple:
+        """Canonical hashable identity: (n, sorted undirected edge set).
+        Two Topology objects with the same wiring share one key — the
+        scheduler's compiled-object caches key on this, so re-resolved
+        rewire events and same-wiring graphs hit warm caches."""
+        cached = self._cache.get("edge_key")
+        if cached is None:
+            cached = (self.n, tuple(sorted(
+                (i, j) for i, nbrs in self.adj.items()
+                for j in nbrs if i < j)))
+            self._cache["edge_key"] = cached
+        return cached
+
     def degree(self, i: int) -> int:
         return len(self.adj[i])
 
@@ -156,13 +169,31 @@ class Topology:
         return nbr, valid
 
     # -- mixing matrix ---------------------------------------------------------
-    def mixing_matrix(self) -> np.ndarray:
-        """Metropolis–Hastings: W_ij = 1/(1+max(d_i,d_j)) for edges; rows sum 1."""
+    def mixing_matrix(self, active=None) -> np.ndarray:
+        """Metropolis–Hastings: W_ij = 1/(1+max(d_i,d_j)) for edges; rows sum 1.
+
+        ``active`` (optional (n,) bool mask) restricts the exchange to the
+        induced subgraph of available nodes — churn support: degrees are
+        recomputed on the subgraph so the active block stays symmetric
+        doubly stochastic, and each down node gets an identity row
+        (W_ii = 1, it neither sends nor receives).
+        """
         n = self.n
+        if active is None:
+            act = np.ones(n, bool)
+        else:
+            act = np.asarray(active, bool)
+            if act.shape != (n,):
+                raise ValueError(f"active mask shape {act.shape} != ({n},)")
+        deg = np.array([sum(act[j] for j in self.adj[i]) if act[i] else 0
+                        for i in range(n)])
         W = np.zeros((n, n))
         for i in range(n):
+            if not act[i]:
+                continue
             for j in self.adj[i]:
-                W[i, j] = 1.0 / (1.0 + max(self.degree(i), self.degree(j)))
+                if act[j]:
+                    W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
         for i in range(n):
             W[i, i] = 1.0 - W[i].sum()
         return W

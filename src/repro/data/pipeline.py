@@ -45,11 +45,20 @@ class HomogenizedSampler:
                  batch_size: int, seed: int, public_labels=None):
         # public_weights: (n_nodes, P) — 1 where sample in node's D_ID union
         self.parts = parts
-        self.public_weights = np.asarray(public_weights)
-        self.public_idx = [np.flatnonzero(w > 0) for w in public_weights]
         self.batch_size = batch_size
         self.rngs = [np.random.default_rng(seed + 31 * i)
                      for i in range(len(parts))]
+        self.refresh(public_weights, public_labels)
+
+    def refresh(self, public_weights: np.ndarray, public_labels=None) -> None:
+        """Swap in a new homogenization round's D_ID selection and label
+        payload. This is the repeated-round path for *host-side* numpy
+        consumers of the pipeline (the jitted drivers refresh rounds by
+        threading a ctx pytree through the runner instead —
+        ``driver.homogenized_ctx``); the per-node RNG streams keep
+        advancing across a refresh, so draws are never replayed."""
+        self.public_weights = np.asarray(public_weights)
+        self.public_idx = [np.flatnonzero(w > 0) for w in self.public_weights]
         if public_labels is not None:
             if isinstance(public_labels, (tuple, list)):
                 # sparse payload: a (values, indices) named/plain tuple

@@ -10,27 +10,33 @@ the latter lowers + compiles for every assigned arch × shape).
 The step loop is the unified on-device driver (``core.driver``): one
 ``make_step`` per phase (plain LM / LM + sparse-KD), per-node batch
 sampling under jit, and the inner loop compiled as a ``lax.scan`` between
-log boundaries. Params-gossip and the IDKD label exchange share one
-``tcfg.topology`` graph (the seed gossiped on a hardwired ring while
+log boundaries. The outer loop is the federation scheduler
+(``repro.sched``): homogenization rounds fire every
+``IDKDConfig.every_k_steps`` (``num_rounds`` of them), churn / rewire
+events remake the gossip mixer mid-run, and all traffic — wire-dtype
+aware params-gossip plus the sparse label payloads — lands in one
+communication ledger. Params-gossip and the IDKD label exchange share
+one ``tcfg.topology`` graph (the seed gossiped on a hardwired ring while
 labels moved on ``tcfg.topology``).
 
 Usage (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
-        --steps 40 --nodes 8 --idkd
+        --steps 40 --nodes 8 --idkd [--rounds 2] [--churn 3@20-30]
 """
 from __future__ import annotations
 
 import argparse
 import time
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sched
 from repro.configs import get_config
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
-from repro.core import driver, labeling
+from repro.core import distill, driver, labeling
 from repro.core.algorithms import make_algorithm
 from repro.core.mixing import Mixer, make_mixer
 from repro.core.topology import Topology
@@ -40,22 +46,26 @@ from repro.launch.steps import consensus_params, stack_params
 from repro.models import build_model
 
 
-def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native"
-                      ) -> Tuple[Topology, Mixer]:
-    """The (topology, mixer) pair ``run_training`` gossips params on.
+def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native",
+                      topology: Optional[Topology] = None,
+                      active=None) -> Tuple[Topology, Mixer]:
+    """The (topology, mixer) pair the launch path gossips params on —
+    ``_LMFederation``'s mixer construction point.
 
-    Built from ``tcfg.topology`` — the same graph object the IDKD label
-    exchange uses, so params-gossip and label-exchange always agree.
-    ``wire_dtype`` applies to every phase, KD included (the seed's KD step
-    silently built an f32-wire mixer, losing the §Perf bf16-wire halving).
+    Built from ``tcfg.topology`` (or an explicit ``topology``, e.g. after
+    a rewire event) — the same graph object the IDKD label exchange uses,
+    so params-gossip and label-exchange always agree. ``wire_dtype``
+    applies to every phase, KD included (the seed's KD step silently
+    built an f32-wire mixer, losing the §Perf bf16-wire halving);
+    ``active`` is the churn mask.
     """
-    topo = Topology.make(tcfg.topology, tcfg.num_nodes)
-    return topo, make_mixer(topo, wire_dtype=wire_dtype)
+    topo = topology or Topology.make(tcfg.topology, tcfg.num_nodes)
+    return topo, make_mixer(topo, wire_dtype=wire_dtype, active=active)
 
 
 def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
                      idkd_cfg: IDKDConfig, topology: Topology,
-                     backend: str = "sparse"):
+                     backend: str = "sparse", active=None):
     """LLM IDKD round via the unified labeling engine: per-sequence
     detector confidences + top-k soft labels on the public corpus,
     ROC-calibrated threshold, sparse neighbour label exchange.
@@ -64,6 +74,7 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
     labels stay sparse end to end — neighbour averaging concatenates
     payloads along the k axis (k_out = (max_deg+1)·k) instead of the
     seed's densify→average→resparsify detour through (n, P, S, V).
+    ``active`` masks churned-out nodes from the exchange.
     """
     n = params_stacked and jax.tree.leaves(params_stacked)[0].shape[0]
 
@@ -79,19 +90,107 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
     logits_priv = node_logits(params_stacked, priv)
     # val = the node's private corpus (ID); cal=None = the public corpus
     out = labeling.label_round(logits_pub, logits_priv, None,
-                               topology, idkd_cfg, backend=backend)
+                               topology, idkd_cfg, backend=backend,
+                               active=active)
     return out.labels, out.weights, out.id_masks, out.thresholds
+
+
+class _LMFederation(sched.CompiledFederationHooks):
+    """Scheduler hooks for the LM launch path: plain and sparse-KD steps
+    per (graph, availability mask), labeling rounds refreshing the KD
+    sampler ctx, per-round label byte accounting (cache machinery lives
+    on :class:`sched.CompiledFederationHooks`)."""
+
+    def __init__(self, *, model, algo, tcfg: TrainConfig,
+                 idkd_cfg: IDKDConfig, cfg: ModelConfig, tokens, parts,
+                 public_tokens, seq_len: int, wire_dtype: str,
+                 driver_mode: str, verbose: bool):
+        super().__init__()
+        self.model = model
+        self.algo = algo
+        self.tcfg = tcfg
+        self.idkd_cfg = idkd_cfg
+        self.cfg = cfg
+        self.tokens = tokens
+        self.parts = parts
+        self.public_tokens = public_tokens
+        self.seq_len = seq_len
+        self.wire_dtype = wire_dtype
+        self.driver_mode = driver_mode
+        self.verbose = verbose
+        self.lr_fn = lambda s: jnp.asarray(tcfg.lr, jnp.float32)
+        self.priv_parts = driver.pad_partitions(parts)
+        self.plain_sampler = driver.make_lm_sampler(
+            self.priv_parts, tokens, tcfg.batch_size)
+        self.kd_sampler = None
+
+    def _make_mixer(self, topo: Topology, active):
+        return make_gossip_mixer(self.tcfg, self.wire_dtype,
+                                 topology=topo, active=active)[1]
+
+    def _adapter(self):
+        return (driver.lm_adapter if self.phase == "plain"
+                else driver.lm_sparse_kd_adapter(self.idkd_cfg))
+
+    def _sampler(self):
+        return (self.plain_sampler if self.phase == "plain"
+                else self.kd_sampler)
+
+    def on_round(self, params, round_index: int, step: int, topo: Topology,
+                 active: np.ndarray) -> np.ndarray:
+        cfg = self.idkd_cfg
+        n = self.tcfg.num_nodes
+        m_priv = max(1, min(16, min(len(p) for p in self.parts)))
+        priv = np.stack([self.tokens[self.parts[i][:m_priv], :self.seq_len]
+                         for i in range(n)])
+        backend = cfg.label_backend
+        if backend not in ("fused", "sparse"):
+            # the LM KD step consumes sparse payloads; the dense
+            # oracle backend is not an option at vocab scale
+            if self.verbose:
+                print(f"[idkd] label_backend={backend!r} unsupported "
+                      "for LM stacks; using 'sparse'")
+            backend = "sparse"
+        sparse, w, id_mask, thr = idkd_label_round(
+            self.model, params, self.public_tokens, priv, cfg, topo,
+            backend=backend, active=None if active.all() else active)
+        self.ctx = driver.lm_kd_ctx(sparse.values, sparse.indices, w)
+        if self.kd_sampler is None:
+            self.kd_sampler = driver.make_lm_kd_sampler(
+                self.priv_parts, self.tokens, self.tcfg.batch_size,
+                self.public_tokens, sparse.values, sparse.indices, w,
+                pub_batch=min(4, len(self.public_tokens)))
+        self.phase = "kd"
+        if self.verbose:
+            print(f"[idkd] step {step} (round {round_index}): kept "
+                  f"{float(np.asarray(id_mask).mean()):.2f} of public "
+                  f"set; thresholds {np.asarray(thr).round(3)}")
+        k_wire = min(cfg.label_topk or labeling.DEFAULT_TOPK,
+                     self.cfg.vocab_size)
+        counts = np.asarray(id_mask).sum(axis=1)
+        return np.array([distill.label_bytes(int(c) * self.seq_len,
+                                             self.cfg.vocab_size, k_wire)
+                         for c in counts], np.float64)
 
 
 def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
                  n_seqs: int = 512, n_public: int = 64, log_every: int = 10,
                  use_idkd: bool = False, verbose: bool = True,
-                 wire_dtype: str = "native", driver_mode: str = "scan"
+                 wire_dtype: str = "native", driver_mode: str = "scan",
+                 events: Sequence = (),
+                 schedule: Optional[sched.Schedule] = None
                  ) -> Dict[str, Any]:
-    """End-to-end reduced-scale decentralized LM training (CPU-friendly)."""
+    """End-to-end reduced-scale decentralized LM training (CPU-friendly).
+
+    ``events`` (churn / rewire) and a custom ``schedule`` feed the
+    federation scheduler; by default the schedule is compiled from
+    ``tcfg`` (log boundaries + the IDKD rounds ``tcfg.idkd`` asks for).
+    """
     n = tcfg.num_nodes
     model = build_model(cfg)
-    topo, mixer = make_gossip_mixer(tcfg, wire_dtype)
+    # the one graph params-gossip and the label exchange share; the hooks
+    # build (and cache) the actual mixers per availability mask
+    topo = Topology.make(tcfg.topology, tcfg.num_nodes)
     algo = make_algorithm(tcfg.algorithm, momentum=tcfg.momentum,
                           weight_decay=tcfg.weight_decay)
     tokens, topics = make_lm_data(cfg.vocab_size, seq_len + 1, n_seqs,
@@ -103,58 +202,49 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
     params = stack_params(model.init(jax.random.PRNGKey(tcfg.seed)), n)
     idkd_cfg = tcfg.idkd or IDKDConfig(label_topk=8)
 
-    plain_step = driver.make_step(model, algo, mixer, driver.lm_adapter)
-    kd_step = driver.make_step(model, algo, mixer,
-                               driver.lm_sparse_kd_adapter(idkd_cfg))
-    opt_state = plain_step.init_opt(params)
+    kd_fires = use_idkd and 0 <= idkd_cfg.start_step < tcfg.steps
+    if schedule is None:
+        rounds = (sched.idkd_round_steps(idkd_cfg, tcfg.steps)
+                  if kd_fires else ())
+        schedule = sched.compile_schedule(tcfg.steps, log_every,
+                                          round_steps=rounds, events=events)
+    elif events:
+        raise ValueError("pass events to compile_schedule, not alongside "
+                         "a prebuilt schedule")
+    if schedule.round_steps and not use_idkd:
+        raise ValueError("schedule contains homogenization rounds but "
+                         "use_idkd=False")
 
-    priv_parts = driver.pad_partitions(parts)
-    sampler = driver.make_lm_sampler(priv_parts, tokens, tcfg.batch_size)
-    lr_fn = lambda s: jnp.asarray(tcfg.lr, jnp.float32)   # noqa: E731
-    runner = driver.make_runner(plain_step, sampler, lr_fn, driver_mode)
+    fed = _LMFederation(model=model, algo=algo, tcfg=tcfg,
+                        idkd_cfg=idkd_cfg, cfg=cfg, tokens=tokens,
+                        parts=parts, public_tokens=public_tokens,
+                        seq_len=seq_len, wire_dtype=wire_dtype,
+                        driver_mode=driver_mode, verbose=verbose)
+    opt_state = algo.init(params)
     key = jax.random.PRNGKey(tcfg.seed + 1)
 
-    kd_fires = use_idkd and 0 <= idkd_cfg.start_step < tcfg.steps
+    nparams = sum(x.size for x in jax.tree.leaves(params)) // n
+    ledger = sched.CommLedger(n, meta={
+        "topology": topo.name, "wire_dtype": wire_dtype,
+        "param_count": int(nparams)})
+
     history = []
     t0 = time.time()
-    for a, b in driver.eval_boundaries(
-            tcfg.steps, log_every,
-            idkd_cfg.start_step if kd_fires else None):
-        if kd_fires and a == idkd_cfg.start_step:
-            m_priv = max(1, min(16, min(len(p) for p in parts)))
-            priv = np.stack([tokens[parts[i][:m_priv], :seq_len]
-                             for i in range(n)])
-            backend = idkd_cfg.label_backend
-            if backend not in ("fused", "sparse"):
-                # the LM KD step consumes sparse payloads; the dense
-                # oracle backend is not an option at vocab scale
-                if verbose:
-                    print(f"[idkd] label_backend={backend!r} unsupported "
-                          "for LM stacks; using 'sparse'")
-                backend = "sparse"
-            sparse, w, id_mask, thr = idkd_label_round(
-                model, params, public_tokens, priv, idkd_cfg, topo,
-                backend=backend)
-            sampler = driver.make_lm_kd_sampler(
-                priv_parts, tokens, tcfg.batch_size, public_tokens,
-                sparse.values, sparse.indices, w,
-                pub_batch=min(4, len(public_tokens)))
-            runner = driver.make_runner(kd_step, sampler, lr_fn,
-                                        driver_mode)
-            if verbose:
-                print(f"[idkd] step {a}: kept "
-                      f"{float(np.asarray(id_mask).mean()):.2f} of public "
-                      f"set; thresholds {np.asarray(thr).round(3)}")
-        params, opt_state, key, losses = runner(
-            params, opt_state, key, jnp.asarray(a, jnp.int32), b - a)
-        last = b - 1
-        if last % log_every == 0 or last == tcfg.steps - 1:
-            history.append(float(losses[-1]))
-            if verbose:
-                print(f"[train] step {last}: loss {history[-1]:.4f} "
-                      f"({time.time()-t0:.1f}s)", flush=True)
+
+    def on_eval(params, step, losses):
+        history.append(float(losses[-1]))
+        if verbose:
+            print(f"[train] step {step}: loss {history[-1]:.4f} "
+                  f"({time.time()-t0:.1f}s)", flush=True)
+
+    fed.on_eval = on_eval
+    params, opt_state, key, _ = sched.run_schedule(
+        schedule, fed, params, opt_state, key, topology=topo,
+        ledger=ledger, param_count=int(nparams),
+        elem_bytes=sched.wire_elem_bytes(wire_dtype, cfg.dtype))
     return {"params": consensus_params(params), "loss_history": history,
-            "model": model, "topology": topo}
+            "model": model, "topology": topo, "ledger": ledger.as_dict(),
+            "schedule": schedule}
 
 
 def main():
@@ -165,6 +255,13 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--topology", default="ring")
     ap.add_argument("--idkd", action="store_true")
+    ap.add_argument("--rounds", type=int, default=1,
+                    help="IDKD homogenization rounds (spaced every-k)")
+    ap.add_argument("--every-k", type=int, default=0,
+                    help="steps between rounds (default: fit them evenly "
+                         "into the post-start span)")
+    ap.add_argument("--churn", default="",
+                    help="churn spec node@down-up[,...], e.g. 3@20-30")
     ap.add_argument("--wire-dtype", default="native",
                     choices=["native", "float32"])
     ap.add_argument("--driver", default="scan", choices=["scan", "host"])
@@ -174,14 +271,25 @@ def main():
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
+    start = args.steps // 2
+    every_k = args.every_k or sched.fit_every_k(args.steps, start,
+                                                args.rounds)
     tcfg = TrainConfig(num_nodes=args.nodes, steps=args.steps, lr=0.1,
                        alpha=args.alpha, batch_size=8,
                        topology=args.topology,
-                       idkd=IDKDConfig(start_step=args.steps // 2,
-                                       label_topk=8))
+                       idkd=IDKDConfig(start_step=start, label_topk=8,
+                                       every_k_steps=every_k,
+                                       num_rounds=args.rounds))
+    events = (sched.parse_churn(args.churn, args.nodes, args.steps)
+              if args.churn else ())
     out = run_training(cfg, tcfg, use_idkd=args.idkd,
-                       wire_dtype=args.wire_dtype, driver_mode=args.driver)
+                       wire_dtype=args.wire_dtype, driver_mode=args.driver,
+                       events=events)
     print(f"final loss: {out['loss_history'][-1]:.4f}")
+    led = out["ledger"]
+    print(f"comm ledger: {led['gossip_bytes']/1e6:.2f} MB gossip + "
+          f"{led['label_bytes']/1e6:.3f} MB labels over "
+          f"{len(led['per_round'])} round bucket(s)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,254 @@
+"""Federation schedule compiler.
+
+A :class:`Schedule` is the outer-loop structure of a decentralized run —
+the thing both drivers used to hand-roll: train chunks between eval
+boundaries, homogenization (label-exchange) rounds, and the scenario
+events that make the federation *dynamic* (nodes dropping out and
+rejoining, the gossip graph being rewired mid-run).
+
+:func:`compile_schedule` turns (steps, eval boundaries, round steps,
+events) into an ordered tuple of :class:`Segment` s — the exact chunk
+[start, stop) spans the scan/host runners of ``core.driver`` consume.
+Events are attached to the segment at whose *start* they fire, ordered
+so topology changes (churn / rewire) land before the homogenization
+round at the same step: a label exchange always runs on the graph that
+is current at its step.
+
+Degenerate-schedule equivalence (DESIGN.md §6): with a single round at
+``start_step`` and no events, the compiled segment spans are *identical*
+to ``core.driver.eval_boundaries(steps, eval_every, extra=start_step)``
+— the boundaries both drivers used before the scheduler existed — so a
+1-round schedule reproduces the pre-scheduler trajectories exactly
+(same chunks, same PRNG key sequence, same jitted step).
+
+Schedule parameters are validated loudly: unknown event types, malformed
+churn specs, out-of-range steps, and inconsistent IDKD round settings
+(``num_rounds > 1`` with ``every_k_steps <= 0``) all raise instead of
+being silently ignored.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple, Union
+
+from repro.configs.base import IDKDConfig
+from repro.core.topology import Topology
+
+CHURN_MODES = ("freeze", "isolate")
+
+
+@dataclass(frozen=True)
+class HomogenizeEvent:
+    """Run one IDKD labeling round at ``step`` (before training resumes)."""
+    step: int
+    round_index: int = 0
+
+
+@dataclass(frozen=True)
+class ChurnEvent:
+    """Node availability change at ``step``.
+
+    ``down`` nodes leave the federation, ``up`` nodes rejoin.
+    ``mode="freeze"``: a down node neither trains nor gossips (its params
+    and optimizer state are held). ``mode="isolate"``: a *straggler* — it
+    keeps training locally but misses every gossip exchange.
+    """
+    step: int
+    down: Tuple[int, ...] = ()
+    up: Tuple[int, ...] = ()
+    mode: str = "freeze"
+
+
+@dataclass(frozen=True)
+class RewireEvent:
+    """Swap the gossip graph at ``step``. ``topology`` is a kind string
+    (resolved via ``Topology.make`` against the run's node count) or a
+    prebuilt :class:`Topology`."""
+    step: int
+    topology: Union[str, Topology] = "ring"
+
+
+Event = Union[HomogenizeEvent, ChurnEvent, RewireEvent]
+_EVENT_TYPES = (HomogenizeEvent, ChurnEvent, RewireEvent)
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One train chunk [start, stop); ``events`` fire at ``start`` before
+    any step runs; ``eval_after`` marks an eval boundary at ``stop``."""
+    start: int
+    stop: int
+    events: Tuple[Event, ...] = ()
+    eval_after: bool = False
+
+    @property
+    def num_steps(self) -> int:
+        return self.stop - self.start
+
+
+@dataclass(frozen=True)
+class Schedule:
+    steps: int
+    eval_every: int
+    segments: Tuple[Segment, ...] = ()
+    round_steps: Tuple[int, ...] = ()
+
+    def boundaries(self) -> List[Tuple[int, int]]:
+        """The chunk [start, stop) spans — ``driver.eval_boundaries``'s
+        contract, for the degenerate-equivalence check."""
+        return [(s.start, s.stop) for s in self.segments]
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.round_steps)
+
+    def validate_resume(self, step: int) -> None:
+        """Resume is legal at step 0 or at a segment start; if any
+        homogenization round precedes the resume point, the resume step
+        must itself be a round step (the round re-fires there from the
+        restored params — earlier rounds' sampler payloads are stale and
+        unreconstructable without replaying training)."""
+        if step == 0:
+            return
+        starts = {s.start for s in self.segments}
+        if step not in starts:
+            raise ValueError(
+                f"cannot resume at step {step}: not a segment boundary "
+                f"(boundaries: {sorted(starts)})")
+        if any(r < step for r in self.round_steps) and \
+                step not in self.round_steps:
+            raise ValueError(
+                f"cannot resume at step {step}: a homogenization round "
+                f"fired earlier ({[r for r in self.round_steps if r < step]}) "
+                "and its sampler state is not part of the checkpoint; "
+                "resume at a round boundary instead "
+                f"(rounds: {list(self.round_steps)})")
+
+
+def fit_every_k(steps: int, start: int, rounds: int) -> int:
+    """The even ``every_k_steps`` spacing that fits ``rounds``
+    homogenization rounds into ``[start, steps)`` — the CLIs' default
+    when the user asks for a round count without a period."""
+    return max(1, (steps - start) // max(rounds, 1))
+
+
+def idkd_round_steps(cfg: IDKDConfig, steps: int) -> Tuple[int, ...]:
+    """The homogenization steps an :class:`IDKDConfig` asks for:
+    ``num_rounds`` rounds spaced ``every_k_steps`` apart from
+    ``start_step``, clipped to the run length. This is where the
+    previously dead ``every_k_steps`` knob is routed."""
+    rounds = int(cfg.num_rounds)
+    if rounds < 0:
+        raise ValueError(f"IDKDConfig.num_rounds must be >= 0, got {rounds}")
+    if rounds > 1 and cfg.every_k_steps <= 0:
+        raise ValueError(
+            f"IDKDConfig.num_rounds={rounds} needs every_k_steps > 0 "
+            f"to space the rounds, got {cfg.every_k_steps}")
+    if rounds == 0 or cfg.start_step < 0:
+        return ()
+    out = [cfg.start_step + j * cfg.every_k_steps for j in range(rounds)]
+    return tuple(s for s in out if s < steps)
+
+
+def _validate_events(events: Sequence[Event], steps: int) -> List[Event]:
+    out = []
+    for ev in events:
+        if not isinstance(ev, _EVENT_TYPES):
+            raise TypeError(
+                f"unknown schedule event {ev!r}; expected one of "
+                f"{[t.__name__ for t in _EVENT_TYPES]}")
+        if isinstance(ev, HomogenizeEvent):
+            # rounds must come in via round_steps: a round smuggled
+            # through events= would be invisible to Schedule.round_steps,
+            # validate_resume, and the drivers' no-KD guards, and would
+            # fire before same-step churn/rewire events
+            raise ValueError(
+                "pass homogenization rounds via round_steps=, not "
+                "events=; HomogenizeEvents are compiled from round_steps "
+                "so resume validation and the drivers' KD guards see them")
+        if not 0 <= ev.step < steps:
+            raise ValueError(f"event step {ev.step} outside [0, {steps})")
+        if isinstance(ev, ChurnEvent):
+            if ev.mode not in CHURN_MODES:
+                raise ValueError(f"unknown churn mode {ev.mode!r}; "
+                                 f"expected one of {CHURN_MODES}")
+            if not ev.down and not ev.up:
+                raise ValueError(f"churn event at step {ev.step} names no "
+                                 "nodes (empty down and up)")
+        out.append(ev)
+    return out
+
+
+def compile_schedule(steps: int, eval_every: int, *,
+                     round_steps: Sequence[int] = (),
+                     events: Sequence[Event] = ()) -> Schedule:
+    """Compile the outer loop into runner-ready segments.
+
+    Cuts fall at 0/steps, after every eval step, at every homogenization
+    round, and at every event step; each segment carries the events that
+    fire at its start (churn/rewire ordered before the round at the same
+    step) and an ``eval_after`` flag matching the drivers' historical
+    ``last % eval_every == 0 or last == steps - 1`` eval rule.
+    """
+    if steps <= 0:
+        raise ValueError(f"steps must be positive, got {steps}")
+    if eval_every <= 0:
+        raise ValueError(f"eval_every must be positive, got {eval_every}")
+    rounds = sorted(set(int(s) for s in round_steps))
+    for s in rounds:
+        if not 0 <= s < steps:
+            raise ValueError(f"round step {s} outside [0, {steps})")
+    events = _validate_events(events, steps)
+
+    # eval cuts come from the drivers' own boundary rule — one source of
+    # truth for the degenerate-equivalence contract (DESIGN.md §6)
+    from repro.core.driver import eval_boundaries
+    cuts = {0}
+    cuts |= {b for _, b in eval_boundaries(steps, eval_every)}
+    cuts |= set(rounds)
+    cuts |= {ev.step for ev in events}
+    edges = sorted(cuts)
+
+    by_step: dict = {}
+    for ev in events:                          # churn / rewire fire first
+        by_step.setdefault(ev.step, []).append(ev)
+    for i, s in enumerate(rounds):             # then the label exchange
+        by_step.setdefault(s, []).append(HomogenizeEvent(s, round_index=i))
+
+    segments = []
+    for a, b in zip(edges[:-1], edges[1:]):
+        segments.append(Segment(
+            start=a, stop=b, events=tuple(by_step.get(a, ())),
+            eval_after=((b - 1) % eval_every == 0 or b == steps)))
+    return Schedule(steps=steps, eval_every=eval_every,
+                    segments=tuple(segments), round_steps=tuple(rounds))
+
+
+# ------------------------------------------------------------- CLI parsing
+def parse_churn(spec: str, num_nodes: int, steps: int,
+                mode: str = "freeze") -> List[ChurnEvent]:
+    """Parse a ``node@down-up[,node@down-up...]`` churn spec into paired
+    down/up events, e.g. ``"3@120-180"``: node 3 leaves at step 120 and
+    rejoins at step 180 (omit ``-up`` to keep the node down to the end).
+    Malformed specs and out-of-range nodes/steps raise."""
+    events: List[ChurnEvent] = []
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        try:
+            node_s, window = part.split("@")
+            node = int(node_s)
+            lo_s, _, hi_s = window.partition("-")
+            lo = int(lo_s)
+            hi = int(hi_s) if hi_s else None
+        except ValueError as e:
+            raise ValueError(
+                f"malformed churn spec {part!r}; expected node@down-up "
+                "(e.g. '3@120-180' or '3@120')") from e
+        if not 0 <= node < num_nodes:
+            raise ValueError(f"churn node {node} outside [0, {num_nodes})")
+        if not 0 <= lo < steps or (hi is not None and not lo < hi < steps):
+            raise ValueError(f"churn window {part!r} outside the "
+                             f"[0, {steps}) run")
+        events.append(ChurnEvent(step=lo, down=(node,), mode=mode))
+        if hi is not None:
+            events.append(ChurnEvent(step=hi, up=(node,), mode=mode))
+    return events

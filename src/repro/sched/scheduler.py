@@ -1,0 +1,270 @@
+"""Event-driven federation scheduler — the one outer loop.
+
+:func:`run_schedule` replays a compiled :class:`~repro.sched.schedule.
+Schedule` against a set of driver *hooks*: the scheduler owns segment
+iteration, event application (churn masks, graph rewires, homogenization
+rounds), communication accounting, mid-run checkpoint capture, and
+resume; the hooks own everything model-specific (how to build a runner
+for the current phase/graph, how to run a labeling round, what to do at
+an eval boundary). ``core.simulator.DecentralizedSimulator`` and
+``launch.train.run_training`` both drive this loop — neither hand-rolls
+the chunked scan/eval/homogenize structure anymore.
+
+The federation state threaded through the loop:
+
+* ``topology`` — the current gossip graph (swapped by ``RewireEvent``);
+* ``active``  — the node availability mask (updated by ``ChurnEvent``);
+* ``frozen``  — the subset of down nodes with ``freeze`` semantics
+  (params and optimizer state held); down nodes *not* in it are
+  ``isolate`` stragglers — they keep training locally but miss gossip.
+  Each ChurnEvent's ``mode`` applies to its own ``down`` nodes, so
+  frozen and isolated nodes coexist;
+* rounds fired so far — the ledger's round bucket index.
+
+Resume replays topology events *before* the resume step (they are cheap
+and parameter-free) but skips training and any homogenization round in
+the skipped span — ``Schedule.validate_resume`` guarantees the first
+executed segment re-fires a round when one is needed, so a checkpoint
+taken at a round boundary rejoins the uninterrupted trajectory exactly
+(same params → same labeling round → same sampler → same keys).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.topology import Topology
+from repro.sched.ledger import CommLedger, gossip_bytes_per_step
+from repro.sched.schedule import (ChurnEvent, HomogenizeEvent, RewireEvent,
+                                  Schedule)
+
+
+class FederationHooks:
+    """Driver-specific callbacks for :func:`run_schedule` (subclass and
+    override; the base class documents the protocol)."""
+
+    def on_topology(self, topology: Topology, active: np.ndarray,
+                    frozen: np.ndarray) -> None:
+        """The gossip graph or availability mask changed; invalidate or
+        re-key any mixer/step caches."""
+
+    def on_round(self, params, round_index: int, step: int,
+                 topology: Topology, active: np.ndarray
+                 ) -> Optional[np.ndarray]:
+        """Run one homogenization round from the current params; swap the
+        KD sampler in. Returns (n,) per-node label payload bytes for the
+        ledger (or None to skip label accounting)."""
+        return None
+
+    def runner(self, topology: Topology, active: np.ndarray,
+               frozen: np.ndarray) -> Callable:
+        """A ``run(params, opt_state, key, step0, num_steps)`` runner for
+        the current phase, graph, availability mask, and frozen subset."""
+        raise NotImplementedError
+
+    def on_eval(self, params, step: int, losses) -> None:
+        """An eval boundary was crossed after ``step``."""
+
+
+class CompiledFederationHooks(FederationHooks):
+    """:class:`FederationHooks` plus the compiled-object caching both
+    drivers need: mixers, steps, and runners keyed by (phase, graph,
+    availability mask, freeze mask), so alternating churn masks and
+    repeated graphs reuse their jitted executables, and the
+    round-varying sampler payload rides in ``self.ctx`` (threaded
+    through the runner for every non-plain phase — a traced argument,
+    so refreshing it costs no recompile).
+
+    Subclasses set ``model``, ``algo``, ``lr_fn``, ``driver_mode`` and
+    the phase state (``phase`` starts "plain"; ``on_round`` overrides
+    advance it and refresh ``ctx``), and implement:
+
+    * ``_make_mixer(topology, active)`` — backend / wire-dtype choice
+      (``active`` is None for the all-up mask);
+    * ``_adapter()`` — the loss adapter for the current phase;
+    * ``_sampler()`` — the sampler for the current phase.
+
+    Graphs are keyed by ``Topology.edge_key()`` (the canonical edge set),
+    not by name, so a rewire back to an equivalent graph — or a schedule
+    replay that re-resolves its events — hits the warm cache.
+    """
+
+    model = None
+    algo = None
+    lr_fn = None
+    driver_mode = "scan"
+
+    def __init__(self):
+        self.phase = "plain"
+        self.ctx = None
+        self._mixers: Dict = {}
+        self._steps: Dict = {}
+        self._runners: Dict = {}
+
+    def _make_mixer(self, topology: Topology, active) -> Callable:
+        raise NotImplementedError
+
+    def _adapter(self):
+        raise NotImplementedError
+
+    def _sampler(self):
+        raise NotImplementedError
+
+    # ------------------------------------------------------------- caches
+    @staticmethod
+    def _mask_key(active: np.ndarray):
+        return None if active.all() else tuple(np.flatnonzero(~active))
+
+    @staticmethod
+    def _freeze_key(frozen: np.ndarray):
+        return tuple(np.flatnonzero(frozen)) if frozen.any() else None
+
+    def _mixer(self, topo: Topology, active: np.ndarray):
+        mask = self._mask_key(active)
+        key = (topo.edge_key(), mask)
+        if key not in self._mixers:
+            if mask is None:
+                self._mixers[key] = self._make_mixer(topo, None)
+            else:
+                # churn path: remake the cached all-up mixer for the new
+                # availability mask (same backend/wire choice); mixers
+                # without a remake handle are rebuilt from scratch
+                base = self._mixer(topo, np.ones_like(active))
+                remake = getattr(base, "remake", None)
+                self._mixers[key] = (remake(active=active)
+                                     if remake is not None
+                                     else self._make_mixer(topo, active))
+        return self._mixers[key]
+
+    def _base_step(self, topo: Topology, active: np.ndarray):
+        from repro.core import driver
+        return driver.make_step(self.model, self.algo,
+                                self._mixer(topo, active), self._adapter())
+
+    def _step(self, topo: Topology, active: np.ndarray,
+              frozen: np.ndarray):
+        from repro.core import driver
+        key = (self.phase, topo.edge_key(), self._mask_key(active),
+               self._freeze_key(frozen))
+        if key not in self._steps:
+            step = self._base_step(topo, active)
+            if key[-1] is not None:
+                # hold exactly the frozen subset; isolate stragglers
+                # (down but unfrozen) keep taking local steps
+                step = driver.make_frozen_step(step, ~frozen)
+            self._steps[key] = step
+        return self._steps[key]
+
+    def runner(self, topo: Topology, active: np.ndarray,
+               frozen: np.ndarray) -> Callable:
+        from repro.core import driver
+        key = (self.phase, topo.edge_key(), self._mask_key(active),
+               self._freeze_key(frozen))
+        if key not in self._runners:
+            self._runners[key] = driver.make_runner(
+                self._step(topo, active, frozen), self._sampler(),
+                self.lr_fn, self.driver_mode)
+        run = self._runners[key]
+        if self.phase == "plain":
+            return run
+        return lambda p, o, k, s0, ns: run(p, o, k, s0, ns, self.ctx)
+
+
+def _resolve_topology(ev: RewireEvent, n: int) -> Topology:
+    topo = ev.topology
+    if isinstance(topo, str):
+        topo = Topology.make(topo, n)
+    if topo.n != n:
+        raise ValueError(f"rewire topology has {topo.n} nodes, run has {n}")
+    return topo
+
+
+def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
+                 opt_state, key, *, topology: Topology,
+                 ledger: Optional[CommLedger] = None,
+                 param_count: int = 0, elem_bytes: int = 4,
+                 resume_step: int = 0, capture_at: Optional[int] = None
+                 ) -> Tuple[Any, Any, Any, Optional[Dict]]:
+    """Drive the full schedule. Returns ``(params, opt_state, key,
+    captured)`` where ``captured`` is the ``{"params", "opt_state",
+    "key", "step"}`` snapshot taken at the ``capture_at`` boundary
+    (None when not requested).
+
+    ``resume_step`` must satisfy ``schedule.validate_resume``; segments
+    ending at or before it are skipped (topology events still replay so
+    the graph state is correct when training picks back up).
+    """
+    n = topology.n
+    schedule.validate_resume(resume_step)
+    if capture_at is not None:
+        if capture_at != 0 and \
+                capture_at not in {s.stop for s in schedule.segments}:
+            raise ValueError(f"capture_at={capture_at} is not a segment "
+                             "boundary of this schedule")
+        if capture_at <= resume_step and not (capture_at == resume_step == 0):
+            raise ValueError(
+                f"capture_at={capture_at} lies in the span skipped by "
+                f"resume_step={resume_step}; nothing would be captured")
+    active = np.ones(n, bool)
+    frozen = np.zeros(n, bool)    # down nodes with freeze (vs isolate) mode
+    fired = 0                 # homogenization rounds fired so far
+    captured: Optional[Dict] = None
+    if capture_at == 0:
+        captured = {"params": params, "opt_state": opt_state, "key": key,
+                    "step": 0}
+
+    for seg in schedule.segments:
+        skipped = seg.stop <= resume_step
+        for ev in seg.events:
+            if isinstance(ev, ChurnEvent):
+                active = active.copy()
+                frozen = frozen.copy()
+                for i in (*ev.down, *ev.up):
+                    if not 0 <= i < n:
+                        raise ValueError(
+                            f"churn event at step {ev.step} names node "
+                            f"{i} outside [0, {n})")
+                for i in ev.down:
+                    active[i] = False
+                    frozen[i] = ev.mode == "freeze"
+                for i in ev.up:
+                    active[i] = True
+                    frozen[i] = False
+                if not active.any():
+                    raise ValueError(f"churn at step {ev.step} leaves no "
+                                     "active nodes")
+                hooks.on_topology(topology, active, frozen)
+            elif isinstance(ev, RewireEvent):
+                topology = _resolve_topology(ev, n)
+                hooks.on_topology(topology, active, frozen)
+            elif isinstance(ev, HomogenizeEvent):
+                if skipped:
+                    fired += 1      # round happened before the checkpoint
+                    continue
+                label_bytes = hooks.on_round(params, fired, ev.step,
+                                             topology, active)
+                fired += 1
+                if ledger is not None and label_bytes is not None:
+                    ledger.log_labels(fired, ev.step,
+                                      np.asarray(label_bytes))
+        if skipped:
+            continue
+
+        runner = hooks.runner(topology, active, frozen)
+        if ledger is not None and param_count:
+            ledger.log_gossip(
+                fired, seg.start, seg.stop,
+                gossip_bytes_per_step(topology, active, param_count,
+                                      elem_bytes))
+        params, opt_state, key, losses = runner(
+            params, opt_state, key, jnp.asarray(seg.start, jnp.int32),
+            seg.num_steps)
+        if capture_at == seg.stop:
+            captured = {"params": params, "opt_state": opt_state,
+                        "key": key, "step": seg.stop}
+        if seg.eval_after:
+            hooks.on_eval(params, seg.stop - 1, losses)
+
+    return params, opt_state, key, captured

@@ -107,6 +107,46 @@ def test_relaysgd_requires_tree():
         make_algorithm("relaysgd", topology=Topology.make("ring", 8))
 
 
+def test_qgm_fused_step_matches_unfused_reference():
+    """The fused 4-pass QG-DSGDm-N step (ROADMAP thunk-floor item) must
+    match the textbook unfused sequence — wd, grad-norm, scale, momentum
+    axpy, half-step, mix, displacement EMA — bitwise on f32 params."""
+    from repro.core.algorithms import (_apply_weight_decay, global_grad_norm,
+                                       make_qg_dsgdm_n, tree_axpy,
+                                       tree_scale, tree_sub)
+
+    def unfused_step(params, grads, state, lr, mix, momentum=0.9,
+                     weight_decay=1e-4, eps=1e-8):
+        grads = _apply_weight_decay(params, grads, weight_decay)
+        gn = global_grad_norm(grads)
+        grads = tree_scale(1.0 / (gn + eps), grads)
+        upd = tree_axpy(momentum, state["m"], grads)
+        half = tree_axpy(-lr, upd, params)
+        new_params = mix(half)
+        d = tree_scale(1.0 / lr, tree_sub(params, new_params))
+        m = jax.tree.map(
+            lambda mi, di: (momentum * mi.astype(jnp.float32)
+                            + (1 - momentum) * di.astype(jnp.float32)
+                            ).astype(mi.dtype), state["m"], d)
+        return new_params, {"m": m}
+
+    targets, topo, mix, params = _setup(seed=3)
+    params = {"x": jnp.asarray(
+        np.random.default_rng(1).normal(size=(N, DIM)), jnp.float32)}
+    algo = make_qg_dsgdm_n(momentum=0.9, weight_decay=1e-4)
+    s_f = s_u = algo.init(params)
+    p_f = p_u = params
+    lr = jnp.asarray(0.07, jnp.float32)
+    for t in range(4):
+        g = _grads(p_u, targets)
+        p_f, s_f = algo.step(p_f, _grads(p_f, targets), s_f, lr, mix)
+        p_u, s_u = unfused_step(p_u, g, s_u, lr, mix)
+    assert np.allclose(np.asarray(p_f["x"]), np.asarray(p_u["x"]),
+                       atol=1e-6)
+    assert np.allclose(np.asarray(s_f["m"]["x"]), np.asarray(s_u["m"]["x"]),
+                       atol=1e-6)
+
+
 def test_qgm_momentum_tracks_displacement():
     """QGM buffer must be EMA of (x_t − x_{t+1})/lr, not the raw gradient."""
     targets, topo, mix, params = _setup()

@@ -5,6 +5,10 @@ import pytest
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs import get_config
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.configs.resnet20_cifar import SMALL_CONFIG
+from repro.core.simulator import DecentralizedSimulator
+from repro.data.synthetic import make_classification_data, make_public_data
 from repro.models import build_model
 
 
@@ -40,3 +44,55 @@ def test_structure_mismatch_raises(tmp_path):
     save_checkpoint(path, {"a": jnp.ones(3)})
     with pytest.raises(ValueError):
         load_checkpoint(path, {"b": jnp.ones(3)})
+
+
+def test_resume_mid_schedule_matches_uninterrupted(tmp_path):
+    """Save at a round boundary, restore into a *fresh* simulator, and
+    rejoin the uninterrupted trajectory exactly: the scheduler re-fires
+    the homogenization round at the resume step from the restored params,
+    so the KD sampler state needs no checkpointing (DESIGN.md §6)."""
+    data = make_classification_data(image_size=8, n_train=512, n_val=64,
+                                    n_test=300, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=96, kind="aligned", seed=1)
+    mcfg = SMALL_CONFIG.replace(image_size=8)
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=3, alpha=0.05,
+                       steps=12, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=4, every_k_steps=4,
+                                       num_rounds=2, temperature=10.0,
+                                       label_topk=4,
+                                       label_backend="sparse"))
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=3)
+    full = sim.run(capture_at=8)             # 8 = the second round step
+    assert full.captured is not None and full.captured["step"] == 8
+
+    # roundtrip the whole training state through the npz checkpoint
+    path = str(tmp_path / "mid_schedule")
+    state = {"params": full.captured["params"],
+             "opt_state": full.captured["opt_state"],
+             "key": full.captured["key"]}
+    save_checkpoint(path, state, step=full.captured["step"])
+    fresh = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                   eval_every=3)
+    like = {"params": fresh._stacked_init(),
+            "opt_state": fresh.algo.init(fresh._stacked_init()),
+            "key": jax.random.PRNGKey(0)}
+    restored, step = load_checkpoint(path, like)
+    resumed = fresh.run(resume={**restored, "step": step})
+
+    tail = len(resumed.acc_history)
+    assert tail >= 1
+    assert np.allclose(resumed.acc_history, full.acc_history[-tail:],
+                       atol=1e-5)
+    assert np.allclose(resumed.loss_history, full.loss_history[-tail:],
+                       atol=1e-4)
+    # the resumed ledger only covers the resumed span
+    assert sum(r["steps"] for r in resumed.ledger["per_round"]) == 4
+
+    # resuming anywhere past a round that is not itself a round boundary
+    # must refuse (the sampler payload would be stale)
+    with pytest.raises(ValueError, match="round boundary"):
+        fresh.run(resume={**restored, "step": 7})
+    # a capture point inside the resumed-over span can never fire
+    with pytest.raises(ValueError, match="skipped by"):
+        fresh.run(resume={**restored, "step": step}, capture_at=4)

@@ -80,3 +80,31 @@ def test_homogenized_sampler_mixes_sources():
     priv, pub, is_pub = s.sample()
     assert is_pub.mean() > 0.5  # public pool much larger than private
     assert (pub < 50).all()
+
+
+def test_homogenized_sampler_refresh_swaps_round_state():
+    """refresh() is the host-side repeated-round path: a new round's
+    D_ID selection and payload replace the old without resetting the
+    per-node RNG streams."""
+    rng = np.random.default_rng(0)
+    parts = [np.arange(10), np.arange(10, 20)]
+    w1 = np.zeros((2, 50), np.float32)
+    w1[:, :10] = 1.0
+    lab1 = rng.dirichlet(np.ones(4), size=(2, 50)).astype(np.float32)
+    s = HomogenizedSampler(parts, w1, batch_size=64, seed=0,
+                           public_labels=lab1)
+    _, pub1, is_pub1 = s.sample()
+    assert (pub1[is_pub1] < 10).all()
+    w2 = np.zeros((2, 50), np.float32)
+    w2[:, 40:] = 1.0
+    lab2 = rng.dirichlet(np.ones(4), size=(2, 50)).astype(np.float32)
+    s.refresh(w2, public_labels=lab2)
+    _, pub2, is_pub2 = s.sample()
+    assert (pub2[is_pub2] >= 40).all()       # draws follow the new D_ID
+    assert np.allclose(s.gather_public(pub2),
+                       lab2[np.arange(2)[:, None], pub2])
+    # RNG streams advance across a refresh — same round state again does
+    # not replay the previous draws
+    s.refresh(w2, public_labels=lab2)
+    _, pub3, _ = s.sample()
+    assert not np.array_equal(pub2, pub3)

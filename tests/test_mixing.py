@@ -92,14 +92,23 @@ def test_auto_backend_picks_roll_on_ring_gather_elsewhere(monkeypatch):
     assert _tree_allclose(make_mixer(torus)(xt),
                           make_mixer(torus, backend="dense")(xt))
     # pin the *selection*, not just value equality (all backends agree
-    # numerically, so a broken _is_ring would otherwise pass silently)
+    # numerically, so a broken _is_ring would otherwise pass silently);
+    # sentinels are functions because make_mixer tags its result with a
+    # .remake handle
     from repro.core import mixing
+
+    def roll_sentinel(tree):
+        return "ROLL"
+
+    def gather_sentinel(tree):
+        return "GATHER"
+
     monkeypatch.setattr(mixing, "make_roll_mixer",
-                        lambda n, wd="native": "ROLL")
+                        lambda n, wd="native": roll_sentinel)
     monkeypatch.setattr(mixing, "make_gather_mixer",
-                        lambda t, wd="native": "GATHER")
-    assert mixing.make_mixer(ring) == "ROLL"
-    assert mixing.make_mixer(torus) == "GATHER"
+                        lambda t, wd="native", active=None: gather_sentinel)
+    assert mixing.make_mixer(ring) is roll_sentinel
+    assert mixing.make_mixer(torus) is gather_sentinel
 
 
 def test_wire_dtype_native_close_to_f32_wire():

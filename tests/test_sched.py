@@ -1,0 +1,416 @@
+"""Federation scheduler tests (repro.sched + both drivers' ports onto it).
+
+* schedule compiler: degenerate boundaries == the drivers' historical
+  ``eval_boundaries``; events land on the right segments; malformed
+  schedule params fail loudly;
+* degenerate-schedule equivalence: the scheduler-driven simulator
+  reproduces a faithful reimplementation of the pre-scheduler loop
+  (same steps, samplers, keys) to float tolerance;
+* churn: masked Metropolis stays doubly stochastic, frozen nodes hold
+  params/opt state, end-to-end runs stay finite and ship fewer bytes;
+* repeated rounds: K>1 homogenizations re-label and refresh the sampler
+  payload; the ledger buckets gossip + label bytes per round;
+* rewire: mid-run graph swap remakes the mixer;
+* launch path: K-round churn scenario end-to-end through run_training;
+* the bench regression guard's extract/compare logic.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.configs.resnet20_cifar import SMALL_CONFIG
+from repro.core import driver
+from repro.core.simulator import DecentralizedSimulator
+from repro.core.topology import Topology
+from repro.data.synthetic import make_classification_data, make_public_data
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    data = make_classification_data(image_size=8, n_train=512, n_val=64,
+                                    n_test=300, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=96, kind="aligned", seed=1)
+    return data, pub
+
+
+@pytest.fixture(scope="module")
+def mcfg():
+    return SMALL_CONFIG.replace(image_size=8)
+
+
+# ------------------------------------------------------- schedule compiler
+def test_degenerate_boundaries_match_eval_boundaries():
+    """The compiled segment spans must be *identical* to the boundaries
+    both drivers consumed before the scheduler existed (DESIGN.md §6
+    degenerate-schedule equivalence, structural half)."""
+    for steps, ee, start in [(8, 3, 4), (300, 50, 180), (20, 7, 0),
+                             (10, 100, 5), (6, 2, 5)]:
+        s = sched.compile_schedule(steps, ee, round_steps=(start,))
+        assert s.boundaries() == driver.eval_boundaries(steps, ee,
+                                                        extra=start)
+        s0 = sched.compile_schedule(steps, ee)
+        assert s0.boundaries() == driver.eval_boundaries(steps, ee)
+        # eval flags reproduce the drivers' historical eval rule
+        for seg in s.segments:
+            last = seg.stop - 1
+            assert seg.eval_after == (last % ee == 0 or last == steps - 1)
+
+
+def test_events_attach_to_their_segment_in_order():
+    ev = [sched.ChurnEvent(step=6, down=(1,)),
+          sched.RewireEvent(step=6, topology="full")]
+    s = sched.compile_schedule(12, 4, round_steps=(6,), events=ev)
+    seg = next(g for g in s.segments if g.start == 6)
+    # churn/rewire fire before the homogenization round at the same step
+    assert isinstance(seg.events[-1], sched.HomogenizeEvent)
+    assert {type(e) for e in seg.events[:-1]} == {sched.ChurnEvent,
+                                                  sched.RewireEvent}
+    assert s.round_steps == (6,)
+    # every event step is a chunk boundary
+    assert 6 in {g.start for g in s.segments}
+
+
+def test_unknown_schedule_params_fail_loudly():
+    with pytest.raises(TypeError, match="unknown schedule event"):
+        sched.compile_schedule(10, 5, events=[object()])
+    with pytest.raises(ValueError, match="churn mode"):
+        sched.compile_schedule(
+            10, 5, events=[sched.ChurnEvent(step=2, down=(0,),
+                                            mode="pause")])
+    with pytest.raises(ValueError, match="names no"):
+        sched.compile_schedule(10, 5, events=[sched.ChurnEvent(step=2)])
+    with pytest.raises(ValueError, match="outside"):
+        sched.compile_schedule(10, 5, round_steps=(10,))
+    with pytest.raises(ValueError, match="outside"):
+        sched.compile_schedule(
+            10, 5, events=[sched.RewireEvent(step=11)])
+    with pytest.raises(ValueError, match="every_k_steps"):
+        sched.idkd_round_steps(IDKDConfig(start_step=0, num_rounds=3,
+                                          every_k_steps=0), 100)
+    with pytest.raises(ValueError, match="malformed churn spec"):
+        sched.parse_churn("3@@5", 8, 100)
+    with pytest.raises(ValueError, match="churn node"):
+        sched.parse_churn("9@5-7", 8, 100)
+
+
+def test_idkd_round_steps_spacing_and_clipping():
+    cfg = IDKDConfig(start_step=10, every_k_steps=20, num_rounds=4)
+    assert sched.idkd_round_steps(cfg, 100) == (10, 30, 50, 70)
+    assert sched.idkd_round_steps(cfg, 45) == (10, 30)   # clipped
+    assert sched.idkd_round_steps(
+        IDKDConfig(start_step=10, num_rounds=0), 100) == ()
+    assert sched.idkd_round_steps(
+        IDKDConfig(start_step=-1), 100) == ()
+    # the paper's default: one round at start_step
+    assert sched.idkd_round_steps(IDKDConfig(start_step=7), 100) == (7,)
+
+
+def test_resume_validation():
+    s = sched.compile_schedule(12, 4, round_steps=(4, 8))
+    s.validate_resume(0)
+    s.validate_resume(8)             # a round boundary — legal
+    with pytest.raises(ValueError, match="not a segment boundary"):
+        s.validate_resume(3)
+    with pytest.raises(ValueError, match="round boundary"):
+        s.validate_resume(5)         # past round 4, not itself a round
+
+
+# ---------------------------------------------------------------- ledger
+def test_ledger_gossip_and_label_accounting():
+    topo = Topology.make("ring", 4)
+    per_step = sched.gossip_bytes_per_step(topo, None, param_count=10,
+                                           elem_bytes=4)
+    assert per_step.tolist() == [80, 80, 80, 80]     # deg 2 · 10 · 4
+    act = np.array([True, True, True, False])
+    masked = sched.gossip_bytes_per_step(topo, act, 10, 4)
+    # node 3 silent; its ring neighbours 0 and 2 each lose one link
+    assert masked.tolist() == [40, 80, 40, 0]
+
+    led = sched.CommLedger(4)
+    led.log_gossip(0, 0, 5, per_step)
+    led.log_gossip(1, 5, 8, masked)
+    led.log_labels(1, 5, np.array([100.0, 0.0, 50.0, 0.0]))
+    assert led.gossip_bytes == 80 * 4 * 5 + 160 * 3
+    assert led.label_bytes == 150.0
+    assert led.gossip_steps() == 8
+    rounds = led.per_round()
+    assert [r["round"] for r in rounds] == [0, 1]
+    assert rounds[0]["gossip_bytes"] == 1600.0
+    assert rounds[1]["labels_bytes"] == 150.0
+    assert rounds[1]["labels_per_node"] == [100.0, 0.0, 50.0, 0.0]
+    assert led.as_dict()["total_bytes"] == led.total_bytes
+
+
+def test_wire_elem_bytes():
+    assert sched.wire_elem_bytes("float32", "bfloat16") == 4
+    assert sched.wire_elem_bytes("native", "bfloat16") == 2
+    assert sched.wire_elem_bytes("native", "float32") == 4
+
+
+# ---------------------------------------------------------- frozen nodes
+def test_frozen_step_holds_down_nodes():
+    n = 3
+
+    def fake_step(params, opt_state, batch, lr):
+        upd = jax.tree.map(lambda x: x + 1.0, params)
+        opt = {"m": opt_state["m"] + 2.0, "t": opt_state["t"] + 1}
+        return upd, opt, jnp.asarray(0.0)
+
+    fake_step.init_opt = lambda p: None
+    active = np.array([True, False, True])
+    frozen = driver.make_frozen_step(fake_step, active)
+    params = {"w": jnp.zeros((n, 2))}
+    opt = {"m": jnp.zeros((n,)), "t": jnp.zeros((), jnp.int32)}
+    p1, o1, _ = frozen(params, opt, {}, 0.1)
+    assert np.allclose(np.asarray(p1["w"]), [[1, 1], [0, 0], [1, 1]])
+    assert np.allclose(np.asarray(o1["m"]), [2, 0, 2])
+    assert int(o1["t"]) == 1                 # scalar leaves pass through
+
+
+def test_masked_label_round_excludes_down_nodes():
+    from repro.core import labeling
+    rng = np.random.default_rng(0)
+    n, P, C = 4, 12, 10
+    pub_logits = jnp.asarray(rng.normal(size=(n, P, C)), jnp.float32)
+    val_logits = jnp.asarray(rng.normal(size=(n, 8, C)), jnp.float32)
+    topo = Topology.make("ring", n)
+    active = np.array([True, True, False, True])
+    out = labeling.label_round(pub_logits, val_logits, None, topo,
+                               IDKDConfig(), backend="dense",
+                               filter_ood=False, active=active)
+    # down node contributes nothing and receives nothing
+    assert not np.asarray(out.id_masks)[2].any()
+    assert not (np.asarray(out.weights)[2] > 0).any()
+    # its neighbours still hear from their other neighbour + themselves
+    assert (np.asarray(out.weights)[1] > 0).any()
+
+
+# ---------------------------------------- degenerate trajectory equivalence
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_degenerate_schedule_reproduces_legacy_loop(tiny_data, mcfg,
+                                                    backend):
+    """A 1-round schedule at start_step must reproduce the pre-scheduler
+    drivers exactly: this re-implements the seed's hand-rolled outer loop
+    (eval_boundaries + one homogenization + sampler swap) against the
+    same jitted steps and compares trajectories."""
+    data, pub = tiny_data
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=3, alpha=0.05,
+                       steps=8, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=4, temperature=10.0,
+                                       label_topk=4, label_backend=backend))
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=3)
+    res = sim.run()
+
+    # ---- faithful legacy loop (what simulator.run did before the sched)
+    from repro.core import labeling
+    icfg = tcfg.idkd
+    C = mcfg.num_classes
+    params = sim._stacked_init()
+    opt_state = sim.algo.init(params)
+    key = jax.random.PRNGKey(tcfg.seed)
+    priv_parts = driver.pad_partitions(sim.parts)
+    sampler = driver.make_classification_sampler(
+        priv_parts, data.train_x, data.train_y, C, tcfg.batch_size)
+    runner = driver.make_runner(sim._plain_step, sampler, sim.lr_fn,
+                                sim.driver_mode)
+    acc_hist, loss_hist = [], []
+    hom = None
+    for a, b in driver.eval_boundaries(tcfg.steps, 3, icfg.start_step):
+        if hom is None and a == icfg.start_step:
+            hom = sim._homogenize(params, icfg)
+            sparse_round = isinstance(hom, labeling.SparseHomogenizedSet)
+            payload = (hom.labels if sparse_round
+                       else np.asarray(hom.labels))
+            pub_parts = driver.pad_partitions(
+                [np.flatnonzero(w > 0) for w in np.asarray(hom.weights)])
+            sampler = driver.make_homogenized_sampler(
+                priv_parts, pub_parts, data.train_x, data.train_y, pub,
+                np.asarray(hom.weights), payload, C, tcfg.batch_size)
+            step_fn = (sim._sparse_kd_step if sparse_round
+                       else sim._kd_step)
+            runner = driver.make_runner(step_fn, sampler, sim.lr_fn,
+                                        sim.driver_mode)
+        params, opt_state, key, _ = runner(
+            params, opt_state, key, jnp.asarray(a, jnp.int32), b - a)
+        last = b - 1
+        if last % 3 == 0 or last == tcfg.steps - 1:
+            acc, nll = sim._eval(params)
+            acc_hist.append(acc)
+            loss_hist.append(nll)
+
+    assert np.allclose(res.acc_history, acc_hist, atol=1e-5)
+    assert np.allclose(res.loss_history, loss_hist, atol=1e-4)
+
+
+# ------------------------------------------------------------ multi-round
+def test_multi_round_refreshes_sampler_and_ledger(tiny_data, mcfg):
+    data, pub = tiny_data
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=3, alpha=0.05,
+                       steps=10, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=2, every_k_steps=3,
+                                       num_rounds=3, temperature=10.0,
+                                       label_topk=4,
+                                       label_backend="sparse"))
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=4)
+    r = sim.run()
+    assert [d["step"] for d in r.rounds] == [2, 5, 8]
+    assert np.isfinite(r.acc_history).all()
+    label_rows = [row for row in r.ledger["per_round"]
+                  if row["labels_bytes"] > 0]
+    assert len(label_rows) == 3              # one label exchange per round
+    assert r.label_bytes_total == sum(row["labels_bytes"]
+                                      for row in label_rows)
+    # gossip covers every training step across the buckets
+    assert sum(row["steps"] for row in r.ledger["per_round"]) == tcfg.steps
+
+
+# ------------------------------------------------------------------ churn
+def test_churn_scenario_end_to_end_and_cheaper(tiny_data, mcfg):
+    data, pub = tiny_data
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=4, alpha=0.05,
+                       steps=10, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=3, every_k_steps=4,
+                                       num_rounds=2, temperature=10.0))
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=4)
+    static = sim.run()
+    events = [sched.ChurnEvent(step=3, down=(3,)),
+              sched.ChurnEvent(step=7, up=(3,))]
+    schedule = sched.compile_schedule(
+        tcfg.steps, 4, round_steps=sim.default_schedule().round_steps,
+        events=events)
+    churned = sim.run(schedule=schedule)
+    assert np.isfinite(churned.acc_history).all()
+    # the down window ships fewer parameter bytes than the static run
+    assert churned.ledger["gossip_bytes"] < static.ledger["gossip_bytes"]
+    per_node = np.sum([row["gossip_per_node"]
+                       for row in churned.ledger["per_round"]], axis=0)
+    assert per_node[3] < per_node[1]          # node 3 was silent for a span
+
+
+def test_freeze_vs_isolate_node_semantics_end_to_end(tiny_data, mcfg):
+    """Straggler (isolate) nodes keep taking local steps while off the
+    wire; frozen nodes hold their params entirely. Verified end to end
+    through the scheduler by capturing node params at the down boundary
+    and at the end of the run (same seed → comparable captures)."""
+    data, _ = tiny_data
+    topo = Topology.make("ring", 4)
+    W = topo.mixing_matrix(np.array([True, True, False, True]))
+    assert W[2, 2] == 1.0 and W[2].sum() == 1.0   # identity row off-wire
+
+    tcfg = TrainConfig(algorithm="dsgd", num_nodes=4, alpha=0.1, steps=6,
+                       batch_size=8, lr=0.3, seed=7)
+
+    def node2_params(mode):
+        sim = DecentralizedSimulator(mcfg, tcfg, data, None, kd_mode=None,
+                                     eval_every=5)
+        schedule = sched.compile_schedule(
+            tcfg.steps, 5,
+            events=[sched.ChurnEvent(step=2, down=(2,), mode=mode)])
+        at_down = sim.run(schedule=schedule,
+                          capture_at=2).captured["params"]
+        at_end = sim.run(schedule=schedule,
+                         capture_at=tcfg.steps).captured["params"]
+        return (np.asarray(jax.tree.leaves(at_down)[0][2], np.float32),
+                np.asarray(jax.tree.leaves(at_end)[0][2], np.float32))
+
+    frozen_down, frozen_end = node2_params("freeze")
+    assert np.array_equal(frozen_down, frozen_end)       # held exactly
+    iso_down, iso_end = node2_params("isolate")
+    assert not np.array_equal(iso_down, iso_end)         # kept training
+
+
+def test_mixed_churn_modes_coexist():
+    """A later isolate event must not rewrite an earlier freeze event's
+    semantics: each ChurnEvent's mode applies to its own nodes."""
+    seen = []
+
+    class Spy(sched.FederationHooks):
+        def on_topology(self, topology, active, frozen):
+            seen.append(("topo", active.copy(), frozen.copy()))
+
+        def runner(self, topology, active, frozen):
+            seen.append(("runner", active.copy(), frozen.copy()))
+            return lambda p, o, k, s0, ns: (p, o, k, np.zeros(ns))
+
+    s = sched.compile_schedule(6, 6, events=[
+        sched.ChurnEvent(step=1, down=(1,), mode="freeze"),
+        sched.ChurnEvent(step=2, down=(2,), mode="isolate")])
+    topo = Topology.make("ring", 4)
+    sched.run_schedule(s, Spy(), {}, {}, jax.random.PRNGKey(0),
+                       topology=topo)
+    runner_states = [x for x in seen if x[0] == "runner"]
+    # after the second event: nodes 1 and 2 both down, only node 1 frozen
+    _, active, frozen = runner_states[-1]
+    assert not active[1] and not active[2]
+    assert frozen[1] and not frozen[2]
+
+
+# ----------------------------------------------------------------- rewire
+def test_rewire_swaps_gossip_graph(tiny_data, mcfg):
+    data, _ = tiny_data
+    tcfg = TrainConfig(algorithm="dsgd", num_nodes=4, alpha=0.1, steps=6,
+                       batch_size=8, lr=0.2, seed=7)
+    sim = DecentralizedSimulator(mcfg, tcfg, data, None, kd_mode=None,
+                                 eval_every=5)
+    schedule = sched.compile_schedule(
+        tcfg.steps, 5, events=[sched.RewireEvent(step=3, topology="full")])
+    r = sim.run(schedule=schedule)
+    assert np.isfinite(r.acc_history).all()
+    full_key = Topology.make("full", 4).edge_key()
+    assert any(k[0] == full_key for k in sim._fed._mixers)
+    # ledger sees the degree jump: ring gossips 2 links/node, full 3
+    rows = r.ledger["per_round"]
+    assert rows[0]["gossip_per_node"][0] > 0
+
+
+# ------------------------------------------------------- launch (LM) path
+def test_lm_multi_round_churn_schedule():
+    from repro.configs import get_config
+    from repro.launch.train import run_training
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    tcfg = TrainConfig(num_nodes=2, steps=8, lr=0.1, alpha=0.1,
+                       batch_size=4,
+                       idkd=IDKDConfig(start_step=3, every_k_steps=3,
+                                       num_rounds=2, label_topk=4,
+                                       kd_weight=0.3))
+    out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                       use_idkd=True, log_every=4, verbose=False,
+                       events=[sched.ChurnEvent(step=4, down=(1,)),
+                               sched.ChurnEvent(step=6, up=(1,))])
+    assert all(np.isfinite(out["loss_history"]))
+    led = out["ledger"]
+    assert led["label_bytes"] > 0
+    assert len([r for r in led["per_round"] if r["labels_bytes"] > 0]) == 2
+    assert out["schedule"].round_steps == (3, 6)
+
+
+# -------------------------------------------------- bench regression guard
+def test_check_regression_extract_and_compare(capsys):
+    from benchmarks.check_regression import compare, extract_metrics
+    doc = {"meta": {"what": "x"},
+           "cells": [
+               {"path": "sim", "kd": False, "mode": "scan",
+                "us_per_step": 100.0},
+               {"scenario": "churn", "rounds_requested": 4,
+                "us_per_step": 50.0, "wall_s": 1.0},
+           ]}
+    base = extract_metrics(doc)
+    assert len(base) == 3
+    fresh = {k: v * 1.6 for k, v in base.items()}
+    assert compare(base, fresh, threshold=1.5) == 3
+    assert compare(base, {k: v * 1.2 for k, v in base.items()},
+                   threshold=1.5) == 0
+    # partially disjoint names are reported but don't fail...
+    partial = dict(base)
+    partial["extra/us_per_step"] = 1.0
+    assert compare(base, partial, threshold=1.5) == 0
+    # ...but zero overlap (schema drift) fails loudly
+    assert compare(base, {"other": 1.0}, threshold=1.5) == 1
