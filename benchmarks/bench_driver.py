@@ -15,6 +15,19 @@ plain and KD phases. Three drivers per cell:
 * ``scan``     — the driver's ``lax.scan`` chunk runner: zero per-step
   dispatch or host round-trips.
 
+Plus the sharded driver cells (DESIGN.md §7), labeled with the node-mesh
+device count so runs at different mesh sizes never collide in the
+regression guard:
+
+* ``shard``       — ``make_shard_step`` under ``shard_map`` over the
+  node mesh (ppermute gossip), driven by the same scan runner. Run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to measure the
+  real 8-device placement (the committed baseline's sharded cells).
+* ``scan_im2col`` — (sim path only) the node-stacked scan runner on the
+  *same* config the shard cell uses (im2col convs + sparse-KD payloads),
+  i.e. the apples-to-apples node-stacked comparator for the shard ratio.
+  The LM cells need no twin: their scan/shard configs are identical.
+
 Medians over interleaved rounds (this keeps CPU-frequency / noisy-
 neighbour drift out of the ratios). Writes ``BENCH_driver.json``.
 
@@ -149,6 +162,68 @@ def _sim_cell(kd: bool):
     return _median_rates({"preref": preref, "host": host, "scan": scan})
 
 
+def _sim_shard_cell(kd: bool):
+    """Sharded sim cells: the same workload on the shard-mode config
+    (im2col convs — lax convs are host-bound on CPU — and sparse-KD
+    payloads, the only wire format shard mode exchanges), node-stacked
+    vs shard_map. Interleaved together so the ratio is clean."""
+    from repro.core.topology import Topology
+    from repro.launch.mesh import make_node_mesh
+    from repro.launch.sharding import node_stacked_shardings
+
+    data = make_classification_data(image_size=8, n_train=1024, n_val=64,
+                                    n_test=128, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=256, kind="aligned", seed=1)
+    mcfg = SMALL_CONFIG.replace(image_size=8, cnn_stages=(1, 1, 1),
+                                cnn_width=8, conv_backend="im2col")
+    icfg = IDKDConfig(start_step=0, temperature=10.0, label_topk=8,
+                      label_backend="sparse")
+    tcfg = TrainConfig(num_nodes=NODES, steps=CHUNK, batch_size=16, seed=4,
+                       idkd=icfg)
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub if kd else None,
+                                 kd_mode="idkd" if kd else None)
+    params = sim._stacked_init()
+    opt = sim.algo.init(params)
+    priv = driver.pad_partitions(sim.parts)
+    mesh = make_node_mesh(NODES)
+    topo = Topology.make("ring", NODES)
+
+    if kd:
+        hom = sim._homogenize(params, icfg)
+        w = np.asarray(hom.weights)
+        payload = (np.asarray(hom.labels.values),
+                   np.asarray(hom.labels.indices))
+        pubparts = driver.pad_partitions([np.flatnonzero(x > 0) for x in w])
+        sampler = driver.make_homogenized_sampler(
+            priv, pubparts, data.train_x, data.train_y, pub, w, payload, 10,
+            tcfg.batch_size)
+        adapter = driver.sparse_kd_adapter(icfg.temperature, icfg.kd_weight)
+        stacked_step = sim._sparse_kd_step
+    else:
+        sampler = driver.make_classification_sampler(
+            priv, data.train_x, data.train_y, 10, tcfg.batch_size)
+        adapter = driver.classification_adapter
+        stacked_step = sim._plain_step
+    shard_step = driver.make_shard_step(sim.model, sim.algo, adapter,
+                                        mesh=mesh, topology=topo)
+    scanr = driver.make_runner(stacked_step, sampler, sim.lr_fn, "scan")
+    shardr = driver.make_runner(shard_step, sampler, sim.lr_fn, "shard")
+    params_sh = jax.device_put(
+        params, node_stacked_shardings(params, mesh, NODES))
+    opt_sh = jax.device_put(opt, node_stacked_shardings(opt, mesh, NODES))
+    k = jax.random.PRNGKey(0)
+    s0 = jnp.asarray(0, jnp.int32)
+
+    def scan():
+        jax.block_until_ready(scanr(params, opt, k, s0, CHUNK)[0])
+
+    def shard():
+        jax.block_until_ready(shardr(params_sh, opt_sh, k, s0, CHUNK)[0])
+
+    rates = _median_rates({"scan_im2col": scan, "shard": shard})
+    return rates, int(mesh.shape["node"])
+
+
 # -------------------------------------------------------------- LM (txf)
 def _lm_cell(kd: bool):
     n, B, S = NODES, 8, 32
@@ -217,6 +292,64 @@ def _lm_cell(kd: bool):
     return _median_rates({"preref": preref, "host": host, "scan": scan})
 
 
+def _lm_shard_cell(kd: bool):
+    """Sharded LM cells: the LM scan/shard configs are identical (no
+    convs, KD already sparse), so shard is interleaved directly against
+    the node-stacked scan runner."""
+    from repro.core.topology import Topology
+    from repro.launch.mesh import make_node_mesh
+    from repro.launch.sharding import node_stacked_shardings
+
+    n, B, S = NODES, 8, 32
+    cfg = get_config("qwen3-1.7b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    icfg = IDKDConfig(start_step=0, label_topk=8, kd_weight=0.3)
+    model = build_model(cfg)
+    topo = Topology.make("ring", n)
+    mesh = make_node_mesh(n)
+    algo = make_algorithm("qg-dsgdm-n", momentum=0.9, weight_decay=1e-4)
+    tokens, topics = make_lm_data(cfg.vocab_size, S + 1, 512, seed=4)
+    parts = dirichlet_partition(topics, n, 0.1, np.random.default_rng(4))
+    params = stack_params(model.init(jax.random.PRNGKey(0)), n)
+    adapter = driver.lm_sparse_kd_adapter(icfg) if kd else driver.lm_adapter
+    stacked_step = driver.make_step(model, algo, make_mixer(topo), adapter)
+    shard_step = driver.make_shard_step(model, algo, adapter, mesh=mesh,
+                                        topology=topo)
+    opt = stacked_step.init_opt(params)
+    lr_fn = lambda s: jnp.asarray(0.1, jnp.float32)       # noqa: E731
+    priv = driver.pad_partitions(parts)
+    if kd:
+        P = 64
+        pub_tokens, _ = make_lm_data(cfg.vocab_size, S, P, num_topics=10,
+                                     seed=103)
+        rngp = np.random.default_rng(0)
+        vals = rngp.dirichlet(np.ones(8), size=(n, P, S)).astype(np.float32)
+        idxs = rngp.integers(0, cfg.vocab_size,
+                             size=(n, P, S, 8)).astype(np.int32)
+        w = np.ones((n, P), np.float32)
+        sampler = driver.make_lm_kd_sampler(priv, tokens, B, pub_tokens,
+                                            vals, idxs, w, 4)
+    else:
+        sampler = driver.make_lm_sampler(priv, tokens, B)
+    scanr = driver.make_runner(stacked_step, sampler, lr_fn, "scan")
+    shardr = driver.make_runner(shard_step, sampler, lr_fn, "shard")
+    params_sh = jax.device_put(params,
+                               node_stacked_shardings(params, mesh, n))
+    opt_sh = jax.device_put(opt, node_stacked_shardings(opt, mesh, n))
+    k = jax.random.PRNGKey(0)
+    s0 = jnp.asarray(0, jnp.int32)
+
+    def scan():
+        jax.block_until_ready(scanr(params, opt, k, s0, CHUNK)[0])
+
+    def shard():
+        jax.block_until_ready(shardr(params_sh, opt_sh, k, s0, CHUNK)[0])
+
+    rates = _median_rates({"scan": scan, "shard": shard})
+    return rates, int(mesh.shape["node"])
+
+
 def run(out_path: str | None = "BENCH_driver.json"):
     csv, cells = [], []
     for path, cell_fn in (("sim", _sim_cell), ("lm", _lm_cell)):
@@ -231,21 +364,46 @@ def run(out_path: str | None = "BENCH_driver.json"):
                               "steps_per_sec": round(1e6 / us, 2)})
             csv.append((f"driver/{phase}_speedup", 0.0,
                         f"{rates['preref'] / rates['scan']:.2f}x"))
+    # sharded driver cells (labeled with the node-mesh device count, so
+    # baselines from different mesh sizes are guard-skipped, not compared)
+    for path, cell_fn in (("sim", _sim_shard_cell), ("lm", _lm_shard_cell)):
+        for kd in (False, True):
+            phase = f"{path}_{'kd' if kd else 'plain'}"
+            rates, devices = cell_fn(kd)
+            stacked_mode = "scan_im2col" if path == "sim" else "scan"
+            for mode, us in rates.items():
+                csv.append((f"driver/{phase}_{mode}@{devices}dev",
+                            round(us, 1), f"{1e6 / us:.1f} steps/s"))
+                cells.append({"path": path, "kd": kd, "mode": mode,
+                              "devices": devices,
+                              "us_per_step": round(us, 1),
+                              "steps_per_sec": round(1e6 / us, 2)})
+            csv.append((f"driver/{phase}_shard_vs_stacked@{devices}dev",
+                        0.0,
+                        f"{rates[stacked_mode] / rates['shard']:.2f}x"))
     if out_path:
         with open(out_path, "w") as f:
             json.dump({"meta": {
                 "nodes": NODES, "topology": "ring",
                 "chunk_steps": CHUNK, "rounds": ROUNDS,
                 "jax_backend": jax.default_backend(),
+                "devices": len(jax.devices()),
                 "what": ("decentralized driver µs/step, median over "
                          "interleaved rounds: pre-refactor host loop "
                          "(numpy sampling + per-step dispatch) vs driver "
-                         "host runner vs lax.scan chunk runner"),
+                         "host runner vs lax.scan chunk runner; plus "
+                         "shard_map node-mesh cells vs their node-stacked "
+                         "twins (mode=shard / scan_im2col, DESIGN.md §7)"),
                 "caveat": ("on few-core CPU the step's XLA thunk-execution "
                            "floor bounds the scan win (see DESIGN.md §5); "
-                           "the ≥2x dispatch-elimination target applies "
-                           "where kernels are fast relative to dispatch "
-                           "(many-core / TPU)")},
+                           "an 8-device host mesh oversubscribes the cores, "
+                           "yet the LM shard cells still beat node-stacked "
+                           "~1.5x (smaller per-device programs parallelize "
+                           "across cores better than one fused vmap graph) "
+                           "while the conv sim cells stay host-bound "
+                           "(~0.85x); the ≥2x target applies where kernels "
+                           "are fast relative to dispatch (many-core / "
+                           "TPU)")},
                 "cells": cells}, f, indent=2)
             f.write("\n")
     return [], csv

@@ -144,6 +144,13 @@ class ModelConfig:
     image_size: int = 32
     image_channels: int = 3
     num_classes: int = 10
+    conv_backend: str = "lax"           # "lax" | "im2col". im2col lowers
+                                        # convs to patch-gather + matmul,
+                                        # dodging the XLA:CPU conv
+                                        # pathologies (vmapped kernels ~4x,
+                                        # conv-in-while ~5x — DESIGN.md §5)
+                                        # so conv models can opt into the
+                                        # scan/shard runners on CPU
 
     @property
     def resolved_head_dim(self) -> int:

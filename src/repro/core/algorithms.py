@@ -129,13 +129,20 @@ def make_qg_dsgdm_n(momentum: float = 0.9, weight_decay: float = 1e-4,
     the local stochastic gradient is L2-normalized (the “-N” variant),
     making the local step scale-free under heterogeneous gradients.
 
-    The step is *fused* into four whole-tree passes — the grad-norm
-    reduction (weight decay folded in), one map computing the momentum
-    half-step x − η(βm + ĝ), the gossip mix, and one map for the
-    momentum EMA from the total displacement. The unfused form walked the
-    tree ~9 times (wd, norm, scale, two axpys, mix, sub, scale, EMA),
-    which on CPU dominated the step with hundreds of tiny thunks at small
-    scale (ROADMAP thunk-floor item; measured in bench_driver).
+    The step is *fused*: the grad-norm reduction (weight decay folded
+    in), then — when the mixer exposes the per-leaf protocol
+    (``mix.mix_leaf``, which every ``core.mixing`` backend does) — one
+    single whole-tree pass computing the momentum half-step
+    x − η(βm + ĝ), the gossip mix, and the displacement-EMA momentum
+    update per leaf. That is two tree traversals per step, down from the
+    four of the mix-as-a-separate-pass form (and ~9 in the original
+    unfused sequence: wd, norm, scale, two axpys, mix, sub, scale, EMA),
+    which on CPU dominated the step with hundreds of tiny thunks at
+    small scale (ROADMAP thunk-floor item; measured in bench_driver).
+    The per-leaf op sequence is unchanged, so the fused pass is
+    bitwise-equal to mix-then-update
+    (``test_qgm_leaf_fused_mix_bitwise_equals_mix_then_update``); mixers
+    without ``mix_leaf`` fall back to the 4-pass form.
     """
     def init(params):
         return {"m": tree_zeros_like(params)}
@@ -148,7 +155,15 @@ def make_qg_dsgdm_n(momentum: float = 0.9, weight_decay: float = 1e-4,
                                       + wd * p.astype(jnp.float32)) ** 2)
                 if wd else jnp.sum(g.astype(jnp.float32) ** 2),
                 grads, params)
-            scale = 1.0 / (jnp.sqrt(sum(jax.tree.leaves(sq))) + eps)
+            total = sum(jax.tree.leaves(sq))
+            # the norm spans the whole node-stacked tree; under shard_map
+            # (mix.axis_name set) the node axis is a mesh axis, so the
+            # local-block sum completes across devices via psum — keeps
+            # sharded trajectories equal to the node-stacked runner's
+            axis = getattr(mix, "axis_name", None)
+            if axis is not None:
+                total = jax.lax.psum(total, axis)
+            scale = 1.0 / (jnp.sqrt(total) + eps)
         else:
             scale = 1.0
 
@@ -160,9 +175,6 @@ def make_qg_dsgdm_n(momentum: float = 0.9, weight_decay: float = 1e-4,
             upd = momentum * m.astype(jnp.float32) + gf
             return (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
 
-        half = jax.tree.map(half_leaf, params, grads, state["m"])
-        new_params = mix(half)
-
         inv_lr = 1.0 / lr
 
         def m_leaf(m, p, y):
@@ -170,7 +182,23 @@ def make_qg_dsgdm_n(momentum: float = 0.9, weight_decay: float = 1e-4,
             return (momentum * m.astype(jnp.float32)
                     + (1 - momentum) * d).astype(m.dtype)
 
-        new_m = jax.tree.map(m_leaf, state["m"], params, new_params)
+        mix_leaf = getattr(mix, "mix_leaf", None)
+        if mix_leaf is None:
+            # opaque mixer: half-step map, whole-tree mix, EMA map
+            half = jax.tree.map(half_leaf, params, grads, state["m"])
+            new_params = mix(half)
+            new_m = jax.tree.map(m_leaf, state["m"], params, new_params)
+            return new_params, {"m": new_m}
+
+        # per-leaf mixer protocol: half-step + mix + displacement EMA in
+        # one traversal (same per-leaf op sequence → bitwise-equal)
+        def fused_leaf(p, g, m):
+            y = mix_leaf(half_leaf(p, g, m))
+            return y, m_leaf(m, p, y)
+
+        pairs = jax.tree.map(fused_leaf, params, grads, state["m"])
+        new_params, new_m = jax.tree.transpose(
+            jax.tree.structure(params), jax.tree.structure((0, 0)), pairs)
         return new_params, {"m": new_m}
 
     return Algorithm("qg-dsgdm-n", init, step)

@@ -31,6 +31,18 @@ per-step Python loop; it exists as the dispatch-overhead baseline
 (``benchmarks/bench_driver.py``) and the equivalence oracle
 (``tests/test_driver.py``): both runners consume identical PRNG key
 sequences, so their trajectories match to float tolerance.
+
+**Sharded execution** (``driver_mode="shard"``, DESIGN.md §7).
+:func:`make_shard_step` places the node axis on a
+``jax.sharding.Mesh`` (``launch.mesh.make_node_mesh``) and runs the
+per-node train step inside ``shard_map``: each device holds a
+contiguous block of nodes, gossip is the ``ppermute`` mixer backend
+(boundary-row collective-permutes on rings, ``psum`` exact averaging on
+the complete graph), and the per-step loss is a ``psum`` mean. From the
+outside the step has the node-stacked contract — same shapes, same
+sampler, same PRNG sequence — so the scan runner drives it unchanged
+and trajectories match the node-stacked runners to float tolerance
+(``tests/test_shard.py``).
 """
 from __future__ import annotations
 
@@ -50,20 +62,28 @@ NodeLoss = Callable[[PyTree, Batch], jax.Array]
 LossAdapter = Callable[..., NodeLoss]
 SampleFn = Callable[[jax.Array, jax.Array], Batch]
 
-RUNNER_MODES = ("scan", "host", "auto")
+RUNNER_MODES = ("scan", "host", "auto", "shard")
+NODE_AXIS = "node"
 
 
-def resolve_runner_mode(mode: str, arch_type: str = "") -> str:
+def resolve_runner_mode(mode: str, arch_type: str = "",
+                        conv_backend: str = "lax") -> str:
     """``auto`` → the empirically fastest runner for the backend.
 
-    On XLA:CPU, convolutions inside ``while`` loops fall off the threaded
-    fast path (~5× slower; measured in ``benchmarks/bench_driver.py``),
-    so conv models keep the per-step host loop there; everything else —
-    and every accelerator backend — gets the scan driver.
+    On XLA:CPU, ``lax.conv`` inside ``while`` loops falls off the
+    threaded fast path (~5× slower; measured in
+    ``benchmarks/bench_driver.py``), so conv models keep the per-step
+    host loop there — unless the model opts into the im2col conv path
+    (``ModelConfig.conv_backend="im2col"``, plain matmuls with no conv
+    pathology), which makes the scan/shard runners viable on CPU.
+    Everything else — and every accelerator backend — gets the scan
+    driver. ``"shard"`` is never picked automatically; it is an explicit
+    opt-in.
     """
     if mode != "auto":
         return mode
-    if arch_type == "cnn" and jax.default_backend() == "cpu":
+    if arch_type == "cnn" and conv_backend != "im2col" \
+            and jax.default_backend() == "cpu":
         return "host"
     return "scan"
 
@@ -166,6 +186,79 @@ def make_step(model, algo, mixer, loss_adapter) -> Callable:
         losses, grads = grad_fn(params, batch)
         params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
         return params, opt_state, jnp.mean(losses)
+
+    step.init_opt = algo.init
+    return step
+
+
+def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
+                    axis: str = NODE_AXIS) -> Callable:
+    """The decentralized train step under ``shard_map`` over the mesh
+    node axis — the ``driver_mode="shard"`` twin of :func:`make_step`.
+
+    Node-stacked params / optimizer state / batches shard their leading
+    node axis over ``mesh``'s ``axis`` (``launch.sharding.
+    node_stacked_specs``); leaves without a node axis (e.g. D²'s scalar
+    step counter) replicate. Inside the shard_map body each device runs
+    ``vmap(value_and_grad)`` over its own block of nodes and gossips
+    through the ``ppermute`` mixer backend — ring neighbours exchange
+    boundary rows via ``lax.ppermute`` (complete graphs reduce via
+    ``psum``), so the wire carries exactly the paper's peer-to-peer
+    traffic, no all-reduce. The returned step keeps :func:`make_step`'s
+    node-stacked contract (global shapes in, global shapes out, scalar
+    mean loss), so the scan runner and samplers drive it unchanged and
+    fixed-seed trajectories match the node-stacked runners to float
+    tolerance.
+
+    Eager validation (fail at build, not mid-schedule): the topology
+    must be a ring or complete graph (others need the node-stacked
+    ``gather``/``dense`` backends), the node count must be divisible by
+    the mesh size, and per-edge-state algorithms (RelaySGD) are
+    rejected. Churn / availability masks are unsupported under shard_map
+    (DESIGN.md §7) — the scheduler raises before the run starts.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import mixing
+    from repro.launch.sharding import node_stacked_specs
+
+    n = topology.n
+    size = mesh.shape[axis]
+    if n % size != 0:
+        raise ValueError(
+            f"shard driver needs the node count ({n}) divisible by the "
+            f"mesh {axis!r} axis ({size}); build the mesh with "
+            "launch.mesh.make_node_mesh")
+    if getattr(algo, "needs_topology", False):
+        raise ValueError(
+            f"algorithm {algo.name!r} carries per-edge state and cannot "
+            "run under shard_map; use the node-stacked runners "
+            "(driver_mode='scan'/'host')")
+    # rejects non-ring/non-full topologies eagerly, naming the fallback
+    mixer = mixing.make_mixer(topology, backend="ppermute",
+                              axis_names=(axis,), axis_sizes=(size,),
+                              local_nodes=n // size)
+
+    node_loss = loss_adapter(model)
+    grad_fn = jax.vmap(jax.value_and_grad(node_loss))
+
+    def body(params, opt_state, batch, lr):
+        losses, grads = grad_fn(params, batch)
+        params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
+        loss = jax.lax.psum(jnp.sum(losses), axis) / n
+        return params, opt_state, loss
+
+    def step(params, opt_state, batch, lr):
+        sharded = shard_map(
+            body, mesh=mesh,
+            in_specs=(node_stacked_specs(params, n, axis),
+                      node_stacked_specs(opt_state, n, axis),
+                      node_stacked_specs(batch, n, axis), P()),
+            out_specs=(node_stacked_specs(params, n, axis),
+                       node_stacked_specs(opt_state, n, axis), P()),
+            check_rep=False)
+        return sharded(params, opt_state, batch, lr)
 
     step.init_opt = algo.init
     return step
@@ -468,12 +561,16 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
 
 
 def make_runner(step_fn, sample_fn: SampleFn, lr_fn,
-                mode: str = "scan", arch_type: str = "") -> Callable:
+                mode: str = "scan", arch_type: str = "",
+                conv_backend: str = "lax") -> Callable:
+    """``mode="shard"`` expects a :func:`make_shard_step`-built step and
+    drives it with the scan runner — sampling stays outside shard_map
+    (replicated, identical PRNG math), the step reshards per its specs."""
     if mode not in RUNNER_MODES:
         raise ValueError(f"unknown driver mode {mode!r}; "
                          f"expected one of {RUNNER_MODES}")
-    mode = resolve_runner_mode(mode, arch_type)
-    maker = make_scan_runner if mode == "scan" else make_host_runner
+    mode = resolve_runner_mode(mode, arch_type, conv_backend)
+    maker = make_host_runner if mode == "host" else make_scan_runner
     return maker(step_fn, sample_fn, lr_fn)
 
 

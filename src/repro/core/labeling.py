@@ -264,3 +264,119 @@ def label_round(public_logits, val_logits, cal_logits, topology: Topology,
     if active is not None:
         weights = weights * act[:, None]
     return SparseHomogenizedSet(merged, weights, id_mask, thresholds)
+
+
+# ------------------------------------------------------------ sharded round
+def shard_label_round(public_logits, val_logits, topology: Topology,
+                      cfg: IDKDConfig, *, mesh, axis: str = "node",
+                      filter_ood: bool = True) -> SparseHomogenizedSet:
+    """One IDKD homogenization round under ``shard_map`` over the mesh
+    node axis — the ``driver_mode="shard"`` twin of :func:`label_round`
+    (DESIGN.md §7).
+
+    Score, calibrate, and select run *shard-local*: each device computes
+    detector confidences, ROC thresholds, D_ID masks, and the top-k
+    sparse payload for its own block of nodes with zero communication.
+    Only the label exchange crosses the node axis, and it moves nothing
+    but top-k payloads: ring neighbours swap ``(values, indices, mask)``
+    via boundary-row ``lax.ppermute`` (complete graphs ``all_gather``
+    them), never the ``(P, C)`` dense labels. The merged payload equals
+    the node-stacked sparse backend's up to a permutation along the k
+    axis (contributor order is self/prev/next instead of
+    self/sorted-neighbours) — every consumer accumulates duplicate
+    indices, so the trained trajectories agree to float tolerance and
+    the per-node payload bytes match exactly (``tests/test_shard.py``).
+
+    Always produces sparse top-k labels (the dense backend has no
+    sharded path — its wire format is the thing shard mode exists to
+    avoid); churn masks are unsupported, like the rest of shard mode.
+    Topologies other than rings / complete graphs raise eagerly — run
+    those rounds through the node-stacked :func:`label_round`.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import mixing
+
+    n = public_logits.shape[0]
+    if topology.n != n:
+        raise ValueError(f"logit stack has {n} nodes, topology "
+                         f"{topology.name!r} has {topology.n}")
+    size = mesh.shape[axis]
+    if n % size != 0:
+        raise ValueError(f"node count ({n}) not divisible by the mesh "
+                         f"{axis!r} axis ({size})")
+    ring = mixing._is_ring(topology)
+    full = mixing._is_full(topology)
+    if not (ring or full):
+        raise ValueError(
+            f"sharded label exchange supports ring/complete graphs; "
+            f"topology {topology.name!r} must use the node-stacked "
+            "labeling.label_round (backend='sparse')")
+    k = min(cfg.label_topk or DEFAULT_TOPK, public_logits.shape[-1])
+    spec = P(axis)
+
+    def _merge(parts_v, parts_i, parts_m):
+        # mean over contributors distributes over the scatter: concat
+        # contributor payloads along k with m_j/cnt weights (DESIGN.md §2)
+        cnt = sum(parts_m)                                  # (L, P)
+        share = [m / jnp.maximum(cnt, 1.0) for m in parts_m]
+        extra = parts_v[0].ndim - cnt.ndim                  # e.g. the S axis
+        vals = jnp.concatenate(
+            [v * s.reshape(s.shape + (1,) * extra)
+             for v, s in zip(parts_v, share)], axis=-1)
+        idx = jnp.concatenate(parts_i, axis=-1)
+        return (vals.astype(jnp.float32), idx.astype(jnp.int32),
+                (cnt > 0).astype(jnp.float32))
+
+    def body(pub, val):
+        # ---- score / calibrate / select: shard-local, zero comm
+        conf_pub = detector_scores(pub, cfg.detector)
+        if filter_ood:
+            thresholds = calibrate(detector_scores(val, cfg.detector),
+                                   conf_pub)
+            id_mask = conf_pub > thresholds[:, None]
+        else:
+            thresholds = jnp.zeros((pub.shape[0],), jnp.float32)
+            id_mask = jnp.ones(conf_pub.shape, bool)
+        sp = distill.sparsify_labels(
+            distill.soft_labels(pub, cfg.temperature), k)
+        m = id_mask.astype(jnp.float32)
+
+        # ---- exchange: only the top-k payload crosses the node axis
+        if full and not (ring and n <= 3):
+            vals_all = jax.lax.all_gather(sp.values, axis, axis=0,
+                                          tiled=True)       # (n, P[, S], k)
+            idx_all = jax.lax.all_gather(sp.indices, axis, axis=0,
+                                         tiled=True)
+            m_all = jax.lax.all_gather(m, axis, axis=0, tiled=True)
+            # contributor axis consumed by _merge → (P[, S], n·k) / (P,);
+            # on the complete graph every node merges the same
+            # contributor set, so the result broadcasts over local nodes
+            vals, idx, w = _merge(list(vals_all), list(idx_all),
+                                  list(m_all))
+            L = pub.shape[0]
+            vals = jnp.broadcast_to(vals[None], (L,) + vals.shape)
+            idx = jnp.broadcast_to(idx[None], (L,) + idx.shape)
+            w = jnp.broadcast_to(w[None], (L,) + w.shape)
+        elif n == 1:
+            vals, idx, w = _merge([sp.values], [sp.indices], [m])
+        else:
+            def shifted(t, s):
+                return mixing.block_ring_shift(t, axis, size, s)
+            parts_v = [sp.values, shifted(sp.values, 1)]
+            parts_i = [sp.indices, shifted(sp.indices, 1)]
+            parts_m = [m, shifted(m, 1)]
+            if n > 2:
+                parts_v.append(shifted(sp.values, -1))
+                parts_i.append(shifted(sp.indices, -1))
+                parts_m.append(shifted(m, -1))
+            vals, idx, w = _merge(parts_v, parts_i, parts_m)
+        return vals, idx, w, id_mask, thresholds
+
+    vals, idx, w, id_mask, thresholds = shard_map(
+        body, mesh=mesh, in_specs=(spec, spec),
+        out_specs=(spec, spec, spec, spec, spec), check_rep=False)(
+            public_logits, val_logits)
+    return SparseHomogenizedSet(distill.SparseLabels(vals, idx), w,
+                                id_mask, thresholds)

@@ -25,12 +25,31 @@ backends:
   the mesh node axes, each node `lax.ppermute`s its parameter shard to
   its graph neighbours and combines with its Metropolis row. Communication
   is therefore exactly the paper's peer-to-peer exchange (no all-reduce),
-  visible in the compiled HLO as `collective-permute` ops.
+  visible in the compiled HLO as `collective-permute` ops. With
+  ``local_nodes > 1`` each mesh index holds a contiguous *block* of the
+  global node axis and only the boundary rows cross devices (the sharded
+  driver's layout when nodes outnumber devices); a complete-graph
+  topology routes to :func:`make_psum_mixer` instead (exact averaging —
+  the full graph's Metropolis matrix is uniform 1/n).
 
 All node-stacked backends take ``wire_dtype``: "native" moves parameters
 between nodes in their storage dtype (bf16 params → bf16 gossip traffic,
 §Perf byte-halving) and accumulates the weighted sum in f32; "float32"
 upcasts before the exchange (paper-faithful full-precision mixing).
+
+**Per-leaf mixer protocol.** Every mixer is leafwise: ``mix(tree)`` is
+``jax.tree.map(mix.mix_leaf, tree)``, and the factories expose the
+per-leaf function as ``mix.mix_leaf``. Optimizers use it to fuse the
+gossip mix into an adjacent whole-tree pass (QG-DSGDm-N folds mix +
+displacement-EMA + momentum half-step into a single traversal — one
+tree walk fewer per step on every backend, bitwise-equal to
+mix-then-update because the per-leaf op sequence is unchanged). The
+shard_map backends additionally expose ``mix.axis_name`` (the mesh
+axis/axes the node dimension lives on) so algorithms can turn their
+cross-node scalar reductions into ``psum``s — QG-DSGDm-N's grad-norm
+scale sums over the whole node-stacked tree, which under shard_map
+means local-block sum + psum (keeps sharded trajectories equal to the
+node-stacked ones).
 """
 from __future__ import annotations
 
@@ -54,16 +73,18 @@ Mixer = Callable[[PyTree], PyTree]
 def make_dense_mixer(W: np.ndarray, wire_dtype: str = "float32") -> Mixer:
     Wj = jnp.asarray(W, jnp.float32)
 
+    def mix_leaf(x):
+        # the einsum accumulates in f32 either way; "native" keeps the
+        # operand in storage dtype (the bytes a real wire would carry)
+        xf = x.astype(jnp.float32) if wire_dtype == "float32" else x
+        y = jnp.einsum("ij,j...->i...", Wj, xf,
+                       preferred_element_type=jnp.float32)
+        return y.astype(x.dtype)
+
     def mix(stacked: PyTree) -> PyTree:
-        def mix_leaf(x):
-            # the einsum accumulates in f32 either way; "native" keeps the
-            # operand in storage dtype (the bytes a real wire would carry)
-            xf = x.astype(jnp.float32) if wire_dtype == "float32" else x
-            y = jnp.einsum("ij,j...->i...", Wj, xf,
-                           preferred_element_type=jnp.float32)
-            return y.astype(x.dtype)
         return jax.tree.map(mix_leaf, stacked)
 
+    mix.mix_leaf = mix_leaf
     return mix
 
 
@@ -85,14 +106,16 @@ def make_gather_mixer(topology: Topology, wire_dtype: str = "native",
     nbr_j = jnp.asarray(nbr)
     w_j = jnp.asarray(w, jnp.float32)
 
+    def mix_leaf(x):
+        xw = x.astype(jnp.float32) if wire_dtype == "float32" else x
+        g = xw[nbr_j]                                       # (n, D, ...)
+        y = jnp.einsum("nd,nd...->n...", w_j, g.astype(jnp.float32))
+        return y.astype(x.dtype)
+
     def mix(stacked: PyTree) -> PyTree:
-        def mix_leaf(x):
-            xw = x.astype(jnp.float32) if wire_dtype == "float32" else x
-            g = xw[nbr_j]                                   # (n, D, ...)
-            y = jnp.einsum("nd,nd...->n...", w_j, g.astype(jnp.float32))
-            return y.astype(x.dtype)
         return jax.tree.map(mix_leaf, stacked)
 
+    mix.mix_leaf = mix_leaf
     return mix
 
 
@@ -104,6 +127,18 @@ def _is_ring(topology: Topology) -> bool:
                for i in range(n))
 
 
+def _is_full(topology: Topology) -> bool:
+    n = topology.n
+    return all(len(topology.neighbors(i)) == n - 1 for i in range(n))
+
+
+def shard_supported_topology(topology: Topology) -> bool:
+    """Graphs the shard_map gossip backends implement: rings (ppermute)
+    and complete graphs (psum exact averaging). Everything else must run
+    node-stacked (``gather``/``dense`` backends)."""
+    return _is_ring(topology) or _is_full(topology)
+
+
 def make_roll_mixer(num_nodes: int, wire_dtype: str = "native") -> Mixer:
     """Ring gossip via rolls along the node axis (→ collective-permute).
 
@@ -111,20 +146,24 @@ def make_roll_mixer(num_nodes: int, wire_dtype: str = "native") -> Mixer:
     (n == 2 degenerates to 1/2, 1/2; n == 1 to identity).
     """
     if num_nodes <= 1:
-        return lambda t: t
+        identity = lambda t: t                              # noqa: E731
+        identity.mix_leaf = lambda x: x
+        return identity
+
+    def mix_leaf(x):
+        xw = x.astype(jnp.float32) if wire_dtype == "float32" else x
+        fwd = jnp.roll(xw, 1, axis=0).astype(jnp.float32)
+        if num_nodes == 2:
+            y = 0.5 * x.astype(jnp.float32) + 0.5 * fwd
+        else:
+            bwd = jnp.roll(xw, -1, axis=0).astype(jnp.float32)
+            y = (x.astype(jnp.float32) + fwd + bwd) / 3.0
+        return y.astype(x.dtype)
 
     def mix(tree):
-        def leaf(x):
-            xw = x.astype(jnp.float32) if wire_dtype == "float32" else x
-            fwd = jnp.roll(xw, 1, axis=0).astype(jnp.float32)
-            if num_nodes == 2:
-                y = 0.5 * x.astype(jnp.float32) + 0.5 * fwd
-            else:
-                bwd = jnp.roll(xw, -1, axis=0).astype(jnp.float32)
-                y = (x.astype(jnp.float32) + fwd + bwd) / 3.0
-            return y.astype(x.dtype)
-        return jax.tree.map(leaf, tree)
+        return jax.tree.map(mix_leaf, tree)
 
+    mix.mix_leaf = mix_leaf
     return mix
 
 
@@ -137,11 +176,15 @@ def make_mixer(topology: Topology, backend: str = "auto",
     collective-permute when the node axis is sharded) and neighbour-gather
     everywhere else. ``backend="roll"`` requires a ring topology;
     ``backend="ppermute"`` forwards ``axis_names`` / ``axis_sizes`` /
-    ``self_weight`` to :func:`make_ppermute_mixer` (for use inside
-    ``shard_map``) — that backend implements ring / ring-of-rings gossip
-    over the mesh axes only, so it too rejects non-ring topologies, and
-    it always moves shards in their storage dtype (``wire_dtype`` other
-    than "native" is rejected rather than silently dropped).
+    ``self_weight`` / ``local_nodes`` to :func:`make_ppermute_mixer` (for
+    use inside ``shard_map``) — that backend implements ring /
+    ring-of-rings gossip over the mesh axes (a complete graph routes to
+    the exact-averaging :func:`make_psum_mixer` instead), so any other
+    topology is rejected *eagerly at build time*, and it always moves
+    shards in their storage dtype (``wire_dtype`` other than "native" is
+    rejected rather than silently dropped). Every ppermute-branch error
+    names the node-stacked backend to fall back to, so shard-mode
+    callers fail at construction with a fix, not mid-schedule.
 
     ``active`` is the churn path: an (n,) availability mask that switches
     the mixing weights to the masked Metropolis matrix
@@ -178,14 +221,35 @@ def make_mixer(topology: Topology, backend: str = "auto",
         mix = make_roll_mixer(topology.n, wire_dtype)
     elif backend == "ppermute":
         if masked:
-            raise ValueError("ppermute mixer has no masked path; churn "
-                             "runs use the gather/dense backends")
+            raise ValueError(
+                "ppermute mixer has no masked path (churn under shard_map "
+                "is unsupported — DESIGN.md §7); run churn schedules "
+                "node-stacked with backend='gather' (or 'dense')")
+        if _is_full(topology) and not _is_ring(topology):
+            if wire_dtype != "native":
+                raise ValueError(
+                    "psum mixer moves shards in their storage dtype; "
+                    f"wire_dtype={wire_dtype!r} unsupported — use "
+                    "backend='gather' for an f32 wire")
+            kw = dict(ppermute_kw)
+            axis_names = kw.pop("axis_names")
+            kw.pop("axis_sizes", None)
+            kw.pop("self_weight", None)
+            kw.pop("local_nodes", None)
+            if kw:
+                raise ValueError(f"unknown psum mixer options {sorted(kw)}")
+            return make_psum_mixer(axis_names[0], topology.n)
         if not _is_ring(topology):
-            raise ValueError("ppermute mixer implements ring/ring-of-rings "
-                             f"gossip over mesh axes; got {topology.name!r}")
+            raise ValueError(
+                "ppermute mixer implements ring/ring-of-rings gossip over "
+                f"mesh axes (plus psum on complete graphs); topology "
+                f"{topology.name!r} must run node-stacked — use "
+                "backend='gather' (or 'dense')")
         if wire_dtype != "native":
-            raise ValueError("ppermute mixer moves shards in their storage "
-                             f"dtype; wire_dtype={wire_dtype!r} unsupported")
+            raise ValueError(
+                "ppermute mixer moves shards in their storage dtype; "
+                f"wire_dtype={wire_dtype!r} unsupported — use "
+                "backend='gather' for an f32 wire")
         return make_ppermute_mixer(**ppermute_kw)
     else:
         raise ValueError(f"unknown mixer backend {backend!r}; expected one "
@@ -206,48 +270,135 @@ def _ring_perms(n: int) -> Tuple[list, list]:
     return fwd, bwd
 
 
+def block_ring_shift(x, axis_name: str, axis_size: int, shift: int):
+    """Global ring roll of a block-sharded node axis (inside shard_map).
+
+    ``x`` is one device's contiguous block (rows ``j·L .. j·L+L-1`` of the
+    global node axis, ``L = x.shape[0]``, device ``j`` along
+    ``axis_name``). Returns the local block of ``jnp.roll(global_x,
+    shift, axis=0)`` for ``shift = ±1``: only the single boundary row
+    crosses devices (``lax.ppermute``); the rest is a local shift. With
+    ``axis_size == 1`` this degenerates to ``jnp.roll``.
+    """
+    if shift not in (1, -1):
+        raise ValueError(f"block_ring_shift supports shift ±1, got {shift}")
+    if axis_size == 1:
+        return jnp.roll(x, shift, axis=0)
+    if shift == 1:      # row i receives row i-1
+        recv = jax.lax.ppermute(
+            x[-1:], axis_name,
+            [(j, (j + 1) % axis_size) for j in range(axis_size)])
+        return jnp.concatenate([recv, x[:-1]], axis=0)
+    recv = jax.lax.ppermute(
+        x[:1], axis_name,
+        [(j, (j - 1) % axis_size) for j in range(axis_size)])
+    return jnp.concatenate([x[1:], recv], axis=0)
+
+
 def make_ppermute_mixer(axis_names: Sequence[str], axis_sizes: Sequence[int],
-                        self_weight: float | None = None) -> Mixer:
+                        self_weight: float | None = None,
+                        local_nodes: int = 1) -> Mixer:
     """Ring gossip over the named mesh axes (to be called inside shard_map).
 
-    With one axis: plain ring over that axis. With two axes (pod, data):
-    hierarchical ring-of-rings — every node mixes with its intra-pod ring
-    neighbours, and nodes additionally mix with the same-index node of the
-    neighbouring pod (a torus-like wrap over the pod axis), keeping W
-    doubly stochastic.
+    With one axis: plain Metropolis ring over the global node axis of
+    ``local_nodes · axis_size`` nodes — each mesh index holds a
+    contiguous block of ``local_nodes`` rows and only the boundary rows
+    cross devices (:func:`block_ring_shift`); ``local_nodes == 1`` is the
+    one-node-per-device layout where the whole shard moves. Weights
+    follow :func:`make_roll_mixer` exactly (1/3 each for n ≥ 3, 1/2 each
+    for n == 2, identity for n == 1), so the sharded mix equals the
+    node-stacked roll/dense ring mix to float tolerance.
 
-    Metropolis weights for a degree-2 ring are 1/3 each; hierarchical
-    adds the pod links with their own 1/3·(pods>1) share.
+    With two axes (pod, data): hierarchical ring-of-rings — every node
+    mixes with its intra-pod ring neighbours, and nodes additionally mix
+    with the same-index node of the neighbouring pod (a torus-like wrap
+    over the pod axis), keeping W doubly stochastic. ``self_weight`` and
+    ``local_nodes > 1`` apply to the single-axis form only.
     """
     names = list(axis_names)
+    if local_nodes < 1:
+        raise ValueError(f"local_nodes must be >= 1, got {local_nodes}")
+    if len(names) == 1:
+        ax, size = names[0], int(axis_sizes[0])
+        n = local_nodes * size
+        if self_weight is not None:
+            raise ValueError("self_weight applies to the hierarchical "
+                             "multi-axis mixer only")
+        if n <= 1:
+            identity = lambda t: t                          # noqa: E731
+            identity.mix_leaf = lambda x: x
+            identity.axis_name = ax
+            return identity
 
-    def mix(local: PyTree) -> PyTree:
-        parts = [local]
-        weights = []
+        def mix_leaf(x):
+            fwd = block_ring_shift(x, ax, size, 1).astype(jnp.float32)
+            if n == 2:
+                y = 0.5 * x.astype(jnp.float32) + 0.5 * fwd
+            else:
+                bwd = block_ring_shift(x, ax, size, -1).astype(jnp.float32)
+                y = (x.astype(jnp.float32) + fwd + bwd) / 3.0
+            return y.astype(x.dtype)
+
+        def mix(local: PyTree) -> PyTree:
+            return jax.tree.map(mix_leaf, local)
+
+        mix.mix_leaf = mix_leaf
+        mix.axis_name = ax
+        return mix
+
+    if local_nodes != 1:
+        raise ValueError("local_nodes > 1 is single-axis only; the "
+                         "hierarchical mixer holds one node per mesh index")
+
+    def mix_leaf(x):
+        parts = [x]
         for ax, n in zip(names, axis_sizes):
             if n < 2:
                 continue
             fwd, bwd = _ring_perms(n)
-            parts.append(jax.tree.map(
-                lambda x: jax.lax.ppermute(x, ax, fwd), local))
-            parts.append(jax.tree.map(
-                lambda x: jax.lax.ppermute(x, ax, bwd), local))
-            weights += [1.0, 1.0]
+            parts.append(jax.lax.ppermute(x, ax, fwd))
+            if n > 2:
+                # at n == 2 fwd and bwd are the same permutation — one
+                # part, not a double-weighted duplicate of the neighbour
+                parts.append(jax.lax.ppermute(x, ax, bwd))
         if len(parts) == 1:
-            return local
-        neigh_w = 1.0 / (len(weights) + 1.0)
+            return x
+        neigh_w = 1.0 / len(parts)
         w_self = self_weight if self_weight is not None else neigh_w
+        acc = parts[0].astype(jnp.float32) * w_self
+        for p in parts[1:]:
+            acc = acc + p.astype(jnp.float32) * neigh_w
+        # keep row-sum 1 when self_weight overrides
+        total = w_self + neigh_w * (len(parts) - 1)
+        return (acc / total).astype(x.dtype)
 
-        def combine(*xs):
-            acc = xs[0].astype(jnp.float32) * w_self
-            for x in xs[1:]:
-                acc = acc + x.astype(jnp.float32) * neigh_w
-            # keep row-sum 1 when self_weight overrides
-            total = w_self + neigh_w * (len(xs) - 1)
-            return (acc / total).astype(xs[0].dtype)
+    def mix(local: PyTree) -> PyTree:
+        return jax.tree.map(mix_leaf, local)
 
-        return jax.tree.map(combine, *parts)
+    mix.mix_leaf = mix_leaf
+    mix.axis_name = tuple(names)
+    return mix
 
+
+def make_psum_mixer(axis_name: str, num_nodes: int) -> Mixer:
+    """Exact-averaging gossip for the complete graph (inside shard_map).
+
+    The complete graph's Metropolis matrix is uniform 1/n, so the mix is
+    one ``psum`` over the node axis — the centralized reference's exact
+    averaging, expressed as a collective instead of an n×n einsum.
+    Blocks of any ``local_nodes`` work: the local rows are summed before
+    the cross-device reduction.
+    """
+    def mix_leaf(x):
+        xf = x.astype(jnp.float32)
+        total = jax.lax.psum(jnp.sum(xf, axis=0, keepdims=True), axis_name)
+        return jnp.broadcast_to(total / num_nodes, xf.shape).astype(x.dtype)
+
+    def mix(local: PyTree) -> PyTree:
+        return jax.tree.map(mix_leaf, local)
+
+    mix.mix_leaf = mix_leaf
+    mix.axis_name = axis_name
     return mix
 
 

@@ -8,8 +8,14 @@ under synchronous rounds, which is what the paper runs.
 The step loop is the unified driver (``core.driver``): loss adapters +
 ``make_step`` build the jitted steps, per-node sampling runs on device,
 and the inner loop executes as ``lax.scan`` chunks between eval
-boundaries (``driver_mode="auto"`` keeps conv models on the per-step
-host runner on CPU — DESIGN.md §5 CPU caveats).
+boundaries (``driver_mode="auto"`` keeps lax-conv models on the
+per-step host runner on CPU — DESIGN.md §5 CPU caveats;
+``ModelConfig.conv_backend="im2col"`` lifts that). ``driver_mode=
+"shard"`` places the node axis on a device mesh instead: the step runs
+under ``shard_map`` with ppermute/psum gossip and the homogenization
+round exchanges only top-k payloads across the node axis (DESIGN.md
+§7) — trajectory-equivalent to the node-stacked runners on supported
+(ring/complete) graphs, with churn rejected up front.
 
 The *outer* loop is the federation scheduler (``repro.sched``, DESIGN.md
 §6): ``run()`` compiles a :class:`~repro.sched.Schedule` (or accepts a
@@ -84,6 +90,7 @@ class _SimFederation(sched.CompiledFederationHooks):
         self.result = result
         self.idkd_cfg = idkd_cfg
         self.sparse_round = False
+        self._node_mesh = sim.node_mesh     # shard mode: one shared mesh
         self.priv_parts = driver.pad_partitions(sim.parts)
         self.plain_sampler = driver.make_classification_sampler(
             self.priv_parts, sim.data.train_x, sim.data.train_y,
@@ -190,8 +197,8 @@ class DecentralizedSimulator:
         self.kd_mode = kd_mode
         self.eval_every = eval_every
         self.eval_batches = eval_batches
-        self.driver_mode = driver.resolve_runner_mode(driver_mode,
-                                                      model_cfg.arch_type)
+        self.driver_mode = driver.resolve_runner_mode(
+            driver_mode, model_cfg.arch_type, model_cfg.conv_backend)
 
         n = train_cfg.num_nodes
         self.topology = Topology.make(train_cfg.topology, n)
@@ -210,6 +217,35 @@ class DecentralizedSimulator:
                                    weight_decay=train_cfg.weight_decay)
         self.model = build_model(model_cfg)
 
+        self.node_mesh = None
+        if self.driver_mode == "shard":
+            # every shard-mode limitation fails here, at construction —
+            # not mid-schedule when a step/round first compiles
+            from repro.core.mixing import shard_supported_topology
+            if not shard_supported_topology(self.gossip_topo):
+                raise ValueError(
+                    f"driver_mode='shard' gossips on ring/complete graphs "
+                    f"only; topology {self.gossip_topo.name!r} needs the "
+                    "node-stacked runners (driver_mode='scan' or 'host')")
+            if kd_mode is not None and \
+                    not shard_supported_topology(self.topology):
+                # centralized runs gossip on the complete graph but
+                # label-exchange on the run topology — validate both
+                raise ValueError(
+                    f"driver_mode='shard' exchanges labels on "
+                    f"ring/complete graphs only; topology "
+                    f"{self.topology.name!r} needs the node-stacked "
+                    "runners (driver_mode='scan' or 'host')")
+            icfg = train_cfg.idkd or IDKDConfig()
+            if kd_mode is not None and icfg.label_backend == "dense":
+                raise ValueError(
+                    "driver_mode='shard' moves only top-k label payloads "
+                    "across the node axis; set IDKDConfig.label_backend="
+                    "'sparse' (or 'fused'), or use driver_mode='scan'/"
+                    "'host' for the dense oracle")
+            from repro.launch.mesh import make_node_mesh
+            self.node_mesh = make_node_mesh(n)
+
         rng = np.random.default_rng(train_cfg.seed)
         if train_cfg.algorithm == "centralized":
             # paper: centralized reference uses a random IID distribution
@@ -227,19 +263,31 @@ class DecentralizedSimulator:
 
     # ------------------------------------------------------------------ setup
     def _build_jits(self):
-        """Steps come from the unified driver (core.driver.make_step);
-        only the diagnostics (forward/eval) are built here."""
+        """Steps come from the unified driver (core.driver.make_step, or
+        make_shard_step under driver_mode="shard"); only the diagnostics
+        (forward/eval) are built here."""
         model, mixer, algo = self.model, self.mixer, self.algo
         icfg = self.tcfg.idkd or IDKDConfig()
 
-        self._plain_step = driver.make_step(
-            model, algo, mixer, driver.classification_adapter)
-        self._kd_step = driver.make_step(
-            model, algo, mixer,
-            driver.dense_kd_adapter(icfg.temperature, icfg.kd_weight))
-        self._sparse_kd_step = driver.make_step(
-            model, algo, mixer,
-            driver.sparse_kd_adapter(icfg.temperature, icfg.kd_weight))
+        if self.driver_mode == "shard":
+            self._plain_step = driver.make_shard_step(
+                model, algo, driver.classification_adapter,
+                mesh=self.node_mesh, topology=self.gossip_topo)
+            self._sparse_kd_step = driver.make_shard_step(
+                model, algo,
+                driver.sparse_kd_adapter(icfg.temperature, icfg.kd_weight),
+                mesh=self.node_mesh, topology=self.gossip_topo)
+            # dense label payloads never exist in shard mode (top-k wire)
+            self._kd_step = None
+        else:
+            self._plain_step = driver.make_step(
+                model, algo, mixer, driver.classification_adapter)
+            self._kd_step = driver.make_step(
+                model, algo, mixer,
+                driver.dense_kd_adapter(icfg.temperature, icfg.kd_weight))
+            self._sparse_kd_step = driver.make_step(
+                model, algo, mixer,
+                driver.sparse_kd_adapter(icfg.temperature, icfg.kd_weight))
 
         @jax.jit
         def forward_logits(params, images):
@@ -272,24 +320,25 @@ class DecentralizedSimulator:
 
     # -------------------------------------------------------------- inference
     def _node_logits(self, params, x: np.ndarray, batch: int = 256):
-        """All-node logits on a shared array x: returns (n, len(x), C)."""
+        """All-node logits on a shared array x: returns (n, len(x), C).
+        Stays on device — shard mode keeps the stack sharded over the
+        node mesh axis (params carry the placement, so the vmapped
+        forward partitions over nodes); host callers np.asarray it."""
         n = self.tcfg.num_nodes
         outs = []
         for i in range(0, len(x), batch):
             xb = jnp.asarray(x[i:i + batch])
             xb = jnp.broadcast_to(xb[None], (n,) + xb.shape)
-            outs.append(np.asarray(self._forward_logits(params, xb)))
-        return np.concatenate(outs, axis=1)
+            outs.append(self._forward_logits(params, xb))
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
 
     def _per_node_val_logits(self, params, batch: int = 256):
         """Each node's logits on its own private samples (ID scores)."""
         # use each node's training samples as its ID set (paper: D_V^i)
-        n = self.tcfg.num_nodes
-        per_node = []
         m = min(min(len(p) for p in self.parts), batch)
         idx = np.stack([p[:m] for p in self.parts])
         xb = jnp.asarray(self.data.train_x[idx])      # (n, m, ...)
-        return np.asarray(self._forward_logits(params, xb))
+        return self._forward_logits(params, xb)
 
     # ------------------------------------------------------------------- run
     def default_schedule(self) -> sched.Schedule:
@@ -343,6 +392,15 @@ class DecentralizedSimulator:
             opt_state = self.algo.init(params)
             key = jax.random.PRNGKey(tcfg.seed)
             resume_step = 0
+        if self.driver_mode == "shard":
+            # churn / unsupported rewires fail here, before any training
+            sched.validate_shard_schedule(schedule, n)
+            from repro.launch.sharding import node_stacked_shardings
+            params = jax.device_put(
+                params, node_stacked_shardings(params, self.node_mesh, n))
+            opt_state = jax.device_put(
+                opt_state,
+                node_stacked_shardings(opt_state, self.node_mesh, n))
 
         nparams = sum(x.size for x in jax.tree.leaves(self.model.init(
             jax.random.PRNGKey(0))))
@@ -376,11 +434,20 @@ class DecentralizedSimulator:
                     topology: Optional[Topology] = None,
                     active: Optional[np.ndarray] = None
                     ) -> labeling.HomogenizedResult:
-        pub_logits = jnp.asarray(self._node_logits(params, self.public_x))
-        val_logits = jnp.asarray(self._per_node_val_logits(params))
+        pub_logits = self._node_logits(params, self.public_x)
+        val_logits = self._per_node_val_logits(params)
         # cal_logits=None: D_C = the public set (paper's default);
         # kd_mode="vanilla" is the no-OoD-filter baseline (every public
         # sample kept) — the engine's filter_ood=False branch
+        if self.driver_mode == "shard":
+            if active is not None:
+                raise ValueError("sharded label rounds have no churn "
+                                 "path; run churn schedules node-stacked")
+            # score/select shard-local, top-k-only exchange (DESIGN.md §7)
+            return labeling.shard_label_round(
+                pub_logits, val_logits, topology or self.topology,
+                idkd_cfg, mesh=self.node_mesh,
+                filter_ood=self.kd_mode != "vanilla")
         return labeling.label_round(
             pub_logits, val_logits, None, topology or self.topology,
             idkd_cfg, backend=idkd_cfg.label_backend,

@@ -28,6 +28,31 @@ def _divisible(dim: int, size: int) -> bool:
     return dim % size == 0 and dim >= size
 
 
+def node_leaf_spec(leaf, num_nodes: int, axis: str = "node") -> P:
+    """PartitionSpec for one leaf of a node-stacked pytree under the
+    sharded driver's 1-D node mesh: the leading node axis shards over
+    ``axis``; everything else (scalar optimizer counters, per-sample
+    payloads without a node dim) replicates."""
+    if getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == num_nodes:
+        return P(axis)
+    return P()
+
+
+def node_stacked_specs(tree, num_nodes: int, axis: str = "node"):
+    """Per-leaf PartitionSpec pytree for ``shard_map`` in/out_specs."""
+    return jax.tree.map(
+        lambda leaf: node_leaf_spec(leaf, num_nodes, axis), tree)
+
+
+def node_stacked_shardings(tree, mesh, num_nodes: int, axis: str = "node"):
+    """NamedSharding pytree for ``jax.device_put`` of node-stacked state
+    (params / optimizer state / sampler ctx) onto the node mesh."""
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh,
+                                   node_leaf_spec(leaf, num_nodes, axis)),
+        tree)
+
+
 def leaf_spec(path: str, shape: Tuple[int, ...], mesh, node_axes,
               scope: str, skip_dims: int = 1) -> P:
     """PartitionSpec for one node-stacked param leaf.

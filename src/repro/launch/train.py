@@ -19,6 +19,12 @@ communication ledger. Params-gossip and the IDKD label exchange share
 one ``tcfg.topology`` graph (the seed gossiped on a hardwired ring while
 labels moved on ``tcfg.topology``).
 
+``--driver shard`` runs the federation under ``shard_map`` over a node
+mesh (DESIGN.md §7): per-device node blocks, ppermute params-gossip,
+shard-local label scoring with a top-k-only exchange. Develop/test
+multi-device behaviour on CPU with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Usage (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
         --steps 40 --nodes 8 --idkd [--rounds 2] [--churn 3@20-30]
@@ -65,7 +71,7 @@ def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native",
 
 def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
                      idkd_cfg: IDKDConfig, topology: Topology,
-                     backend: str = "sparse", active=None):
+                     backend: str = "sparse", active=None, mesh=None):
     """LLM IDKD round via the unified labeling engine: per-sequence
     detector confidences + top-k soft labels on the public corpus,
     ROC-calibrated threshold, sparse neighbour label exchange.
@@ -74,7 +80,10 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
     labels stay sparse end to end — neighbour averaging concatenates
     payloads along the k axis (k_out = (max_deg+1)·k) instead of the
     seed's densify→average→resparsify detour through (n, P, S, V).
-    ``active`` masks churned-out nodes from the exchange.
+    ``active`` masks churned-out nodes from the exchange. With ``mesh``
+    (the shard driver's node mesh) the round runs through
+    ``labeling.shard_label_round``: score/select shard-local, the
+    exchange ppermutes only top-k payloads across the node axis.
     """
     n = params_stacked and jax.tree.leaves(params_stacked)[0].shape[0]
 
@@ -89,9 +98,16 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
     priv = jnp.asarray(private_tokens)                      # (n, Vp, S)
     logits_priv = node_logits(params_stacked, priv)
     # val = the node's private corpus (ID); cal=None = the public corpus
-    out = labeling.label_round(logits_pub, logits_priv, None,
-                               topology, idkd_cfg, backend=backend,
-                               active=active)
+    if mesh is not None:
+        if active is not None:
+            raise ValueError("sharded label rounds have no churn path; "
+                             "run churn schedules node-stacked")
+        out = labeling.shard_label_round(logits_pub, logits_priv,
+                                         topology, idkd_cfg, mesh=mesh)
+    else:
+        out = labeling.label_round(logits_pub, logits_priv, None,
+                                   topology, idkd_cfg, backend=backend,
+                                   active=active)
     return out.labels, out.weights, out.id_masks, out.thresholds
 
 
@@ -153,7 +169,9 @@ class _LMFederation(sched.CompiledFederationHooks):
             backend = "sparse"
         sparse, w, id_mask, thr = idkd_label_round(
             self.model, params, self.public_tokens, priv, cfg, topo,
-            backend=backend, active=None if active.all() else active)
+            backend=backend, active=None if active.all() else active,
+            mesh=(self.shard_mesh(n) if self.driver_mode == "shard"
+                  else None))
         self.ctx = driver.lm_kd_ctx(sparse.values, sparse.indices, w)
         if self.kd_sampler is None:
             self.kd_sampler = driver.make_lm_kd_sampler(
@@ -223,6 +241,26 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
     opt_state = algo.init(params)
     key = jax.random.PRNGKey(tcfg.seed + 1)
 
+    if driver_mode == "shard":
+        # shard-mode pre-flight: fail before training, not mid-schedule
+        from repro.core.mixing import shard_supported_topology
+        from repro.launch.sharding import node_stacked_shardings
+        if wire_dtype != "native":
+            raise ValueError("driver_mode='shard' moves shards in their "
+                             f"storage dtype; wire_dtype={wire_dtype!r} "
+                             "needs the node-stacked runners")
+        if not shard_supported_topology(topo):
+            raise ValueError(
+                f"driver_mode='shard' gossips on ring/complete graphs "
+                f"only; topology {topo.name!r} needs driver_mode="
+                "'scan' or 'host'")
+        sched.validate_shard_schedule(schedule, n)
+        mesh = fed.shard_mesh(n)
+        params = jax.device_put(
+            params, node_stacked_shardings(params, mesh, n))
+        opt_state = jax.device_put(
+            opt_state, node_stacked_shardings(opt_state, mesh, n))
+
     nparams = sum(x.size for x in jax.tree.leaves(params)) // n
     ledger = sched.CommLedger(n, meta={
         "topology": topo.name, "wire_dtype": wire_dtype,
@@ -264,7 +302,8 @@ def main():
                     help="churn spec node@down-up[,...], e.g. 3@20-30")
     ap.add_argument("--wire-dtype", default="native",
                     choices=["native", "float32"])
-    ap.add_argument("--driver", default="scan", choices=["scan", "host"])
+    ap.add_argument("--driver", default="scan",
+                    choices=["scan", "host", "shard"])
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-reduced) config — TPU scale")
     args = ap.parse_args()

@@ -28,12 +28,43 @@ def _conv(x, w, stride=1):
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
 
 
+def _conv_im2col(x, w, stride=1):
+    """SAME conv as patch-gather + one matmul (no ``lax.conv`` in the
+    graph). XLA:CPU runs vmapped-kernel convs ~4× slower and any conv
+    inside a ``while`` loop ~5× slower (DESIGN.md §5); matmuls hit
+    neither pathology, so this path makes the scan/shard runners viable
+    for conv models on CPU (``ModelConfig.conv_backend="im2col"``).
+    Padding follows XLA's SAME convention (low = total // 2), so outputs
+    match ``_conv`` to float tolerance at every stride.
+    """
+    kh, kw, cin, cout = w.shape
+    B, H, W, _ = x.shape
+    ho = -(-H // stride)
+    wo = -(-W // stride)
+    ph = max((ho - 1) * stride + kh - H, 0)
+    pw = max((wo - 1) * stride + kw - W, 0)
+    xp = jnp.pad(x, ((0, 0), (ph // 2, ph - ph // 2),
+                     (pw // 2, pw - pw // 2), (0, 0)))
+    patches = [
+        xp[:, dy:dy + (ho - 1) * stride + 1:stride,
+           dx:dx + (wo - 1) * stride + 1:stride, :]
+        for dy in range(kh) for dx in range(kw)
+    ]
+    cols = jnp.stack(patches, axis=-2)          # (B, ho, wo, kh·kw, cin)
+    cols = cols.reshape(B, ho, wo, kh * kw * cin)
+    return cols @ w.reshape(kh * kw * cin, cout)
+
+
 class ResNetModel:
     """Same interface surface as DecoderModel (init / forward / loss)."""
 
     def __init__(self, cfg: ModelConfig):
         assert cfg.arch_type == "cnn"
+        if cfg.conv_backend not in ("lax", "im2col"):
+            raise ValueError(f"unknown conv_backend {cfg.conv_backend!r}; "
+                             "expected 'lax' or 'im2col'")
         self.cfg = cfg
+        self._conv = _conv_im2col if cfg.conv_backend == "im2col" else _conv
 
     def init(self, key) -> Dict[str, Any]:
         cfg = self.cfg
@@ -66,8 +97,9 @@ class ResNetModel:
     def forward(self, params, batch):
         """batch['images']: (B, H, W, C) float32 -> (logits, aux=0)."""
         cfg = self.cfg
+        conv = self._conv
         x = batch["images"]
-        x = _conv(x, params["stem"])
+        x = conv(x, params["stem"])
         x = evonorm_b0(x, params["stem_norm"])
         cin = cfg.cnn_width
         for si, blocks in enumerate(cfg.cnn_stages):
@@ -75,11 +107,11 @@ class ResNetModel:
             for bi in range(blocks):
                 stride = 2 if (si > 0 and bi == 0) else 1
                 blk = params[f"s{si}b{bi}"]
-                h = _conv(x, blk["conv1"], stride)
+                h = conv(x, blk["conv1"], stride)
                 h = evonorm_b0(h, blk["norm1"])
-                h = _conv(h, blk["conv2"])
+                h = conv(h, blk["conv2"])
                 h = evonorm_b0(h, blk["norm2"])
-                sc = _conv(x, blk["proj"], stride) if "proj" in blk else x
+                sc = conv(x, blk["proj"], stride) if "proj" in blk else x
                 x = jax.nn.relu(h + sc)
                 cin = cout
         x = jnp.mean(x, axis=(1, 2))

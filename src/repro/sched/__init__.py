@@ -7,4 +7,5 @@ from repro.sched.schedule import (CHURN_MODES, ChurnEvent,  # noqa: F401
                                   Segment, compile_schedule, fit_every_k,
                                   idkd_round_steps, parse_churn)
 from repro.sched.scheduler import (CompiledFederationHooks,  # noqa: F401
-                                   FederationHooks, run_schedule)
+                                   FederationHooks, run_schedule,
+                                   validate_shard_schedule)

@@ -77,6 +77,15 @@ class CompiledFederationHooks(FederationHooks):
     through the runner for every non-plain phase — a traced argument,
     so refreshing it costs no recompile).
 
+    ``driver_mode="shard"`` routes step building through
+    ``driver.make_shard_step`` — the node axis lives on a
+    ``launch.mesh.make_node_mesh`` mesh and gossip runs inside
+    ``shard_map`` via the ppermute backend. Shard mode has no churn
+    path: availability masks raise here (and
+    :func:`validate_shard_schedule` rejects such schedules before the
+    run starts), topology swaps are fine as long as the target is a
+    ring/complete graph.
+
     Subclasses set ``model``, ``algo``, ``lr_fn``, ``driver_mode`` and
     the phase state (``phase`` starts "plain"; ``on_round`` overrides
     advance it and refresh ``ctx``), and implement:
@@ -102,6 +111,7 @@ class CompiledFederationHooks(FederationHooks):
         self._mixers: Dict = {}
         self._steps: Dict = {}
         self._runners: Dict = {}
+        self._node_mesh = None
 
     def _make_mixer(self, topology: Topology, active) -> Callable:
         raise NotImplementedError
@@ -138,8 +148,25 @@ class CompiledFederationHooks(FederationHooks):
                                      else self._make_mixer(topo, active))
         return self._mixers[key]
 
+    def shard_mesh(self, num_nodes: int):
+        """The (cached) 1-D node mesh shard-mode steps run on."""
+        if self._node_mesh is None:
+            from repro.launch.mesh import make_node_mesh
+            self._node_mesh = make_node_mesh(num_nodes)
+        return self._node_mesh
+
     def _base_step(self, topo: Topology, active: np.ndarray):
         from repro.core import driver
+        if self.driver_mode == "shard":
+            if not active.all():
+                raise ValueError(
+                    "shard driver cannot apply churn availability masks "
+                    "(freeze/isolate need the node-stacked gather/dense "
+                    "mixers — DESIGN.md §7); run churn schedules with "
+                    "driver_mode='scan' or 'host'")
+            return driver.make_shard_step(
+                self.model, self.algo, self._adapter(),
+                mesh=self.shard_mesh(topo.n), topology=topo)
         return driver.make_step(self.model, self.algo,
                                 self._mixer(topo, active), self._adapter())
 
@@ -170,6 +197,30 @@ class CompiledFederationHooks(FederationHooks):
         if self.phase == "plain":
             return run
         return lambda p, o, k, s0, ns: run(p, o, k, s0, ns, self.ctx)
+
+
+def validate_shard_schedule(schedule: Schedule, num_nodes: int) -> None:
+    """Pre-flight for ``driver_mode="shard"``: shard_map gossip has no
+    churn path and only ring/complete-graph rewire targets, so reject
+    unsupported schedules *before* the run starts instead of failing
+    mid-schedule when the event fires (DESIGN.md §7)."""
+    from repro.core.mixing import shard_supported_topology
+    for seg in schedule.segments:
+        for ev in seg.events:
+            if isinstance(ev, ChurnEvent):
+                raise ValueError(
+                    f"schedule has churn at step {ev.step}; churn "
+                    "(freeze/isolate availability masks) is unsupported "
+                    "under driver_mode='shard' — run it node-stacked "
+                    "with driver_mode='scan' or 'host' (DESIGN.md §7)")
+            if isinstance(ev, RewireEvent):
+                topo = _resolve_topology(ev, num_nodes)
+                if not shard_supported_topology(topo):
+                    raise ValueError(
+                        f"rewire at step {ev.step} targets "
+                        f"{topo.name!r}; the shard driver gossips on "
+                        "ring/complete graphs only — use "
+                        "driver_mode='scan' or 'host' for this schedule")
 
 
 def _resolve_topology(ev: RewireEvent, n: int) -> Topology:

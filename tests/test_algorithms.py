@@ -147,6 +147,46 @@ def test_qgm_fused_step_matches_unfused_reference():
                        atol=1e-6)
 
 
+def test_qgm_leaf_fused_mix_bitwise_equals_mix_then_update():
+    """The per-leaf mixer protocol (mix.mix_leaf) lets QG-DSGDm-N fold
+    half-step + gossip mix + displacement-EMA into one whole-tree
+    traversal. The per-leaf op sequence is unchanged, so the fused pass
+    must be *bitwise* equal to the mix-then-update form (an opaque mixer
+    without mix_leaf), on every backend."""
+    from repro.core.mixing import make_mixer
+    from repro.core.algorithms import make_qg_dsgdm_n
+
+    topo = Topology.make("ring", N)
+    rng = np.random.default_rng(5)
+    params = {"x": jnp.asarray(rng.normal(size=(N, DIM)), jnp.float32),
+              "nested": {"y": jnp.asarray(rng.normal(size=(N, 3, 2)),
+                                          jnp.float32)}}
+    targets = jax.tree.map(
+        lambda t: jnp.asarray(rng.normal(size=t.shape), jnp.float32), params)
+    algo = make_qg_dsgdm_n(momentum=0.9, weight_decay=1e-4)
+    lr = jnp.asarray(0.07, jnp.float32)
+    for backend in ("dense", "gather", "roll"):
+        mix = make_mixer(topo, backend=backend, wire_dtype="float32")
+        assert callable(mix.mix_leaf)
+
+        def opaque(tree, _mix=mix):        # same mixer, protocol hidden
+            return _mix(tree)
+
+        p_f = p_o = params
+        s_f = s_o = algo.init(params)
+        for _ in range(3):
+            g_f = jax.tree.map(lambda p, t: p - t, p_f, targets)
+            g_o = jax.tree.map(lambda p, t: p - t, p_o, targets)
+            p_f, s_f = jax.jit(lambda p, g, s: algo.step(p, g, s, lr, mix)
+                               )(p_f, g_f, s_f)
+            p_o, s_o = jax.jit(lambda p, g, s: algo.step(p, g, s, lr,
+                                                         opaque)
+                               )(p_o, g_o, s_o)
+        for a, b in zip(jax.tree.leaves((p_f, s_f)),
+                        jax.tree.leaves((p_o, s_o))):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), backend
+
+
 def test_qgm_momentum_tracks_displacement():
     """QGM buffer must be EMA of (x_t − x_{t+1})/lr, not the raw gradient."""
     targets, topo, mix, params = _setup()

@@ -139,6 +139,77 @@ def test_ppermute_backend_rejects_non_ring_and_f32_wire():
                    axis_names=("data",), axis_sizes=(4,))
 
 
+def test_ppermute_errors_name_the_fallback_backend():
+    """Shard-mode misconfigurations must fail eagerly at make_mixer time
+    with the node-stacked fallback named, not mid-schedule."""
+    with pytest.raises(ValueError, match="gather"):
+        make_mixer(Topology.make("torus", 9), backend="ppermute",
+                   axis_names=("node",), axis_sizes=(9,))
+    with pytest.raises(ValueError, match="gather"):
+        make_mixer(Topology.make("ring", 4), backend="ppermute",
+                   active=np.asarray([True, False, True, True]),
+                   axis_names=("node",), axis_sizes=(4,))
+
+
+def _shard_mix(mixer, tree, n_local):
+    """Run a shard_map mixer on node-stacked data over however many
+    devices divide the node axis (1 device → degenerate block mesh)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    n = jax.tree.leaves(tree)[0].shape[0]
+    size = n // n_local
+    mesh = Mesh(np.asarray(jax.devices()[:size]), ("node",))
+    return jax.jit(shard_map(mixer, mesh=mesh, in_specs=(P("node"),),
+                             out_specs=P("node"), check_rep=False))(tree)
+
+
+@pytest.mark.parametrize("n", [2, 3, 8])
+def test_block_ppermute_mixer_equals_dense_ring(n):
+    """The block ppermute mixer (local node blocks, boundary rows via
+    collective-permute) must equal the dense Metropolis ring mix —
+    including the n == 2 half/half degenerate weights."""
+    from repro.core.mixing import make_ppermute_mixer
+    x = _stacked(n, seed=n)
+    size = max(d for d in range(1, min(len(jax.devices()), n) + 1)
+               if n % d == 0)
+    mix = make_ppermute_mixer(("node",), (size,), local_nodes=n // size)
+    out = _shard_mix(mix, x, n // size)
+    ref = make_mixer(Topology.make("ring", n), backend="dense")(x)
+    assert _tree_allclose(out, ref)
+
+
+def test_psum_mixer_equals_dense_full():
+    """Complete-graph shard gossip is one psum — must equal the full
+    graph's (uniform 1/n) Metropolis einsum."""
+    n = 6
+    x = _stacked(n, seed=1)
+    size = max(d for d in range(1, min(len(jax.devices()), n) + 1)
+               if n % d == 0)
+    mix = make_mixer(Topology.make("full", n), backend="ppermute",
+                     axis_names=("node",), axis_sizes=(size,),
+                     local_nodes=n // size)
+    out = _shard_mix(mix, x, n // size)
+    ref = make_mixer(Topology.make("full", n), backend="dense")(x)
+    assert _tree_allclose(out, ref)
+
+
+def test_every_backend_exposes_mix_leaf():
+    """The per-leaf mixer protocol (mix.mix_leaf + tree.map equivalence)
+    is what lets QG-DSGDm-N fuse the gossip mix into its whole-tree
+    update pass — every backend must provide it."""
+    topo = Topology.make("ring", 6)
+    x = _stacked(6, seed=2)
+    for backend in ("dense", "gather", "roll"):
+        mix = make_mixer(topo, backend=backend)
+        assert callable(mix.mix_leaf)
+        leafwise = jax.tree.map(mix.mix_leaf, x)
+        assert _tree_allclose(leafwise, mix(x))
+    from repro.core.mixing import make_ppermute_mixer, make_psum_mixer
+    assert callable(make_ppermute_mixer(("node",), (1,),
+                                        local_nodes=6).mix_leaf)
+    assert callable(make_psum_mixer("node", 6).mix_leaf)
+
+
 def test_stack_and_consensus_roundtrip():
     p = {"a": jnp.ones((3, 2)), "b": jnp.arange(4.0)}
     s = stack_params(p, 5)

@@ -1,0 +1,236 @@
+"""Sharded driver tests (driver_mode="shard", DESIGN.md §7).
+
+* shard-vs-stacked fixed-seed trajectory equivalence — plain phase and
+  sparse-KD phase, ring and complete-graph topologies, sim and LM paths.
+  The node axis moves from a batch dimension (vmap on one device) to a
+  placement dimension (shard_map over the node mesh); trajectories must
+  match to float tolerance because the samplers consume identical PRNG
+  key sequences and the ppermute/psum gossip equals the dense Metropolis
+  mix.
+* sharded label round: same D_ID masks, thresholds, weights, and
+  per-node payload bytes as the node-stacked sparse backend; merged
+  payloads agree after densification (contributor order along k may
+  differ — every consumer accumulates duplicates).
+* eager shard-mode validation: churn schedules, non-ring/complete
+  topologies, and the dense label backend fail at construction / run
+  start, naming the node-stacked fallback, instead of mid-schedule.
+* im2col conv path: forward equality with lax.conv and the auto-mode
+  runner resolution it unlocks.
+
+The whole file runs on any device count: with one device the node mesh
+is degenerate (shard_map still executes, the block holds every node);
+CI's forced-8-device job (XLA_FLAGS=--xla_force_host_platform_device_
+count=8) exercises the real multi-device placement and boundary-row
+collectives on the same tests.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.configs.resnet20_cifar import SMALL_CONFIG
+from repro.core import distill, driver, labeling
+from repro.core.simulator import DecentralizedSimulator
+from repro.core.topology import Topology
+from repro.data.synthetic import make_classification_data, make_public_data
+from repro.launch.mesh import make_node_mesh
+from repro.sched import compile_schedule, parse_churn
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    data = make_classification_data(image_size=8, n_train=512, n_val=64,
+                                    n_test=300, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=128, kind="aligned", seed=1)
+    return data, pub
+
+
+@pytest.fixture(scope="module")
+def mcfg():
+    # im2col keeps the conv model on the scan/shard fast path on CPU
+    return SMALL_CONFIG.replace(image_size=8, conv_backend="im2col")
+
+
+def _kd_tcfg(topology: str, n: int = 4) -> TrainConfig:
+    return TrainConfig(algorithm="qg-dsgdm-n", num_nodes=n, alpha=0.05,
+                       steps=8, batch_size=8, lr=0.3, seed=4,
+                       topology=topology,
+                       idkd=IDKDConfig(start_step=4, temperature=10.0,
+                                       label_topk=4, label_backend="sparse"))
+
+
+# ---------------------------------------------- shard == stacked (sim path)
+@pytest.mark.parametrize("topology,n", [("ring", 4), ("full", 4),
+                                        ("ring", 8)])
+def test_sim_shard_equals_stacked_kd(tiny_data, mcfg, topology, n):
+    """Fixed seeds → the shard_map runner reproduces the node-stacked
+    scan runner through the plain phase, the homogenization round, and
+    the sparse-KD phase, on both supported gossip graphs. The n=8 case
+    exercises the *blocked* node layout wherever the device count is 2
+    or 4 (local blocks > 1 row AND > 1 device — boundary-row ppermutes
+    plus interior shifts; CI's shard8 job adds a forced-4-device run
+    for exactly this regime)."""
+    data, pub = tiny_data
+    runs = {}
+    for mode in ("scan", "shard"):
+        sim = DecentralizedSimulator(mcfg, _kd_tcfg(topology, n), data, pub,
+                                     kd_mode="idkd", eval_every=3,
+                                     driver_mode=mode)
+        runs[mode] = sim.run()
+    assert np.allclose(runs["shard"].acc_history, runs["scan"].acc_history,
+                       atol=1e-5)
+    assert np.allclose(runs["shard"].loss_history, runs["scan"].loss_history,
+                       atol=1e-4)
+    assert np.allclose(runs["shard"].consensus_history,
+                       runs["scan"].consensus_history, rtol=0.05, atol=1e-8)
+    # ledger accounting is identical: same graph, same payload sizes
+    assert runs["shard"].label_bytes_total == runs["scan"].label_bytes_total
+
+
+def test_sim_shard_equals_stacked_plain(tiny_data, mcfg):
+    data, _ = tiny_data
+    tcfg = TrainConfig(algorithm="dsgd", num_nodes=4, alpha=0.1, steps=6,
+                       batch_size=8, lr=0.2, seed=7)
+    runs = {}
+    for mode in ("scan", "shard"):
+        sim = DecentralizedSimulator(mcfg, tcfg, data, None, kd_mode=None,
+                                     eval_every=5, driver_mode=mode)
+        runs[mode] = sim.run()
+    assert np.allclose(runs["shard"].acc_history, runs["scan"].acc_history,
+                       atol=1e-5)
+
+
+# ----------------------------------------------- shard == stacked (LM path)
+def test_lm_shard_equals_stacked():
+    from repro.configs import get_config
+    from repro.launch.train import run_training
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    tcfg = TrainConfig(num_nodes=2, steps=6, lr=0.1, alpha=0.1, batch_size=4,
+                       idkd=IDKDConfig(start_step=3, label_topk=4,
+                                       kd_weight=0.3))
+    hist = {}
+    for mode in ("scan", "shard"):
+        out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                           use_idkd=True, log_every=2, verbose=False,
+                           driver_mode=mode)
+        hist[mode] = out["loss_history"]
+    assert np.allclose(hist["shard"], hist["scan"], rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------- sharded label round
+@pytest.mark.parametrize("topology", ["ring", "full"])
+def test_shard_label_round_matches_stacked_sparse(tiny_data, mcfg, topology):
+    """score/select run shard-local and the exchange moves only top-k
+    payloads — the result must agree with the node-stacked sparse
+    backend: exact D_ID masks (→ exact per-node payload bytes), same
+    thresholds/weights, and equal labels after densification (the
+    contributor order along k differs, which no consumer observes)."""
+    data, pub = tiny_data
+    tcfg = _kd_tcfg(topology, n=4)
+    cfg = tcfg.idkd
+    sims = {}
+    for mode in ("scan", "shard"):
+        sims[mode] = DecentralizedSimulator(mcfg, tcfg, data, pub,
+                                            kd_mode="idkd", eval_every=3,
+                                            driver_mode=mode)
+    params = sims["scan"]._stacked_init()
+    hom_s = sims["scan"]._homogenize(params, cfg)
+    hom_h = sims["shard"]._homogenize(params, cfg)
+    assert isinstance(hom_h, labeling.SparseHomogenizedSet)
+    id_s, id_h = np.asarray(hom_s.id_masks), np.asarray(hom_h.id_masks)
+    assert np.array_equal(id_s, id_h)
+    assert np.allclose(np.asarray(hom_s.thresholds),
+                       np.asarray(hom_h.thresholds), atol=1e-5)
+    assert np.array_equal(np.asarray(hom_s.weights),
+                          np.asarray(hom_h.weights))
+    # payload width: (max_degree + 1) · k on both paths
+    k_out = (Topology.make(topology, 4).max_degree() + 1) * 4
+    assert hom_h.labels.values.shape[-1] == k_out
+    assert np.allclose(np.asarray(hom_s.densify(10)),
+                       np.asarray(hom_h.densify(10)), atol=1e-5)
+    # per-node wire bytes (the ledger's label accounting) match exactly
+    bytes_s = [distill.label_bytes(int(c), 10, 4) for c in id_s.sum(1)]
+    bytes_h = [distill.label_bytes(int(c), 10, 4) for c in id_h.sum(1)]
+    assert bytes_s == bytes_h
+
+
+# ------------------------------------------------- eager shard validation
+def test_shard_rejects_churn_schedule_before_running(tiny_data, mcfg):
+    data, pub = tiny_data
+    tcfg = _kd_tcfg("ring")
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=3, driver_mode="shard")
+    schedule = compile_schedule(
+        tcfg.steps, 3, round_steps=(4,),
+        events=parse_churn("1@2-5", tcfg.num_nodes, tcfg.steps))
+    with pytest.raises(ValueError, match="churn"):
+        sim.run(schedule)
+
+
+def test_shard_rejects_unsupported_topology_and_dense_backend(tiny_data,
+                                                              mcfg):
+    data, pub = tiny_data
+    with pytest.raises(ValueError, match="ring/complete"):
+        DecentralizedSimulator(
+            mcfg, _kd_tcfg("torus", n=9), data, pub, kd_mode="idkd",
+            driver_mode="shard")
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=4, steps=8,
+                       batch_size=8, seed=4,
+                       idkd=IDKDConfig(start_step=4, label_backend="dense"))
+    with pytest.raises(ValueError, match="sparse"):
+        DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                               driver_mode="shard")
+
+
+def test_shard_step_rejects_relaysgd(mcfg):
+    from repro.core.algorithms import make_algorithm
+    from repro.models import build_model
+    topo = Topology.make("chain", 4)
+    algo = make_algorithm("relaysgd", topology=topo)
+    with pytest.raises(ValueError, match="scan"):
+        driver.make_shard_step(build_model(mcfg), algo,
+                               driver.classification_adapter,
+                               mesh=make_node_mesh(4),
+                               topology=Topology.make("ring", 4))
+
+
+# ------------------------------------------------------------- node mesh
+def test_make_node_mesh_divides_nodes():
+    ndev = len(jax.devices())
+    mesh = make_node_mesh(6)
+    assert 6 % mesh.shape["node"] == 0
+    assert mesh.shape["node"] == max(d for d in range(1, min(ndev, 6) + 1)
+                                     if 6 % d == 0)
+    assert make_node_mesh(1).shape["node"] == 1
+
+
+# ------------------------------------------------------------ im2col conv
+def test_im2col_forward_matches_lax(mcfg):
+    """The im2col conv path (patch-gather + matmul, no lax.conv) must
+    reproduce the lax conv forward — including strided stage-transition
+    blocks with projection shortcuts."""
+    from repro.models import build_model
+    cfg_lax = mcfg.replace(conv_backend="lax", cnn_stages=(1, 1))
+    cfg_i2c = cfg_lax.replace(conv_backend="im2col")
+    m_lax, m_i2c = build_model(cfg_lax), build_model(cfg_i2c)
+    params = m_lax.init(jax.random.PRNGKey(0))
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(4, cfg_lax.image_size, cfg_lax.image_size, 3)), jnp.float32)
+    a, _ = m_lax.forward(params, {"images": x})
+    b, _ = m_i2c.forward(params, {"images": x})
+    assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_auto_mode_uses_scan_for_im2col_cnn():
+    """driver_mode="auto" keeps lax-conv CNNs on the host runner on CPU
+    (conv-in-while pathology) but lets im2col models onto the scan
+    runner; explicit modes pass through untouched."""
+    if jax.default_backend() != "cpu":
+        pytest.skip("auto-mode conv fallback is CPU-specific")
+    assert driver.resolve_runner_mode("auto", "cnn", "lax") == "host"
+    assert driver.resolve_runner_mode("auto", "cnn", "im2col") == "scan"
+    assert driver.resolve_runner_mode("auto", "dense") == "scan"
+    assert driver.resolve_runner_mode("shard", "cnn", "lax") == "shard"
