@@ -20,6 +20,7 @@ from repro.configs.base import IDKDConfig
 from repro.core import labeling
 from repro.core.topology import Topology
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.head_select import head_select, head_select_ref
 from repro.kernels.msp_select import msp_select, msp_select_ref
 from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
 from repro.models.attention import chunked_attention
@@ -70,15 +71,26 @@ def run():
 
     # msp_select
     logits = jnp.asarray(rng.normal(size=(512, 4096)) * 3, jnp.float32)
-    ref_fn = jax.jit(lambda l: msp_select_ref(l, temperature=10.0,
-                                              threshold=0.5, k=8))
+    ref_fn = jax.jit(lambda l: msp_select_ref(l, temperature=10.0, k=8))
     csv.append(("kernels/msp_ref", _time(ref_fn, logits), "xla"))
-    co, vo, io, mo = msp_select(logits[:32], temperature=10.0, threshold=0.5,
-                                k=8, block_n=8, interpret=True)
-    cr, vr, ir, mr = msp_select_ref(logits[:32], temperature=10.0,
-                                    threshold=0.5, k=8)
+    co, vo, io = msp_select(logits[:32], temperature=10.0, k=8, block_n=8,
+                            interpret=True)
+    cr, vr, ir = msp_select_ref(logits[:32], temperature=10.0, k=8)
     csv.append(("kernels/msp_pallas_interp_maxerr", 0.0,
                 f"{float(jnp.max(jnp.abs(co - cr))):.2e}"))
+
+    # head_select (vocab-tiled msp_select from hidden states)
+    D = 128
+    h = jnp.asarray(rng.normal(size=(512, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, 4096)) * 0.3, jnp.float32)
+    hs_ref = jax.jit(lambda a, b: head_select_ref(a, b, temperature=10.0,
+                                                  k=8))
+    csv.append(("kernels/head_select_ref", _time(hs_ref, h, w), "xla"))
+    ch, vh, ih = head_select(h[:32], w, temperature=10.0, k=8, block_rows=8,
+                             block_c=512, interpret=True)
+    chr_, vhr, ihr = head_select_ref(h[:32], w, temperature=10.0, k=8)
+    csv.append(("kernels/head_select_pallas_interp_maxerr", 0.0,
+                f"{float(jnp.max(jnp.abs(ch - chr_))):.2e}"))
     return [], csv
 
 
@@ -87,16 +99,53 @@ LABELING_GRID = [(1024, 10), (1024, 32_768), (8192, 10), (8192, 32_768)]
 LABELING_NODES = 4
 LABELING_TOPK = 8
 
+# streaming vs one-shot select stage (DESIGN.md §8): P rows of D-dim
+# hidden states against a (D, C) head at C ∈ {1k, 32k, 257k-sim} — the
+# largest cell simulates the 257k-vocab LM regime (2^18 columns keeps the
+# cell a power-of-two multiple of the microbatch on this container).
+STREAM_GRID = [(2048, 1024), (1024, 32_768), (512, 262_144)]
+STREAM_D = 128
+STREAM_MB = 64
+
+
+def _stream_select_fns(P: int, C: int, k: int = LABELING_TOPK):
+    """(one_shot, streaming) jitted select-stage functions over
+    (hidden (P, D), head (D, C)). One-shot materializes the full (P, C)
+    logits and runs the fused msp_select oracle; streaming scans
+    STREAM_MB-row chunks through the head_select oracle and accumulates
+    only (conf, top-k)."""
+    def one_shot(h, w):
+        return msp_select_ref(h @ w, temperature=10.0, k=k)
+
+    def streaming(h, w):
+        chunks = h.reshape(P // STREAM_MB, STREAM_MB, STREAM_D)
+
+        def body(carry, hc):
+            return carry, head_select_ref(hc, w, temperature=10.0, k=k)
+
+        _, (conf, vals, idx) = jax.lax.scan(body, None, chunks)
+        return (conf.reshape(-1), vals.reshape(P, k), idx.reshape(P, k))
+
+    return jax.jit(one_shot), jax.jit(streaming)
+
 
 def bench_labeling(out_path: str | None = "BENCH_labeling.json"):
     """Full IDKD round (score → calibrate → select → exchange → average),
-    dense vs fused vs sparse backends, over P∈{1k, 8k} × C∈{10, 32k}.
+    dense vs fused vs sparse backends, over P∈{1k, 8k} × C∈{10, 32k} —
+    plus the streaming-vs-one-shot select stage over the STREAM_GRID
+    with an analytic peak-memory estimate per cell.
 
-    Every backend sees identical inputs on a ring of 4 nodes. Writes the
-    JSON baseline (µs per round) and returns the CSV rows.
+    Every backend sees identical inputs on a ring of 4 nodes. Cells are
+    device-labeled so timings only ever compare against a baseline
+    recorded on the same backend — a foreign-device baseline shares no
+    metric names, and check_regression then demands a baseline refresh
+    (its loud no-overlap failure) rather than comparing cpu and tpu
+    wall-clocks. Writes the JSON baseline (µs per round) and returns
+    the CSV rows.
     """
     topo = Topology.make("ring", LABELING_NODES)
     cfg = IDKDConfig(label_topk=LABELING_TOPK)
+    device = jax.default_backend()
     rng = np.random.default_rng(0)
     csv, cells = [], []
     for P, C in LABELING_GRID:
@@ -116,14 +165,39 @@ def bench_labeling(out_path: str | None = "BENCH_labeling.json"):
             us = _time(fn, pub, val, iters=iters)
             name = f"labeling/{backend}_P{P}_C{C}"
             csv.append((name, round(us, 1), "xla"))
-            cells.append({"P": P, "C": C, "backend": backend,
+            cells.append({"stage": "round", "P": P, "C": C,
+                          "backend": backend, "device": device,
                           "us_per_round": round(us, 1)})
+    for P, C in STREAM_GRID:
+        h = jnp.asarray(rng.normal(size=(P, STREAM_D)).astype(np.float32))
+        w = jnp.asarray(
+            rng.normal(size=(STREAM_D, C)).astype(np.float32) * 0.1)
+        one_shot, streaming = _stream_select_fns(P, C)
+        iters = 1 if C >= 262_144 else 3
+        for path, fn in (("one_shot", one_shot), ("streaming", streaming)):
+            us = _time(fn, h, w, iters=iters)
+            # peak live logits: the full (P, C) stack vs one microbatch
+            # chunk, + the accumulated (P, k) payload on both paths
+            live_rows = P if path == "one_shot" else STREAM_MB
+            peak = live_rows * C * 4 + P * LABELING_TOPK * 8
+            name = f"labeling/select_{path}_P{P}_C{C}"
+            csv.append((name, round(us, 1), f"peak={peak}"))
+            cells.append({"stage": "select", "path": path, "P": P, "C": C,
+                          "mb": STREAM_MB, "device": device,
+                          "us_per_round": round(us, 1),
+                          "peak_bytes_est": peak})
     if out_path:
         with open(out_path, "w") as f:
             json.dump({"meta": {"nodes": LABELING_NODES, "topology": "ring",
                                 "label_topk": LABELING_TOPK,
-                                "jax_backend": jax.default_backend(),
-                                "what": "µs per full IDKD labeling round"},
+                                "stream_microbatch": STREAM_MB,
+                                "stream_d": STREAM_D,
+                                "jax_backend": device,
+                                "what": "µs per full IDKD labeling round "
+                                        "(stage=round) / per fused select "
+                                        "pass (stage=select; "
+                                        "peak_bytes_est = live logit bytes "
+                                        "+ top-k payload)"},
                        "cells": cells}, f, indent=2)
             f.write("\n")
     return [], csv

@@ -26,7 +26,7 @@ import re
 import sys
 from typing import Dict
 
-METRIC_KEYS = ("us_per_step", "us_per_call", "wall_s")
+METRIC_KEYS = ("us_per_step", "us_per_call", "us_per_round", "wall_s")
 
 
 def extract_metrics(doc, metric_keys=METRIC_KEYS) -> Dict[str, float]:

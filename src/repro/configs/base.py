@@ -335,6 +335,18 @@ class IDKDConfig:
                                     # "dense" (jnp oracle) | "fused"
                                     # (msp_select kernel pass) | "sparse"
                                     # (top-k wire format end-to-end)
+    stream_labels: bool = True      # sparse/fused label rounds stream the
+                                    # public set in microbatches through the
+                                    # fused head-select pass — peak memory
+                                    # O(microbatch·C) + O(n·P·k), never the
+                                    # (n, P, C) logit stack (DESIGN.md §8);
+                                    # False = the one-shot oracle path
+    stream_microbatch: int = 256    # public samples per streaming chunk
+                                    # (the simulator's pre-streaming host
+                                    # batching used the same 256)
+    select_block_rows: int = 8      # row-block of the msp_select /
+                                    # head_select kernels (8 rows × 257k
+                                    # vocab ≈ 8 MB VMEM in f32)
 
 
 @dataclass(frozen=True)

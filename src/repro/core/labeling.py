@@ -37,6 +37,20 @@ Simulation (``core.simulator``) and production launch (``launch.train``)
 both call this engine; classifier ``(n, P, C)`` and LM ``(n, P, S, V)``
 logit stacks are handled uniformly (sequence confidence = mean over S of
 the per-token detector score).
+
+**Streaming rounds** (DESIGN.md §8). :func:`label_round` takes
+pre-materialized logit stacks — O(n · P · C) HBM for the round's input
+alone, the dominant cost at LLM vocab. :func:`streaming_label_round`
+is the production form of the fused/sparse backends: it takes the
+*models* (via their ``forward_features`` / ``head_params`` hooks) and
+``lax.scan``s the public set through them in microbatches, running the
+fused head-select pass (``kernels/head_select`` on TPU, its jnp oracle
+elsewhere) per chunk and accumulating only ``(conf, top-k values,
+top-k indices)`` — peak memory O(microbatch · C) + O(n · P · k); the
+full logit stack never exists. :func:`shard_streaming_label_round` is
+its ``shard_map`` twin: the scan lives inside the shard body, so
+score/calibrate/select stay shard-local and only top-k payloads cross
+the node axis.
 """
 from __future__ import annotations
 
@@ -48,6 +62,7 @@ import jax.numpy as jnp
 from repro.configs.base import IDKDConfig
 from repro.core import distill, ood
 from repro.core.topology import Topology
+from repro.kernels.head_select import head_select, head_select_ref
 from repro.kernels.msp_select import msp_select, msp_select_ref
 
 BACKENDS = ("dense", "fused", "sparse")
@@ -162,8 +177,9 @@ def exchange_sparse(topology: Topology, id_mask, sparse: distill.SparseLabels
 
 # ------------------------------------------------------------ fused pass
 _fused_oracle = jax.jit(
-    msp_select_ref,
-    static_argnames=("temperature", "threshold", "k", "detector"))
+    msp_select_ref, static_argnames=("temperature", "k", "detector"))
+_stream_oracle = jax.jit(
+    head_select_ref, static_argnames=("temperature", "k", "detector"))
 
 
 def _fused_pass(logits, cfg: IDKDConfig, k: int
@@ -172,30 +188,117 @@ def _fused_pass(logits, cfg: IDKDConfig, k: int
 
     TPU: the ``msp_select`` Pallas kernel (single HBM pass over the
     (rows, C) logits). Elsewhere: its jnp oracle under jit — same fused
-    dataflow, so CPU tests exercise identical math.
+    dataflow, so CPU tests exercise identical math. The D_ID mask is not
+    computed here: the threshold is calibrated from these confidences
+    downstream, so membership is one caller-owned compare.
     """
     lead, C = logits.shape[:-1], logits.shape[-1]
     flat = logits.reshape(-1, C)
     if jax.default_backend() == "tpu":
-        block = 8
+        block = cfg.select_block_rows
         pad = (-flat.shape[0]) % block
         n_rows = flat.shape[0]
         if pad:
             flat = jnp.pad(flat, ((0, pad), (0, 0)))
-        conf, vals, idx, _ = msp_select(
-            flat, temperature=cfg.temperature, threshold=0.0, k=k,
-            block_n=block, detector=cfg.detector)
+        conf, vals, idx = msp_select(
+            flat, temperature=cfg.temperature, k=k, block_n=block,
+            detector=cfg.detector)
         conf, vals, idx = conf[:n_rows], vals[:n_rows], idx[:n_rows]
     else:
-        conf, vals, idx, _ = _fused_oracle(
-            flat, temperature=cfg.temperature, threshold=0.0, k=k,
-            detector=cfg.detector)
+        conf, vals, idx = _fused_oracle(
+            flat, temperature=cfg.temperature, k=k, detector=cfg.detector)
     conf = conf.reshape(lead)
     if conf.ndim == 3:                                     # (n, P, S) tokens
         conf = conf.mean(-1)
     sparse = distill.SparseLabels(vals.reshape(lead + (k,)),
                                   idx.reshape(lead + (k,)))
     return conf, sparse
+
+
+def _head_pass(model, params_i, x, cfg: IDKDConfig, k: int):
+    """One node's fused head-select pass on one input microbatch.
+
+    ``forward_features`` yields the pre-head activations; the head
+    matrix is applied *inside* the fused select — the ``head_select``
+    Pallas kernel tiles the vocab axis on TPU, its jnp oracle forms only
+    a microbatch-sized logit chunk elsewhere. Returns per-sample
+    ``(conf, vals, idx)`` with LM token confidences already reduced to
+    sequence scores (mean over S).
+    """
+    feats, _ = model.forward_features(params_i, {model.input_key: x})
+    w, b = model.head_params(params_i)
+    lead = feats.shape[:-1]                                # (mb,) or (mb, S)
+    flat = feats.reshape(-1, feats.shape[-1])
+    if jax.default_backend() == "tpu":
+        block = cfg.select_block_rows
+        pad = (-flat.shape[0]) % block
+        n_rows = flat.shape[0]
+        if pad:
+            flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        conf, vals, idx = head_select(
+            flat, w, b, temperature=cfg.temperature, k=k,
+            block_rows=block, detector=cfg.detector)
+        conf, vals, idx = conf[:n_rows], vals[:n_rows], idx[:n_rows]
+    else:
+        conf, vals, idx = _stream_oracle(
+            flat, w, b, temperature=cfg.temperature, k=k,
+            detector=cfg.detector)
+    conf = conf.reshape(lead)
+    if conf.ndim == 2:                                     # (mb, S) tokens
+        conf = conf.mean(-1)
+    return conf, vals.reshape(lead + (k,)), idx.reshape(lead + (k,))
+
+
+def _head_width(model, params) -> int:
+    """Class/vocab count C from the head shape (no compute — eval_shape
+    on one node's param slice)."""
+    one = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape[1:], t.dtype), params)
+    return jax.eval_shape(lambda p: model.head_params(p)[0], one).shape[-1]
+
+
+def _chunk_public(public_x, microbatch: int):
+    """(P, ...) -> ((num_chunks, mb, ...), P, mb). The ragged tail is
+    padded by repeating row 0 (real inputs, outputs sliced off)."""
+    pub = jnp.asarray(public_x)
+    P = pub.shape[0]
+    mb = max(1, min(microbatch or 256, P))
+    num_chunks = -(-P // mb)
+    pad = num_chunks * mb - P
+    if pad:
+        pub = jnp.concatenate(
+            [pub, jnp.broadcast_to(pub[:1], (pad,) + pub.shape[1:])])
+    return pub.reshape((num_chunks, mb) + pub.shape[1:]), P, mb
+
+
+def _stream_public(model, params, chunks, P: int, cfg: IDKDConfig, k: int):
+    """Scan the chunked public set through the fused head pass for a
+    (possibly local) block of nodes; accumulate only (conf, vals, idx).
+    """
+    L = jax.tree.leaves(params)[0].shape[0]
+
+    def one_chunk(xc):                                     # (mb, ...)
+        xb = jnp.broadcast_to(xc[None], (L,) + xc.shape)
+        return jax.vmap(
+            lambda p, x: _head_pass(model, p, x, cfg, k))(params, xb)
+
+    _, (conf, vals, idx) = jax.lax.scan(
+        lambda carry, xc: (carry, one_chunk(xc)), None, chunks)
+    total = conf.shape[0] * conf.shape[2]                  # chunks · mb
+    conf = jnp.moveaxis(conf, 0, 1).reshape(L, total)[:, :P]
+    vals = jnp.moveaxis(vals, 0, 1)
+    vals = vals.reshape((L, total) + vals.shape[3:])[:, :P]
+    idx = jnp.moveaxis(idx, 0, 1)
+    idx = idx.reshape((L, total) + idx.shape[3:])[:, :P]
+    return conf, distill.SparseLabels(vals, idx)
+
+
+def _stream_val_conf(model, params, val_x, cfg: IDKDConfig):
+    """Per-node detector confidence on each node's own (small) val set,
+    through the same fused head pass (k=1: only conf is consumed)."""
+    return jax.vmap(
+        lambda p, x: _head_pass(model, p, x, cfg, 1)[0])(
+            params, jnp.asarray(val_x))
 
 
 # ------------------------------------------------------------ full round
@@ -266,7 +369,136 @@ def label_round(public_logits, val_logits, cal_logits, topology: Topology,
     return SparseHomogenizedSet(merged, weights, id_mask, thresholds)
 
 
+# ---------------------------------------------------------- streaming round
+def streaming_label_round(model, params, public_x, val_x,
+                          topology: Topology, cfg: IDKDConfig, *,
+                          filter_ood: bool = True, active=None
+                          ) -> SparseHomogenizedSet:
+    """One IDKD homogenization round without ever materializing the
+    public logit stack (DESIGN.md §8).
+
+    Instead of node-stacked logits this takes the *model* (via its
+    ``forward_features`` / ``head_params`` hooks) and node-stacked
+    ``params``, and streams the shared public set through every node in
+    microbatches of ``cfg.stream_microbatch``: one ``lax.scan`` whose
+    body runs the per-node forward to pre-head activations and the
+    fused head-select pass (``kernels/head_select`` on TPU, its jnp
+    oracle elsewhere), accumulating only ``(conf, top-k values, top-k
+    indices)``. Peak memory is O(n · microbatch · C) for the in-flight
+    chunk plus O(n · P · k) for the accumulated payload — the
+    O(n · P · C) tensor of :func:`label_round` never exists, which is
+    what lets the public corpus scale past device memory.
+
+    ``public_x``: (P, ...) shared public inputs (images or tokens);
+    ``val_x``:    (n, V, ...) each node's own private ID inputs;
+    D_C = D_P (the paper's default): the public confidences double as
+    the OoD calibration scores. Numerically this is the fused backend
+    of :func:`label_round` to float tolerance (online-softmax detector
+    stats, blockwise top-k merge), and it always produces sparse top-k
+    labels — the wire format the streaming path exists to preserve.
+    ``filter_ood`` / ``active`` behave exactly as in
+    :func:`label_round`.
+    """
+    n = jax.tree.leaves(params)[0].shape[0]
+    if topology.n != n:
+        raise ValueError(f"param stack has {n} nodes, topology "
+                         f"{topology.name!r} has {topology.n}")
+    C = _head_width(model, params)
+    k = min(cfg.label_topk or DEFAULT_TOPK, C)
+    chunks, P, _ = _chunk_public(public_x, cfg.stream_microbatch)
+    conf_pub, sparse = _stream_public(model, params, chunks, P, cfg, k)
+
+    if filter_ood:
+        conf_val = _stream_val_conf(model, params, val_x, cfg)
+        thresholds = calibrate(conf_val, conf_pub)
+        id_mask = conf_pub > thresholds[:, None]
+    else:
+        thresholds = jnp.zeros((n,), jnp.float32)
+        id_mask = jnp.ones(conf_pub.shape, bool)
+    if active is not None:
+        act = jnp.asarray(active, bool)
+        id_mask = id_mask & act[:, None]
+    merged, weights = exchange_sparse(topology, id_mask, sparse)
+    if active is not None:
+        weights = weights * act[:, None]
+    return SparseHomogenizedSet(merged, weights, id_mask, thresholds)
+
+
 # ------------------------------------------------------------ sharded round
+def _shard_layout(topology: Topology, n: int, mesh, axis: str):
+    """Shared shard-round validation: node-count divisibility and the
+    ring/complete support set. Returns (size, ring, full)."""
+    from repro.core import mixing
+
+    if topology.n != n:
+        raise ValueError(f"node stack has {n} nodes, topology "
+                         f"{topology.name!r} has {topology.n}")
+    size = mesh.shape[axis]
+    if n % size != 0:
+        raise ValueError(f"node count ({n}) not divisible by the mesh "
+                         f"{axis!r} axis ({size})")
+    ring = mixing._is_ring(topology)
+    full = mixing._is_full(topology)
+    if not (ring or full):
+        raise ValueError(
+            f"sharded label exchange supports ring/complete graphs; "
+            f"topology {topology.name!r} must use the node-stacked "
+            "labeling.label_round (backend='sparse')")
+    return size, ring, full
+
+
+def _merge_payloads(parts_v, parts_i, parts_m):
+    """Mean over contributors distributes over the scatter: concat
+    contributor payloads along k with m_j/cnt weights (DESIGN.md §2)."""
+    cnt = sum(parts_m)                                      # (L, P)
+    share = [m / jnp.maximum(cnt, 1.0) for m in parts_m]
+    extra = parts_v[0].ndim - cnt.ndim                      # e.g. the S axis
+    vals = jnp.concatenate(
+        [v * s.reshape(s.shape + (1,) * extra)
+         for v, s in zip(parts_v, share)], axis=-1)
+    idx = jnp.concatenate(parts_i, axis=-1)
+    return (vals.astype(jnp.float32), idx.astype(jnp.int32),
+            (cnt > 0).astype(jnp.float32))
+
+
+def _shard_exchange(sp: distill.SparseLabels, m, *, axis: str, size: int,
+                    n: int, ring: bool, full: bool):
+    """The label exchange across the mesh node axis (inside shard_map):
+    only the top-k payload (values, indices, D_ID mask) moves — ring
+    neighbours swap boundary rows via ``lax.ppermute``
+    (``mixing.block_ring_shift``), complete graphs ``all_gather``."""
+    from repro.core import mixing
+
+    if full and not (ring and n <= 3):
+        vals_all = jax.lax.all_gather(sp.values, axis, axis=0,
+                                      tiled=True)           # (n, P[, S], k)
+        idx_all = jax.lax.all_gather(sp.indices, axis, axis=0, tiled=True)
+        m_all = jax.lax.all_gather(m, axis, axis=0, tiled=True)
+        # contributor axis consumed by _merge_payloads → (P[, S], n·k);
+        # on the complete graph every node merges the same contributor
+        # set, so the result broadcasts over local nodes
+        vals, idx, w = _merge_payloads(list(vals_all), list(idx_all),
+                                       list(m_all))
+        L = m.shape[0]
+        vals = jnp.broadcast_to(vals[None], (L,) + vals.shape)
+        idx = jnp.broadcast_to(idx[None], (L,) + idx.shape)
+        w = jnp.broadcast_to(w[None], (L,) + w.shape)
+        return vals, idx, w
+    if n == 1:
+        return _merge_payloads([sp.values], [sp.indices], [m])
+
+    def shifted(t, s):
+        return mixing.block_ring_shift(t, axis, size, s)
+    parts_v = [sp.values, shifted(sp.values, 1)]
+    parts_i = [sp.indices, shifted(sp.indices, 1)]
+    parts_m = [m, shifted(m, 1)]
+    if n > 2:
+        parts_v.append(shifted(sp.values, -1))
+        parts_i.append(shifted(sp.indices, -1))
+        parts_m.append(shifted(m, -1))
+    return _merge_payloads(parts_v, parts_i, parts_m)
+
+
 def shard_label_round(public_logits, val_logits, topology: Topology,
                       cfg: IDKDConfig, *, mesh, axis: str = "node",
                       filter_ood: bool = True) -> SparseHomogenizedSet:
@@ -296,38 +528,10 @@ def shard_label_round(public_logits, val_logits, topology: Topology,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.core import mixing
-
     n = public_logits.shape[0]
-    if topology.n != n:
-        raise ValueError(f"logit stack has {n} nodes, topology "
-                         f"{topology.name!r} has {topology.n}")
-    size = mesh.shape[axis]
-    if n % size != 0:
-        raise ValueError(f"node count ({n}) not divisible by the mesh "
-                         f"{axis!r} axis ({size})")
-    ring = mixing._is_ring(topology)
-    full = mixing._is_full(topology)
-    if not (ring or full):
-        raise ValueError(
-            f"sharded label exchange supports ring/complete graphs; "
-            f"topology {topology.name!r} must use the node-stacked "
-            "labeling.label_round (backend='sparse')")
+    size, ring, full = _shard_layout(topology, n, mesh, axis)
     k = min(cfg.label_topk or DEFAULT_TOPK, public_logits.shape[-1])
     spec = P(axis)
-
-    def _merge(parts_v, parts_i, parts_m):
-        # mean over contributors distributes over the scatter: concat
-        # contributor payloads along k with m_j/cnt weights (DESIGN.md §2)
-        cnt = sum(parts_m)                                  # (L, P)
-        share = [m / jnp.maximum(cnt, 1.0) for m in parts_m]
-        extra = parts_v[0].ndim - cnt.ndim                  # e.g. the S axis
-        vals = jnp.concatenate(
-            [v * s.reshape(s.shape + (1,) * extra)
-             for v, s in zip(parts_v, share)], axis=-1)
-        idx = jnp.concatenate(parts_i, axis=-1)
-        return (vals.astype(jnp.float32), idx.astype(jnp.int32),
-                (cnt > 0).astype(jnp.float32))
 
     def body(pub, val):
         # ---- score / calibrate / select: shard-local, zero comm
@@ -342,41 +546,71 @@ def shard_label_round(public_logits, val_logits, topology: Topology,
         sp = distill.sparsify_labels(
             distill.soft_labels(pub, cfg.temperature), k)
         m = id_mask.astype(jnp.float32)
-
         # ---- exchange: only the top-k payload crosses the node axis
-        if full and not (ring and n <= 3):
-            vals_all = jax.lax.all_gather(sp.values, axis, axis=0,
-                                          tiled=True)       # (n, P[, S], k)
-            idx_all = jax.lax.all_gather(sp.indices, axis, axis=0,
-                                         tiled=True)
-            m_all = jax.lax.all_gather(m, axis, axis=0, tiled=True)
-            # contributor axis consumed by _merge → (P[, S], n·k) / (P,);
-            # on the complete graph every node merges the same
-            # contributor set, so the result broadcasts over local nodes
-            vals, idx, w = _merge(list(vals_all), list(idx_all),
-                                  list(m_all))
-            L = pub.shape[0]
-            vals = jnp.broadcast_to(vals[None], (L,) + vals.shape)
-            idx = jnp.broadcast_to(idx[None], (L,) + idx.shape)
-            w = jnp.broadcast_to(w[None], (L,) + w.shape)
-        elif n == 1:
-            vals, idx, w = _merge([sp.values], [sp.indices], [m])
-        else:
-            def shifted(t, s):
-                return mixing.block_ring_shift(t, axis, size, s)
-            parts_v = [sp.values, shifted(sp.values, 1)]
-            parts_i = [sp.indices, shifted(sp.indices, 1)]
-            parts_m = [m, shifted(m, 1)]
-            if n > 2:
-                parts_v.append(shifted(sp.values, -1))
-                parts_i.append(shifted(sp.indices, -1))
-                parts_m.append(shifted(m, -1))
-            vals, idx, w = _merge(parts_v, parts_i, parts_m)
+        vals, idx, w = _shard_exchange(sp, m, axis=axis, size=size, n=n,
+                                       ring=ring, full=full)
         return vals, idx, w, id_mask, thresholds
 
     vals, idx, w, id_mask, thresholds = shard_map(
         body, mesh=mesh, in_specs=(spec, spec),
         out_specs=(spec, spec, spec, spec, spec), check_rep=False)(
             public_logits, val_logits)
+    return SparseHomogenizedSet(distill.SparseLabels(vals, idx), w,
+                                id_mask, thresholds)
+
+
+def shard_streaming_label_round(model, params, public_x, val_x,
+                                topology: Topology, cfg: IDKDConfig, *,
+                                mesh, axis: str = "node",
+                                filter_ood: bool = True
+                                ) -> SparseHomogenizedSet:
+    """:func:`streaming_label_round` under ``shard_map`` over the mesh
+    node axis — the streaming twin of :func:`shard_label_round`.
+
+    The public-set scan lives *inside* the shard_map body: each device
+    streams the (replicated) public microbatches through its own block
+    of nodes' models — forward to pre-head activations, fused
+    head-select per chunk — and calibrates thresholds shard-local, so
+    score/select cost zero communication and no device ever holds more
+    than O(local_nodes · microbatch · C) of logits. Exactly as in
+    :func:`shard_label_round`, only the top-k payload crosses the node
+    axis (boundary-row ppermutes on rings, all_gather on complete
+    graphs); churn masks remain unsupported in shard mode.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.sharding import node_stacked_specs
+
+    n = jax.tree.leaves(params)[0].shape[0]
+    size, ring, full = _shard_layout(topology, n, mesh, axis)
+    C = _head_width(model, params)
+    k = min(cfg.label_topk or DEFAULT_TOPK, C)
+    chunks, P_pub, _ = _chunk_public(public_x, cfg.stream_microbatch)
+    val_x = jnp.asarray(val_x)
+    spec = P(axis)
+
+    def body(p_local, chunks_rep, val_local):
+        # ---- stream / score / calibrate / select: shard-local
+        conf_pub, sp = _stream_public(model, p_local, chunks_rep, P_pub,
+                                      cfg, k)
+        if filter_ood:
+            thresholds = calibrate(
+                _stream_val_conf(model, p_local, val_local, cfg), conf_pub)
+            id_mask = conf_pub > thresholds[:, None]
+        else:
+            thresholds = jnp.zeros((conf_pub.shape[0],), jnp.float32)
+            id_mask = jnp.ones(conf_pub.shape, bool)
+        m = id_mask.astype(jnp.float32)
+        # ---- exchange: only the top-k payload crosses the node axis
+        vals, idx, w = _shard_exchange(sp, m, axis=axis, size=size, n=n,
+                                       ring=ring, full=full)
+        return vals, idx, w, id_mask, thresholds
+
+    vals, idx, w, id_mask, thresholds = shard_map(
+        body, mesh=mesh,
+        in_specs=(node_stacked_specs(params, n, axis), P(), spec),
+        out_specs=(spec, spec, spec, spec, spec), check_rep=False)(
+            params, chunks, val_x)
     return SparseHomogenizedSet(distill.SparseLabels(vals, idx), w,
                                 id_mask, thresholds)

@@ -332,13 +332,17 @@ class DecentralizedSimulator:
             outs.append(self._forward_logits(params, xb))
         return outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=1)
 
-    def _per_node_val_logits(self, params, batch: int = 256):
-        """Each node's logits on its own private samples (ID scores)."""
-        # use each node's training samples as its ID set (paper: D_V^i)
+    def _per_node_val_inputs(self, batch: int = 256):
+        """Each node's own private samples (n, m, ...) — its ID set
+        (paper: D_V^i; the node's training samples)."""
         m = min(min(len(p) for p in self.parts), batch)
         idx = np.stack([p[:m] for p in self.parts])
-        xb = jnp.asarray(self.data.train_x[idx])      # (n, m, ...)
-        return self._forward_logits(params, xb)
+        return jnp.asarray(self.data.train_x[idx])
+
+    def _per_node_val_logits(self, params, batch: int = 256):
+        """Each node's logits on its own private samples (ID scores)."""
+        return self._forward_logits(params,
+                                    self._per_node_val_inputs(batch))
 
     # ------------------------------------------------------------------- run
     def default_schedule(self) -> sched.Schedule:
@@ -434,24 +438,41 @@ class DecentralizedSimulator:
                     topology: Optional[Topology] = None,
                     active: Optional[np.ndarray] = None
                     ) -> labeling.HomogenizedResult:
-        pub_logits = self._node_logits(params, self.public_x)
-        val_logits = self._per_node_val_logits(params)
-        # cal_logits=None: D_C = the public set (paper's default);
         # kd_mode="vanilla" is the no-OoD-filter baseline (every public
         # sample kept) — the engine's filter_ood=False branch
+        filter_ood = self.kd_mode != "vanilla"
+        topo = topology or self.topology
+        streaming = (idkd_cfg.stream_labels
+                     and idkd_cfg.label_backend != "dense")
         if self.driver_mode == "shard":
             if active is not None:
                 raise ValueError("sharded label rounds have no churn "
                                  "path; run churn schedules node-stacked")
+            if streaming:
+                # scan inside the shard body: no device ever holds more
+                # than its local chunk of logits (DESIGN.md §8)
+                return labeling.shard_streaming_label_round(
+                    self.model, params, jnp.asarray(self.public_x),
+                    self._per_node_val_inputs(), topo, idkd_cfg,
+                    mesh=self.node_mesh, filter_ood=filter_ood)
             # score/select shard-local, top-k-only exchange (DESIGN.md §7)
             return labeling.shard_label_round(
-                pub_logits, val_logits, topology or self.topology,
-                idkd_cfg, mesh=self.node_mesh,
-                filter_ood=self.kd_mode != "vanilla")
+                self._node_logits(params, self.public_x),
+                self._per_node_val_logits(params), topo, idkd_cfg,
+                mesh=self.node_mesh, filter_ood=filter_ood)
+        if streaming:
+            # microbatched fused pass — the (n, P, C) stack never exists
+            return labeling.streaming_label_round(
+                self.model, params, jnp.asarray(self.public_x),
+                self._per_node_val_inputs(), topo, idkd_cfg,
+                filter_ood=filter_ood, active=active)
+        # one-shot oracle paths (dense backend, or stream_labels=False):
+        # cal_logits=None = D_C is the public set (paper's default)
         return labeling.label_round(
-            pub_logits, val_logits, None, topology or self.topology,
-            idkd_cfg, backend=idkd_cfg.label_backend,
-            filter_ood=self.kd_mode != "vanilla", active=active)
+            self._node_logits(params, self.public_x),
+            self._per_node_val_logits(params), None, topo, idkd_cfg,
+            backend=idkd_cfg.label_backend, filter_ood=filter_ood,
+            active=active)
 
     def _post_histograms(self, hom: labeling.HomogenizedResult) -> np.ndarray:
         C = self.mcfg.num_classes

@@ -1,0 +1,2 @@
+from repro.kernels.head_select.ops import head_select  # noqa: F401
+from repro.kernels.head_select.ref import head_select_ref  # noqa: F401

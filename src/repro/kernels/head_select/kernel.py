@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused, vocab-tiled head-select (streaming labeling).
+
+The logit-free generalization of ``msp_select``: instead of reading a
+precomputed ``(rows, C)`` logit tensor from HBM, it takes the final
+hidden states ``(rows, D)`` and the classifier / unembedding matrix
+``(D, C)`` and computes the IDKD labeling quantities — detector
+confidence and the renormalized top-k sparse soft label — with the
+**vocab axis tiled**: the full ``(rows, C)`` logit tensor never exists
+in any memory.
+
+Per ``(row_block, vocab_block)`` grid cell the kernel does one MXU
+matmul ``hidden @ W[:, c0:c1]`` in VMEM and folds the block into
+running per-row state (the same scratch-accumulator pattern as the
+in-repo flash_attention kernel, whose online-softmax (m, l) carry this
+reuses):
+
+* ``m, z``   — online-softmax running max / normalizer at T=1, from
+  which both detectors fall out at the final block (MSP ``1/z``,
+  energy ``m + log z``);
+* ``tv, ti`` — running top-k *logits* + global vocab indices, merged
+  blockwise (iterative argmax inside the block, then a 2k-wide merge
+  with the carry). Top-k of the temperature softmax equals top-k of
+  the logits (softmax is monotonic), and the *renormalized* top-k
+  payload depends only on the top-k logits themselves —
+  ``v_j = exp(l_j/T) / Σ_{j'∈topk} exp(l_j'/T)`` — so the temperature
+  enters only in the finalizer and no softmax over C is ever formed.
+
+VMEM per cell: ``block_rows × D`` hidden + ``D × block_c`` weights +
+``block_rows × block_c`` scores (f32). At D=4k, block_c=512,
+block_rows=8 that is ≈ 9 MB — comfortably resident; HBM traffic is one
+read of W per row block and one read of the hidden states, with
+O(rows · k) outputs instead of O(rows · C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _head_kernel(h_ref, w_ref, b_ref, conf_ref, vals_ref, idx_ref,
+                 m_scr, z_scr, tv_scr, ti_scr, *,
+                 temperature: float, k: int, detector: str,
+                 block_c: int, num_c_blocks: int, num_classes: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        z_scr[...] = jnp.zeros_like(z_scr)
+        tv_scr[...] = jnp.full_like(tv_scr, NEG_INF)
+        ti_scr[...] = jnp.zeros_like(ti_scr)
+
+    h = h_ref[...].astype(jnp.float32)                     # (bn, D)
+    w = w_ref[...].astype(jnp.float32)                     # (D, bc)
+    s = jax.lax.dot_general(h, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s + b_ref[...].astype(jnp.float32)                 # (1, bc) bias
+    col0 = ci * block_c
+    local = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(col0 + local < num_classes, s, NEG_INF)  # C padding
+
+    # ---- online-softmax detector stats at T=1 (flash-attention carry)
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    z_scr[...] = (z_scr[...] * jnp.exp(m_prev - m_new)
+                  + jnp.sum(jnp.exp(s - m_new[:, None]), axis=1))
+    m_scr[...] = m_new
+
+    # ---- block top-k of the raw logits by iterative argmax (k small)
+    work = s
+    bv_list, bi_list = [], []
+    for _ in range(k):
+        v = jnp.max(work, axis=-1)
+        i = jnp.argmax(work, axis=-1).astype(jnp.int32)
+        bv_list.append(v)
+        bi_list.append(col0 + i)
+        work = jnp.where(local == i[:, None], NEG_INF, work)
+    bv = jnp.stack(bv_list, axis=-1)                       # (bn, k)
+    bi = jnp.stack(bi_list, axis=-1)
+
+    # ---- streaming merge with the carry: top-k of the 2k candidates
+    cv = jnp.concatenate([tv_scr[...], bv], axis=-1)       # (bn, 2k)
+    cidx = jnp.concatenate([ti_scr[...], bi], axis=-1)
+    slot = jax.lax.broadcasted_iota(jnp.int32, cv.shape, 1)
+    mv_list, mi_list = [], []
+    for _ in range(k):
+        v = jnp.max(cv, axis=-1)
+        p = jnp.argmax(cv, axis=-1)
+        mv_list.append(v)
+        mi_list.append(jnp.take_along_axis(cidx, p[:, None], axis=-1)[:, 0])
+        cv = jnp.where(slot == p[:, None], NEG_INF, cv)
+    tv_scr[...] = jnp.stack(mv_list, axis=-1)
+    ti_scr[...] = jnp.stack(mi_list, axis=-1)
+
+    @pl.when(ci == num_c_blocks - 1)
+    def _finalize():
+        z = jnp.maximum(z_scr[...], 1e-30)
+        if detector == "energy":
+            conf_ref[...] = m_scr[...] + jnp.log(z)
+        else:
+            conf_ref[...] = 1.0 / z
+        tv = tv_scr[...]                                   # sorted desc
+        e = jnp.exp((tv - tv[:, :1]) / temperature)
+        vals_ref[...] = e / jnp.maximum(jnp.sum(e, -1, keepdims=True),
+                                        1e-30)
+        idx_ref[...] = ti_scr[...]
+
+
+def head_select_pallas(hidden, w, bias, *, temperature: float, k: int = 8,
+                       block_rows: int = 8, block_c: int = 512,
+                       interpret: bool = True, detector: str = "msp"):
+    """hidden (N, D) + head (D, C) [+ bias (C,)] ->
+    (conf (N,), vals (N, k), idx (N, k)) with the vocab axis tiled."""
+    N, D = hidden.shape
+    C = w.shape[1]
+    assert w.shape[0] == D, (w.shape, hidden.shape)
+    assert k <= C, "clamp k to the class count before calling"
+    assert detector in ("msp", "energy"), detector
+    block_rows = min(block_rows, N)
+    assert N % block_rows == 0, "pad rows to a block multiple"
+    block_c = min(block_c, C)
+    pad_c = (-C) % block_c
+    if bias is None:
+        bias = jnp.zeros((C,), jnp.float32)
+    if pad_c:
+        w = jnp.pad(w, ((0, 0), (0, pad_c)))
+        bias = jnp.pad(bias, (0, pad_c))
+    bias = bias.reshape(1, -1)
+    num_c_blocks = (C + pad_c) // block_c
+
+    kernel = functools.partial(
+        _head_kernel, temperature=temperature, k=k, detector=detector,
+        block_c=block_c, num_c_blocks=num_c_blocks, num_classes=C)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // block_rows, num_c_blocks),
+        in_specs=[
+            pl.BlockSpec((block_rows, D), lambda i, c: (i, 0)),
+            pl.BlockSpec((D, block_c), lambda i, c: (0, c)),
+            pl.BlockSpec((1, block_c), lambda i, c: (0, c)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows,), lambda i, c: (i,)),
+            pl.BlockSpec((block_rows, k), lambda i, c: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i, c: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N, k), jnp.float32),
+            jax.ShapeDtypeStruct((N, k), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_rows,), jnp.float32),
+            pltpu.VMEM((block_rows,), jnp.float32),
+            pltpu.VMEM((block_rows, k), jnp.float32),
+            pltpu.VMEM((block_rows, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hidden, w, bias)

@@ -1,0 +1,25 @@
+"""Jit'd public wrapper for the head_select kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.head_select.kernel import head_select_pallas
+from repro.kernels.head_select.ref import head_select_ref
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "k",
+                                             "block_rows", "block_c",
+                                             "interpret", "detector"))
+def head_select(hidden, w, bias=None, *, temperature: float = 10.0,
+                k: int = 8, block_rows: int = 8, block_c: int = 512,
+                interpret: bool | None = None, detector: str = "msp"):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return head_select_pallas(hidden, w, bias, temperature=temperature,
+                              k=k, block_rows=block_rows, block_c=block_c,
+                              interpret=interpret, detector=detector)
+
+
+__all__ = ["head_select", "head_select_ref"]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused head-select kernel.
+
+XLA fuses this the same way on CPU (one pass over the chunk's logits),
+so the streaming labeling driver runs identical math off-TPU — the
+chunk logits ``hidden @ w`` are a *microbatch-sized* intermediate, never
+the full public set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def head_select_ref(hidden, w, bias=None, *, temperature: float, k: int,
+                    detector: str = "msp"):
+    """Fused labeling pass from pre-head activations:
+
+    hidden (N, D) @ w (D, C) [+ bias (C,)] ->
+      * conf (N,)   — detector confidence at T=1 (MSP or energy)
+      * vals (N, k) — top-k of the temperature softmax, renormalized
+      * idx  (N, k) — their class / vocab indices
+    """
+    logits = (hidden.astype(jnp.float32) @ w.astype(jnp.float32))
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)
+    if detector == "energy":
+        conf = jax.nn.logsumexp(logits, axis=-1)
+    else:
+        conf = jnp.max(jax.nn.softmax(logits, axis=-1), axis=-1)
+    vals, idx = jax.lax.top_k(logits, k)
+    vals = jax.nn.softmax(vals / temperature, axis=-1)
+    return conf, vals, idx.astype(jnp.int32)

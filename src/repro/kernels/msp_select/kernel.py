@@ -1,10 +1,14 @@
 """Pallas TPU kernel: fused IDKD public-set labeling (msp_select).
 
 IDKD's hot loop reads every public-set logit row once and produces
-(i) MSP confidence, (ii) the D_ID membership bit, (iii) the top-k sparse
-soft label. Unfused, XLA performs 3 HBM passes over the (N × vocab)
-logits (softmax@T=1 → max; softmax@T → top_k; compare); this kernel does
-one pass with everything fused in VMEM.
+(i) detector confidence and (ii) the top-k sparse soft label. Unfused,
+XLA performs 2 HBM passes over the (N × vocab) logits (softmax@T=1 →
+max; softmax@T → top_k); this kernel does one pass with everything
+fused in VMEM. The D_ID membership bit is *not* computed here: the
+threshold is ROC-calibrated from the confidences downstream, so the
+mask is one compare the caller owns (``conf > t_opt``) — see
+``kernels/head_select`` for the vocab-tiled generalization that starts
+from hidden states instead of logits.
 
 Tiling: (block_n × C) row tiles — the vocab axis stays resident in VMEM
 (256k vocab ≈ 1 MB/row in f32, so block_n is chosen so block_n × C × 4B
@@ -23,9 +27,8 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _msp_kernel(logits_ref, conf_ref, vals_ref, idx_ref, mask_ref, *,
-                temperature: float, threshold: float, k: int,
-                detector: str):
+def _msp_kernel(logits_ref, conf_ref, vals_ref, idx_ref, *,
+                temperature: float, k: int, detector: str):
     lf = logits_ref[...].astype(jnp.float32)               # (bn, C)
     # detector confidence at T=1 from one stable softmax reduction:
     # MSP = exp(0)/Σexp(lf−m1); energy = logsumexp = m1 + log Σexp(lf−m1)
@@ -36,7 +39,6 @@ def _msp_kernel(logits_ref, conf_ref, vals_ref, idx_ref, mask_ref, *,
     else:
         conf = 1.0 / jnp.maximum(z1, 1e-30)
     conf_ref[...] = conf
-    mask_ref[...] = conf > threshold
     # temperature softmax for the soft labels
     lT = lf / temperature
     mT = jnp.max(lT, axis=-1, keepdims=True)
@@ -48,7 +50,6 @@ def _msp_kernel(logits_ref, conf_ref, vals_ref, idx_ref, mask_ref, *,
     work = probs
     total = jnp.zeros((probs.shape[0],), jnp.float32)
     vals_list, idx_list = [], []
-    C = probs.shape[1]
     cols = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
     for j in range(k):
         v = jnp.max(work, axis=-1)
@@ -63,16 +64,16 @@ def _msp_kernel(logits_ref, conf_ref, vals_ref, idx_ref, mask_ref, *,
     idx_ref[...] = idx
 
 
-def msp_select_pallas(logits, *, temperature: float, threshold: float,
-                      k: int = 8, block_n: int = 8, interpret: bool = True,
+def msp_select_pallas(logits, *, temperature: float, k: int = 8,
+                      block_n: int = 8, interpret: bool = True,
                       detector: str = "msp"):
-    """logits: (N, C) -> (conf (N,), vals (N,k), idx (N,k), mask (N,))."""
+    """logits: (N, C) -> (conf (N,), vals (N, k), idx (N, k))."""
     N, C = logits.shape
     block_n = min(block_n, N)
     assert N % block_n == 0, "pad rows to a block multiple"
     assert detector in ("msp", "energy"), detector
     kernel = functools.partial(_msp_kernel, temperature=temperature,
-                               threshold=threshold, k=k, detector=detector)
+                               k=k, detector=detector)
     return pl.pallas_call(
         kernel,
         grid=(N // block_n,),
@@ -81,13 +82,11 @@ def msp_select_pallas(logits, *, temperature: float, threshold: float,
             pl.BlockSpec((block_n,), lambda i: (i,)),
             pl.BlockSpec((block_n, k), lambda i: (i, 0)),
             pl.BlockSpec((block_n, k), lambda i: (i, 0)),
-            pl.BlockSpec((block_n,), lambda i: (i,)),
         ),
         out_shape=(
             jax.ShapeDtypeStruct((N,), jnp.float32),
             jax.ShapeDtypeStruct((N, k), jnp.float32),
             jax.ShapeDtypeStruct((N, k), jnp.int32),
-            jax.ShapeDtypeStruct((N,), jnp.bool_),
         ),
         interpret=interpret,
     )(logits)

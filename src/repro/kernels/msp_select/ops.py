@@ -9,17 +9,16 @@ from repro.kernels.msp_select.kernel import msp_select_pallas
 from repro.kernels.msp_select.ref import msp_select_ref
 
 
-@functools.partial(jax.jit, static_argnames=("temperature", "threshold", "k",
-                                             "block_n", "interpret",
-                                             "detector"))
-def msp_select(logits, *, temperature: float = 10.0, threshold: float = 0.5,
-               k: int = 8, block_n: int = 8, interpret: bool | None = None,
+@functools.partial(jax.jit, static_argnames=("temperature", "k", "block_n",
+                                             "interpret", "detector"))
+def msp_select(logits, *, temperature: float = 10.0, k: int = 8,
+               block_n: int = 8, interpret: bool | None = None,
                detector: str = "msp"):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    return msp_select_pallas(logits, temperature=temperature,
-                             threshold=threshold, k=k, block_n=block_n,
-                             interpret=interpret, detector=detector)
+    return msp_select_pallas(logits, temperature=temperature, k=k,
+                             block_n=block_n, interpret=interpret,
+                             detector=detector)
 
 
 __all__ = ["msp_select", "msp_select_ref"]

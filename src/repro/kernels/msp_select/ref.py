@@ -5,16 +5,19 @@ import jax
 import jax.numpy as jnp
 
 
-def msp_select_ref(logits, *, temperature: float, threshold: float, k: int,
+def msp_select_ref(logits, *, temperature: float, k: int,
                    detector: str = "msp"):
-    """Fused IDKD labeling pass (Algorithm 1 lines 5–7) on (N, C) logits:
+    """Fused IDKD labeling pass (Algorithm 1 lines 5+7) on (N, C) logits:
 
-    Returns (conf (N,), topk_vals (N,k), topk_idx (N,k), id_mask (N,)):
-      * conf      — detector confidence at T=1: max softmax probability
-                    (MSP, the default) or the energy score logsumexp(z)
-      * topk      — top-k of the *temperature* softmax, renormalized
-                    (the sparse soft label payload)
-      * id_mask   — conf > threshold (the D_ID membership test)
+    Returns (conf (N,), topk_vals (N,k), topk_idx (N,k)):
+      * conf — detector confidence at T=1: max softmax probability
+               (MSP, the default) or the energy score logsumexp(z)
+      * topk — top-k of the *temperature* softmax, renormalized
+               (the sparse soft label payload)
+
+    The D_ID membership test (``conf > t_opt``) lives with the caller:
+    the threshold is ROC-calibrated from these confidences, so it does
+    not exist yet when the kernel runs.
     """
     lf = logits.astype(jnp.float32)
     if detector == "energy":
@@ -25,4 +28,4 @@ def msp_select_ref(logits, *, temperature: float, threshold: float, k: int,
     probsT = jax.nn.softmax(lf / temperature, axis=-1)
     vals, idx = jax.lax.top_k(probsT, k)
     vals = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)
-    return conf, vals, idx.astype(jnp.int32), conf > threshold
+    return conf, vals, idx.astype(jnp.int32)

@@ -81,10 +81,38 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
     payloads along the k axis (k_out = (max_deg+1)·k) instead of the
     seed's densify→average→resparsify detour through (n, P, S, V).
     ``active`` masks churned-out nodes from the exchange. With ``mesh``
-    (the shard driver's node mesh) the round runs through
-    ``labeling.shard_label_round``: score/select shard-local, the
-    exchange ppermutes only top-k payloads across the node axis.
+    (the shard driver's node mesh) the round runs sharded: score/select
+    shard-local, the exchange ppermutes only top-k payloads across the
+    node axis.
+
+    With ``idkd_cfg.stream_labels`` (the default) the round is
+    *streaming* (DESIGN.md §8): the public corpus goes through
+    ``labeling.streaming_label_round`` / ``shard_streaming_label_round``
+    in ``stream_microbatch``-sized chunks of the fused head-select pass,
+    so the (n, P, S, V) public logit stack — the dominant HBM cost of a
+    round at LLM vocab — never materializes. ``stream_labels=False``
+    keeps the one-shot oracle path.
     """
+    pub = jnp.asarray(public_tokens)
+    priv = jnp.asarray(private_tokens)                      # (n, Vp, S)
+    # multi-codebook heads (MusicGen) have no single (d, V) unembedding
+    # for head_select to tile — they keep the one-shot path
+    streamable = getattr(model.cfg, "num_codebooks", 0) <= 1
+    if idkd_cfg.stream_labels and streamable \
+            and backend in ("fused", "sparse"):
+        if mesh is not None:
+            if active is not None:
+                raise ValueError("sharded label rounds have no churn "
+                                 "path; run churn schedules node-stacked")
+            out = labeling.shard_streaming_label_round(
+                model, params_stacked, pub, priv, topology, idkd_cfg,
+                mesh=mesh)
+        else:
+            out = labeling.streaming_label_round(
+                model, params_stacked, pub, priv, topology, idkd_cfg,
+                active=active)
+        return out.labels, out.weights, out.id_masks, out.thresholds
+
     n = params_stacked and jax.tree.leaves(params_stacked)[0].shape[0]
 
     @jax.jit
@@ -92,10 +120,8 @@ def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
         return jax.vmap(lambda pp, tt: model.forward(pp, {"tokens": tt})[0]
                         )(p, toks)
 
-    pub = jnp.broadcast_to(jnp.asarray(public_tokens)[None],
-                           (n,) + public_tokens.shape)
-    logits_pub = node_logits(params_stacked, pub)          # (n, P, S, V)
-    priv = jnp.asarray(private_tokens)                      # (n, Vp, S)
+    pub_b = jnp.broadcast_to(pub[None], (n,) + pub.shape)
+    logits_pub = node_logits(params_stacked, pub_b)        # (n, P, S, V)
     logits_priv = node_logits(params_stacked, priv)
     # val = the node's private corpus (ID); cal=None = the public corpus
     if mesh is not None:

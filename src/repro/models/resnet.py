@@ -58,6 +58,8 @@ def _conv_im2col(x, w, stride=1):
 class ResNetModel:
     """Same interface surface as DecoderModel (init / forward / loss)."""
 
+    input_key = "images"
+
     def __init__(self, cfg: ModelConfig):
         assert cfg.arch_type == "cnn"
         if cfg.conv_backend not in ("lax", "im2col"):
@@ -94,16 +96,15 @@ class ResNetModel:
         p["fc_b"] = jnp.zeros((cfg.num_classes,), jnp.float32)
         return p
 
-    def forward(self, params, batch):
-        """batch['images']: (B, H, W, C) float32 -> (logits, aux=0)."""
+    def forward_features(self, params, batch):
+        """batch['images']: (B, H, W, C) float32 -> (feats (B, F), aux=0)
+        — the pooled pre-head activations (streaming labeling hook)."""
         cfg = self.cfg
         conv = self._conv
         x = batch["images"]
         x = conv(x, params["stem"])
         x = evonorm_b0(x, params["stem_norm"])
-        cin = cfg.cnn_width
         for si, blocks in enumerate(cfg.cnn_stages):
-            cout = cfg.cnn_width * (2 ** si)
             for bi in range(blocks):
                 stride = 2 if (si > 0 and bi == 0) else 1
                 blk = params[f"s{si}b{bi}"]
@@ -113,10 +114,17 @@ class ResNetModel:
                 h = evonorm_b0(h, blk["norm2"])
                 sc = conv(x, blk["proj"], stride) if "proj" in blk else x
                 x = jax.nn.relu(h + sc)
-                cin = cout
-        x = jnp.mean(x, axis=(1, 2))
-        logits = x @ params["fc_w"] + params["fc_b"]
-        return logits, jnp.zeros((), jnp.float32)
+        return jnp.mean(x, axis=(1, 2)), jnp.zeros((), jnp.float32)
+
+    def head_params(self, params):
+        """(weight (F, C), bias (C,)) of the classifier head."""
+        return params["fc_w"], params["fc_b"]
+
+    def forward(self, params, batch):
+        """batch['images']: (B, H, W, C) float32 -> (logits, aux=0)."""
+        x, aux = self.forward_features(params, batch)
+        w, b = self.head_params(params)
+        return x @ w + b, aux
 
     def loss(self, params, batch):
         logits, aux = self.forward(params, batch)

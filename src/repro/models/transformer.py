@@ -171,6 +171,8 @@ class Segment(NamedTuple):
 class DecoderModel:
     """Functional model wrapper; all methods are jit-compatible."""
 
+    input_key = "tokens"
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
         if cfg.moe.enabled and cfg.moe.first_k_dense:
@@ -314,6 +316,25 @@ class DecoderModel:
         if n_prefix:
             h = h[:, n_prefix:]
         return h, aux
+
+    def forward_features(self, params, batch: Dict[str, Any]):
+        """Pre-head activations (B, S, d) — alias of :meth:`hidden`, the
+        streaming-labeling hook shared with ResNetModel."""
+        return self.hidden(params, batch)
+
+    def head_params(self, params):
+        """(unembedding (d, V), bias=None) — the matrix the streaming
+        head-select kernel tiles over the vocab axis. Multi-codebook
+        heads (MusicGen) emit (B, S, K, V) logits that the labeling
+        engine does not model; they keep the one-shot path."""
+        cfg = self.cfg
+        if cfg.num_codebooks > 1:
+            raise ValueError("streaming head-select supports a single "
+                             "unembedding head; num_codebooks > 1 uses "
+                             "the one-shot labeling path")
+        if cfg.tie_embeddings:
+            return params["embed"].T, None
+        return params["head"], None
 
     def forward(self, params, batch: Dict[str, Any]):
         """Returns (logits, aux). batch['tokens']: (B,S[,K]) int32."""

@@ -1,0 +1,347 @@
+"""Streaming label rounds (DESIGN.md §8): head_select kernel parity,
+streaming == one-shot equivalence, the no-dense-stack jaxpr audit, and
+end-to-end trajectory equality of the streaming vs one-shot rounds.
+
+* ``head_select`` (vocab-tiled fused select from hidden states) must
+  match its jnp oracle in interpret mode — fixed shapes plus a
+  hypothesis sweep over scales/temperatures/k, same style as
+  ``tests/test_kernels_msp.py``.
+* ``streaming_label_round`` must reproduce the one-shot fused backend
+  of ``label_round`` to float tolerance — classifier (n, P, C) and LM
+  (n, P, S, V) stacks, ring + complete graphs, including a public-set
+  size that is *not* a multiple of the microbatch (ragged tail).
+* The jaxpr of the streaming round must contain **no** intermediate
+  shaped like the public logit stack — the audit walks every sub-jaxpr
+  (scan bodies included) and is validated against the one-shot path,
+  where the forbidden shape *is* present.
+* Fixed-seed end-to-end trajectories (simulator and LM launch,
+  node-stacked and shard drivers) with streaming rounds must match the
+  ``stream_labels=False`` one-shot rounds to float tolerance.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # optional dev dep: shim keeps collection
+    from hypothesis_shim import given, settings, st
+
+from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
+from repro.core import labeling
+from repro.core.topology import Topology
+from repro.kernels.head_select import head_select, head_select_ref
+from repro.models import build_model
+
+N = 4
+
+
+# ------------------------------------------------------ head_select kernel
+def _check_head(h, w, b, T, k, det="msp", block_rows=4, block_c=64):
+    conf, vals, idx = head_select(h, w, b, temperature=T, k=k,
+                                  block_rows=block_rows, block_c=block_c,
+                                  interpret=True, detector=det)
+    cr, vr, ir = head_select_ref(h, w, b, temperature=T, k=k, detector=det)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(cr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vr), atol=1e-5)
+    assert (np.asarray(idx) == np.asarray(ir)).all()
+
+
+@pytest.mark.parametrize("rows,D,C,k,bc", [(16, 32, 200, 4, 64),
+                                           (8, 16, 50, 8, 16),
+                                           (24, 64, 1024, 8, 256)])
+@pytest.mark.parametrize("T", [1.0, 10.0])
+def test_head_select_matches_ref(rows, D, C, k, bc, T):
+    """Vocab-tiled kernel == oracle, including ragged C (200 % 64 != 0)."""
+    rng = np.random.default_rng(rows + C)
+    h = jnp.asarray(rng.normal(size=(rows, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(D, C)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(C,)), jnp.float32)
+    _check_head(h, w, b, T, k, block_c=bc)
+
+
+@pytest.mark.parametrize("det", ["msp", "energy"])
+def test_head_select_detector_matches_ref(det):
+    """Both OoD detectors fall out of the one online-softmax carry."""
+    rng = np.random.default_rng(3)
+    h = jnp.asarray(rng.normal(size=(8, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 96)) * 0.5, jnp.float32)
+    _check_head(h, w, None, 5.0, 4, det=det, block_c=32)
+
+
+def test_head_select_single_vocab_block():
+    """block_c >= C degenerates to the unblocked msp_select dataflow."""
+    rng = np.random.default_rng(9)
+    h = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 40)), jnp.float32)
+    _check_head(h, w, None, 10.0, 4, block_c=512)
+
+
+@given(scale=st.floats(0.1, 4.0), T=st.floats(0.5, 20.0),
+       k=st.integers(1, 8))
+@settings(max_examples=15, deadline=None)
+def test_head_select_property(scale, T, k):
+    """Hypothesis sweep over scales/temperatures/k: kernel == oracle and
+    payloads are sorted, renormalized convex weights."""
+    rng = np.random.default_rng(int(scale * 100) + k)
+    h = jnp.asarray(rng.normal(size=(8, 16)) * scale, jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 72)), jnp.float32)
+    conf, vals, idx = head_select(h, w, temperature=T, k=k, block_rows=4,
+                                  block_c=32, interpret=True)
+    cr, vr, ir = head_select_ref(h, w, temperature=T, k=k)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(cr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vr), atol=1e-5)
+    v = np.asarray(vals)
+    assert (np.diff(v, axis=-1) <= 1e-6).all()
+    np.testing.assert_allclose(v.sum(-1), 1.0, atol=1e-4)
+
+
+# ------------------------------------------------- fixtures (tiny models)
+@pytest.fixture(scope="module")
+def cls_setup():
+    rng = np.random.default_rng(0)
+    mcfg = ModelConfig(arch_type="cnn", cnn_stages=(1,), cnn_width=8,
+                       image_size=8, num_classes=10)
+    model = build_model(mcfg)
+    params = jax.vmap(model.init)(
+        jax.random.split(jax.random.PRNGKey(0), N))
+    P = 52                                 # not a multiple of microbatch 8
+    pub = jnp.asarray(rng.normal(size=(P, 8, 8, 3)), jnp.float32)
+    val = jnp.asarray(rng.normal(size=(N, 6, 8, 8, 3)), jnp.float32)
+    return model, params, pub, val
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    rng = np.random.default_rng(1)
+    mcfg = ModelConfig(arch_type="dense", num_layers=1, d_model=32,
+                       num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                       dtype="float32", remat=False)
+    model = build_model(mcfg)
+    params = jax.vmap(model.init)(
+        jax.random.split(jax.random.PRNGKey(1), N))
+    pub = jnp.asarray(rng.integers(0, 64, size=(21, 6)), jnp.int32)
+    val = jnp.asarray(rng.integers(0, 64, size=(N, 4, 6)), jnp.int32)
+    return model, params, pub, val
+
+
+def _one_shot(model, params, pub, val, topo, cfg, key=None):
+    """The one-shot fused reference: full logit stacks into label_round."""
+    fwd = jax.vmap(lambda p, x: model.forward(
+        p, {model.input_key: x})[0])
+    n = jax.tree.leaves(params)[0].shape[0]
+    pub_b = jnp.broadcast_to(pub[None], (n,) + pub.shape)
+    return labeling.label_round(fwd(params, pub_b), fwd(params, val),
+                                None, topo, cfg, backend="fused")
+
+
+def _assert_rounds_match(out, ref, C):
+    assert isinstance(out, labeling.SparseHomogenizedSet)
+    np.testing.assert_allclose(np.asarray(out.thresholds),
+                               np.asarray(ref.thresholds), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(out.id_masks),
+                                  np.asarray(ref.id_masks))
+    np.testing.assert_array_equal(np.asarray(out.weights),
+                                  np.asarray(ref.weights))
+    np.testing.assert_allclose(np.asarray(out.densify(C)),
+                               np.asarray(ref.densify(C)), atol=1e-5)
+
+
+# ------------------------------------------- streaming == one-shot rounds
+@pytest.mark.parametrize("topo_kind", ["ring", "full"])
+@pytest.mark.parametrize("mb", [8, 52, 64])
+def test_streaming_matches_one_shot_classifier(cls_setup, topo_kind, mb):
+    """(n, P, C) stacks: P=52 is ragged at mb=8 (6 full chunks + tail 4),
+    exact at mb=52, single-chunk at mb=64 > P."""
+    model, params, pub, val = cls_setup
+    topo = Topology.make(topo_kind, N)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=mb)
+    ref = _one_shot(model, params, pub, val, topo, cfg)
+    out = labeling.streaming_label_round(model, params, pub, val, topo, cfg)
+    _assert_rounds_match(out, ref, 10)
+
+
+@pytest.mark.parametrize("topo_kind", ["ring", "full"])
+def test_streaming_matches_one_shot_lm(lm_setup, topo_kind):
+    """(n, P, S, V) stacks: per-token payloads, sequence confidence =
+    mean over S; P=21 is ragged at mb=8."""
+    model, params, pub, val = lm_setup
+    topo = Topology.make(topo_kind, N)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=8)
+    ref = _one_shot(model, params, pub, val, topo, cfg)
+    out = labeling.streaming_label_round(model, params, pub, val, topo, cfg)
+    assert out.labels.values.shape[:3] == (N, 21, 6)
+    _assert_rounds_match(out, ref, 64)
+
+
+def test_streaming_detectors_and_vanilla(cls_setup):
+    """Energy detector and the filter_ood=False baseline stream too."""
+    model, params, pub, val = cls_setup
+    topo = Topology.make("ring", N)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=8, detector="energy")
+    ref = _one_shot(model, params, pub, val, topo,
+                    IDKDConfig(label_topk=4, detector="energy"))
+    out = labeling.streaming_label_round(model, params, pub, val, topo, cfg)
+    _assert_rounds_match(out, ref, 10)
+    out = labeling.streaming_label_round(model, params, pub, val, topo, cfg,
+                                         filter_ood=False)
+    assert np.asarray(out.id_masks).all()
+    assert (np.asarray(out.thresholds) == 0.0).all()
+
+
+def test_streaming_active_mask(cls_setup):
+    """Churn: a down node contributes and receives nothing."""
+    model, params, pub, val = cls_setup
+    topo = Topology.make("ring", N)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=16)
+    active = np.array([True, False, True, True])
+    out = labeling.streaming_label_round(model, params, pub, val, topo, cfg,
+                                         active=active)
+    assert not np.asarray(out.id_masks)[1].any()
+    assert (np.asarray(out.weights)[1] == 0).all()
+
+
+def test_shard_streaming_matches_stacked(cls_setup):
+    """The shard twin (scan inside shard_map, top-k-only exchange) equals
+    the node-stacked streaming round on any device count."""
+    from repro.launch.mesh import make_node_mesh
+    model, params, pub, val = cls_setup
+    mesh = make_node_mesh(N)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=8)
+    for topo_kind in ("ring", "full"):
+        topo = Topology.make(topo_kind, N)
+        ref = labeling.streaming_label_round(model, params, pub, val, topo,
+                                             cfg)
+        out = labeling.shard_streaming_label_round(
+            model, params, pub, val, topo, cfg, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(out.id_masks),
+                                      np.asarray(ref.id_masks))
+        np.testing.assert_allclose(np.asarray(out.thresholds),
+                                   np.asarray(ref.thresholds), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(out.weights),
+                                      np.asarray(ref.weights))
+        np.testing.assert_allclose(np.asarray(out.densify(10)),
+                                   np.asarray(ref.densify(10)), atol=1e-5)
+
+
+# --------------------------------------------------------- jaxpr audit
+def _iter_avals(jaxpr):
+    """Every intermediate aval in a jaxpr, sub-jaxprs (scan bodies,
+    branches, pjit calls) included."""
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval"):
+                yield v.aval
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", None)
+                if isinstance(sub, jax.core.Jaxpr):
+                    yield from _iter_avals(sub)
+                elif inner is not None and isinstance(inner,
+                                                      jax.core.Jaxpr):
+                    yield from _iter_avals(inner)
+
+
+def _dense_stack_avals(jaxpr, P, C):
+    """Intermediates that hold a public logit stack: last dim C with the
+    full public axis P also present (e.g. (n, P, C) or (n, P, S, C))."""
+    return [a.shape for a in _iter_avals(jaxpr)
+            if getattr(a, "shape", ()) and a.shape[-1] == C
+            and P in a.shape[:-1]]
+
+
+def test_streaming_jaxpr_has_no_dense_stack(cls_setup, lm_setup):
+    """The shape audit: no (n, P, C)- or (n, P, S, V)-shaped intermediate
+    anywhere in the streaming round's jaxpr — validated against the
+    one-shot round, where the stack IS present."""
+    topo = Topology.make("ring", N)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=8)
+    for setup, C in ((cls_setup, 10), (lm_setup, 64)):
+        model, params, pub, val = setup
+        P = pub.shape[0]
+        stream_jaxpr = jax.make_jaxpr(
+            lambda pr, pb, vl: labeling.streaming_label_round(
+                model, pr, pb, vl, topo, cfg))(params, pub, val)
+        assert not _dense_stack_avals(stream_jaxpr.jaxpr, P, C), \
+            _dense_stack_avals(stream_jaxpr.jaxpr, P, C)
+        one_shot_jaxpr = jax.make_jaxpr(
+            lambda pr, pb, vl: _one_shot(model, pr, pb, vl, topo, cfg))(
+                params, pub, val)
+        assert _dense_stack_avals(one_shot_jaxpr.jaxpr, P, C), \
+            "audit is blind: one-shot stack not detected"
+
+
+def test_shard_streaming_jaxpr_has_no_dense_stack(cls_setup):
+    """Same audit through shard_map: the scan inside the shard body
+    keeps every logit intermediate at microbatch width."""
+    from repro.launch.mesh import make_node_mesh
+    model, params, pub, val = cls_setup
+    topo = Topology.make("ring", N)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=8)
+    jx = jax.make_jaxpr(
+        lambda pr, pb, vl: labeling.shard_streaming_label_round(
+            model, pr, pb, vl, topo, cfg, mesh=make_node_mesh(N)))(
+                params, pub, val)
+    assert not _dense_stack_avals(jx.jaxpr, pub.shape[0], 10)
+
+
+# --------------------------------------- end-to-end trajectory equality
+def _sim_result(stream: bool, driver_mode: str):
+    from repro.configs.resnet20_cifar import SMALL_CONFIG
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.data.synthetic import (make_classification_data,
+                                      make_public_data)
+    data = make_classification_data(image_size=8, n_train=256, n_val=64,
+                                    n_test=128, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=96, kind="aligned", seed=1)
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=4, alpha=0.05,
+                       steps=8, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=4, temperature=10.0,
+                                       label_topk=4, label_backend="sparse",
+                                       stream_labels=stream,
+                                       stream_microbatch=40))  # 96 ragged
+    mcfg = SMALL_CONFIG.replace(image_size=8, conv_backend="im2col")
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=3, driver_mode=driver_mode)
+    return sim.run()
+
+
+@pytest.mark.parametrize("driver_mode", ["scan", "shard"])
+def test_sim_trajectory_streaming_equals_one_shot(driver_mode):
+    """Simulator end-to-end on fixed seeds: the streaming round and the
+    one-shot round produce the same training trajectory, node-stacked
+    and sharded."""
+    stream = _sim_result(True, driver_mode)
+    one_shot = _sim_result(False, driver_mode)
+    np.testing.assert_allclose(stream.acc_history, one_shot.acc_history,
+                               atol=1e-5)
+    np.testing.assert_allclose(stream.loss_history, one_shot.loss_history,
+                               atol=1e-4)
+    np.testing.assert_allclose(stream.thresholds, one_shot.thresholds,
+                               atol=1e-5)
+    assert stream.label_bytes_total == one_shot.label_bytes_total
+
+
+def _lm_history(stream: bool, driver_mode: str):
+    from repro.configs import get_config
+    from repro.launch.train import run_training
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    tcfg = TrainConfig(num_nodes=2, steps=6, lr=0.1, alpha=0.1,
+                       batch_size=4,
+                       idkd=IDKDConfig(start_step=3, label_topk=4,
+                                       kd_weight=0.3, stream_labels=stream,
+                                       stream_microbatch=3))  # 8 ragged
+    out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                       use_idkd=True, log_every=2, verbose=False,
+                       driver_mode=driver_mode)
+    return out["loss_history"]
+
+
+@pytest.mark.parametrize("driver_mode", ["scan", "shard"])
+def test_lm_trajectory_streaming_equals_one_shot(driver_mode):
+    """LM launch end-to-end on fixed seeds, node-stacked and sharded."""
+    np.testing.assert_allclose(_lm_history(True, driver_mode),
+                               _lm_history(False, driver_mode),
+                               rtol=1e-4, atol=1e-5)
