@@ -28,6 +28,12 @@ regression guard:
   i.e. the apples-to-apples node-stacked comparator for the shard ratio.
   The LM cells need no twin: their scan/shard configs are identical.
 
+Plus the compressed / compute-overlapped gossip cells (DESIGN.md §9):
+the plain LM workload under the stateful mixers — compression ∈ {none,
+top-k 1%, top-k 10%} × gossip ∈ {sync, delayed} on the scan runner, each
+labeled with its ``bytes_per_step`` ledger wire total, and a top-k 1%
+sync/delayed pair on the sharded driver (ppermute payload wires).
+
 Medians over interleaved rounds (this keeps CPU-frequency / noisy-
 neighbour drift out of the ratios). Writes ``BENCH_driver.json``.
 
@@ -292,6 +298,68 @@ def _lm_cell(kd: bool):
     return _median_rates({"preref": preref, "host": host, "scan": scan})
 
 
+def _lm_comp_cell():
+    """Compressed / compute-overlapped gossip cells (DESIGN.md §9): the
+    plain LM workload under the stateful mixers, compression ∈ {none,
+    top-k 1%, top-k 10%} × gossip ∈ {sync, delayed}, all on the scan
+    runner. Each cell also records ``bytes_per_step`` — the ledger's
+    per-step wire total for the whole ring — so the regression guard
+    watches the wire alongside the clock (a top-k cell whose bytes creep
+    back toward dense means the sparsifier broke, whatever the µs say)."""
+    from repro import sched
+    from repro.core.mixing import normalize_compression, payload_elem_count
+
+    n, B, S = NODES, 8, 32
+    cfg = get_config("qwen3-1.7b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    model = build_model(cfg)
+    topo = Topology.make("ring", n)
+    algo = make_algorithm("qg-dsgdm-n", momentum=0.9, weight_decay=1e-4)
+    tokens, topics = make_lm_data(cfg.vocab_size, S + 1, 512, seed=4)
+    parts = dirichlet_partition(topics, n, 0.1, np.random.default_rng(4))
+    params = stack_params(model.init(jax.random.PRNGKey(0)), n)
+    sampler = driver.make_lm_sampler(driver.pad_partitions(parts), tokens, B)
+    lr_fn = lambda s: jnp.asarray(0.1, jnp.float32)       # noqa: E731
+    nparams = sum(x.size for x in jax.tree.leaves(params)) // n
+    k = jax.random.PRNGKey(0)
+    s0 = jnp.asarray(0, jnp.int32)
+
+    variants = [("none", "sync"), ("none", "delayed"),
+                ("topk:0.01", "sync"), ("topk:0.01", "delayed"),
+                ("topk:0.1", "sync")]
+    drivers, wire = {}, {}
+    for comp_name, gossip in variants:
+        comp = normalize_compression(None if comp_name == "none"
+                                     else comp_name)
+        if comp_name == "none" and gossip == "sync":
+            mixer = make_mixer(topo)                      # dense baseline
+            step_fn = driver.make_step(model, algo, mixer, driver.lm_adapter)
+        else:
+            mixer = make_mixer(topo, compression=comp, gossip=gossip,
+                               stateful=True)
+            step_fn = driver.make_step(model, algo, mixer, driver.lm_adapter)
+        runr = driver.make_runner(step_fn, sampler, lr_fn, "scan")
+        opt = step_fn.init_opt(params)
+        key = f"{comp_name}|{gossip}"
+        if getattr(runr, "comm", False):
+            comm = step_fn.init_comm(params)
+
+            def bench(runr=runr, opt=opt, comm=comm):
+                jax.block_until_ready(
+                    runr(params, opt, k, s0, CHUNK, None, comm)[0])
+        else:
+            def bench(runr=runr, opt=opt):
+                jax.block_until_ready(runr(params, opt, k, s0, CHUNK)[0])
+        drivers[key] = bench
+        payload = (payload_elem_count(params, comp) if comp is not None
+                   else None)
+        wire[key] = float(sched.ledger.gossip_bytes_per_step(
+            topo, None, nparams, 4, payload_elems=payload,
+            index_bytes=4 if comp is not None else 0).sum())
+    return _median_rates(drivers), wire
+
+
 def _lm_shard_cell(kd: bool):
     """Sharded LM cells: the LM scan/shard configs are identical (no
     convs, KD already sparse), so shard is interleaved directly against
@@ -350,6 +418,64 @@ def _lm_shard_cell(kd: bool):
     return rates, int(mesh.shape["node"])
 
 
+def _lm_shard_comp_cell():
+    """Sharded compressed-gossip cells: ``make_shard_step`` with the
+    ppermute compressed mixer (top-k 1%, sync and delayed) against the
+    node-stacked scan twin on the same spec — the wire actually crossing
+    device boundaries is the (values, indices) payload. Labeled with the
+    device count like the other shard cells."""
+    from repro.launch.mesh import make_node_mesh
+    from repro.launch.sharding import node_stacked_shardings
+
+    n, B, S = NODES, 8, 32
+    cfg = get_config("qwen3-1.7b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    model = build_model(cfg)
+    topo = Topology.make("ring", n)
+    mesh = make_node_mesh(n)
+    algo = make_algorithm("qg-dsgdm-n", momentum=0.9, weight_decay=1e-4)
+    tokens, topics = make_lm_data(cfg.vocab_size, S + 1, 512, seed=4)
+    parts = dirichlet_partition(topics, n, 0.1, np.random.default_rng(4))
+    params = stack_params(model.init(jax.random.PRNGKey(0)), n)
+    sampler = driver.make_lm_sampler(driver.pad_partitions(parts), tokens, B)
+    lr_fn = lambda s: jnp.asarray(0.1, jnp.float32)       # noqa: E731
+    k = jax.random.PRNGKey(0)
+    s0 = jnp.asarray(0, jnp.int32)
+    comp = ("topk", 0.01)
+    params_sh = jax.device_put(params,
+                               node_stacked_shardings(params, mesh, n))
+
+    drivers = {}
+    for gossip in ("sync", "delayed"):
+        stacked_step = driver.make_step(
+            model, algo, make_mixer(topo, compression=comp, gossip=gossip,
+                                    stateful=True), driver.lm_adapter)
+        shard_step = driver.make_shard_step(model, algo, driver.lm_adapter,
+                                            mesh=mesh, topology=topo,
+                                            compression=comp, gossip=gossip)
+        scanr = driver.make_runner(stacked_step, sampler, lr_fn, "scan")
+        shardr = driver.make_runner(shard_step, sampler, lr_fn, "shard")
+        opt = stacked_step.init_opt(params)
+        comm = stacked_step.init_comm(params)
+        opt_sh = jax.device_put(opt, node_stacked_shardings(opt, mesh, n))
+        comm0 = shard_step.init_comm(params)
+        comm_sh = jax.device_put(comm0,
+                                 node_stacked_shardings(comm0, mesh, n))
+
+        def scan(scanr=scanr, opt=opt, comm=comm):
+            jax.block_until_ready(
+                scanr(params, opt, k, s0, CHUNK, None, comm)[0])
+
+        def shard(shardr=shardr, opt_sh=opt_sh, comm_sh=comm_sh):
+            jax.block_until_ready(
+                shardr(params_sh, opt_sh, k, s0, CHUNK, None, comm_sh)[0])
+
+        drivers[f"scan|{gossip}"] = scan
+        drivers[f"shard|{gossip}"] = shard
+    return _median_rates(drivers), int(mesh.shape["node"])
+
+
 def run(out_path: str | None = "BENCH_driver.json"):
     csv, cells = [], []
     for path, cell_fn in (("sim", _sim_cell), ("lm", _lm_cell)):
@@ -364,6 +490,22 @@ def run(out_path: str | None = "BENCH_driver.json"):
                               "steps_per_sec": round(1e6 / us, 2)})
             csv.append((f"driver/{phase}_speedup", 0.0,
                         f"{rates['preref'] / rates['scan']:.2f}x"))
+    # compressed / delayed gossip cells (DESIGN.md §9)
+    comp_rates, comp_wire = _lm_comp_cell()
+    for key, us in comp_rates.items():
+        comp_name, gossip = key.split("|")
+        csv.append((f"driver/lm_gossip[{comp_name},{gossip}]",
+                    round(us, 1),
+                    f"{1e6 / us:.1f} steps/s, "
+                    f"{comp_wire[key] / 1e3:.1f} KB/step"))
+        cells.append({"path": "lm", "mode": "scan",
+                      "compression": comp_name, "gossip": gossip,
+                      "us_per_step": round(us, 1),
+                      "steps_per_sec": round(1e6 / us, 2),
+                      "bytes_per_step": round(comp_wire[key], 1)})
+    dense_key, topk_key = "none|sync", "topk:0.01|sync"
+    csv.append(("driver/lm_gossip_wire_reduction", 0.0,
+                f"{comp_wire[dense_key] / comp_wire[topk_key]:.1f}x"))
     # sharded driver cells (labeled with the node-mesh device count, so
     # baselines from different mesh sizes are guard-skipped, not compared)
     for path, cell_fn in (("sim", _sim_shard_cell), ("lm", _lm_shard_cell)):
@@ -381,6 +523,17 @@ def run(out_path: str | None = "BENCH_driver.json"):
             csv.append((f"driver/{phase}_shard_vs_stacked@{devices}dev",
                         0.0,
                         f"{rates[stacked_mode] / rates['shard']:.2f}x"))
+    # sharded compressed-gossip cells (top-k 1%, sync + delayed)
+    shc_rates, devices = _lm_shard_comp_cell()
+    for key, us in shc_rates.items():
+        mode, gossip = key.split("|")
+        csv.append((f"driver/lm_gossip_{mode}[topk:0.01,{gossip}]"
+                    f"@{devices}dev", round(us, 1),
+                    f"{1e6 / us:.1f} steps/s"))
+        cells.append({"path": "lm", "mode": mode, "devices": devices,
+                      "compression": "topk:0.01", "gossip": gossip,
+                      "us_per_step": round(us, 1),
+                      "steps_per_sec": round(1e6 / us, 2)})
     if out_path:
         with open(out_path, "w") as f:
             json.dump({"meta": {

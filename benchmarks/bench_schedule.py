@@ -1,10 +1,13 @@
 """Federation scheduler benchmark: round count × scenario grid.
 
 Times the scheduler-driven simulator (``repro.sched`` + ``core.driver``)
-end to end for {1, 4, 16}-round schedules × {static ring, churn, rewire}
-scenarios at the bench_driver node scale, and records each run's
-per-round communication ledger (wire-dtype-aware param gossip + label
-payload bytes, per node per round). Writes ``BENCH_schedule.json``.
+end to end for {1, 4, 16}-round schedules × {static ring, churn, rewire,
+compressed} scenarios at the bench_driver node scale, and records each
+run's per-round communication ledger (wire-dtype-aware param gossip +
+label payload bytes, per node per round). The ``compressed`` scenario
+runs top-k 1% delayed gossip with a mid-run straggler (DESIGN.md §9);
+its ``bytes_per_step`` cell lets the regression guard watch the
+sparsified wire. Writes ``BENCH_schedule.json``.
 
 The interesting ratios:
 
@@ -35,7 +38,7 @@ STEPS = 36
 EVAL_EVERY = 18
 START = 2          # first homogenization step
 ROUND_GRID = (1, 4, 16)
-SCENARIOS = ("static_ring", "churn", "rewire")
+SCENARIOS = ("static_ring", "churn", "rewire", "compressed")
 
 
 def _scenario_events(name: str):
@@ -47,30 +50,39 @@ def _scenario_events(name: str):
                 sched.ChurnEvent(step=2 * STEPS // 3, up=(NODES - 1,)))
     if name == "rewire":
         return (sched.RewireEvent(step=STEPS // 2, topology="exponential"),)
+    if name == "compressed":
+        # top-k 1% delayed gossip with a mid-run straggler whose frozen
+        # payload keeps its neighbours mixing (DESIGN.md §9)
+        return (sched.ChurnEvent(step=STEPS // 3, down=(NODES - 1,),
+                                 mode="stale"),
+                sched.ChurnEvent(step=2 * STEPS // 3, up=(NODES - 1,)))
     raise ValueError(name)
 
 
-def _make_sim(rounds: int):
+def _make_sim(rounds: int, scenario: str = ""):
     data = make_classification_data(image_size=8, n_train=1024, n_val=64,
                                     n_test=128, noise=0.8, seed=0)
     pub = make_public_data(data, n_public=256, kind="aligned", seed=1)
     mcfg = SMALL_CONFIG.replace(image_size=8, cnn_stages=(1, 1, 1),
                                 cnn_width=8)
     every_k = sched.fit_every_k(STEPS - 2, START, rounds)
+    comp = (dict(compression="topk", compression_frac=0.01,
+                 gossip="delayed") if scenario == "compressed" else {})
     tcfg = TrainConfig(num_nodes=NODES, steps=STEPS, batch_size=16, seed=4,
                        idkd=IDKDConfig(start_step=START, temperature=10.0,
                                        every_k_steps=every_k,
-                                       num_rounds=rounds))
+                                       num_rounds=rounds), **comp)
     return DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
                                   eval_every=EVAL_EVERY)
 
 
 def _cell(scenario: str, rounds: int):
-    sim = _make_sim(rounds)
+    sim = _make_sim(rounds, scenario)
     schedule = sched.compile_schedule(
         STEPS, EVAL_EVERY,
         round_steps=sim.default_schedule().round_steps,
-        events=_scenario_events(scenario))
+        events=_scenario_events(scenario),
+        gossip=sim.tcfg.gossip)
     r = sim.run(schedule=schedule)          # warm-up: compiles + first run
     t0 = time.time()
     r = sim.run(schedule=schedule)
@@ -83,7 +95,10 @@ def _cell(scenario: str, rounds: int):
         "wall_s": round(wall, 3),
         "final_acc": round(r.final_acc, 4),
         "gossip_bytes": r.ledger["gossip_bytes"],
+        "bytes_per_step": round(r.ledger["gossip_bytes"] / STEPS, 1),
         "label_bytes": r.ledger["label_bytes"],
+        "compression": sim.tcfg.compression,
+        "gossip": sim.tcfg.gossip,
         "per_round": r.ledger["per_round"],
     }
 

@@ -1,9 +1,12 @@
 """Bench regression guard: fresh BENCH_*.json vs the committed baseline.
 
 Extracts every named hot-path metric (``us_per_step`` / ``us_per_call`` /
-``wall_s`` leaves, named by the string fields of their enclosing cell)
-from both documents and fails when any shared metric slowed down by more
-than ``--threshold`` (default 1.5×). Metrics present in only one of
+``wall_s`` / ``bytes_per_step`` leaves, named by the string fields of
+their enclosing cell) from both documents and fails when any shared
+metric slowed down by more than ``--threshold`` (default 1.5×).
+``bytes_per_step`` guards the *wire*, not the clock: a compressed-gossip
+cell (labels ``compression=topk:0.01|gossip=...``) regressing its byte
+count means the sparsifier stopped sparsifying. Metrics present in only one of
 {fresh, committed} are *always* skipped (reported, never failed) —
 benches are allowed to grow cells, and cells keyed by environment labels
 (e.g. the sharded driver's ``devices=8`` rows, measured under a forced
@@ -26,7 +29,8 @@ import re
 import sys
 from typing import Dict
 
-METRIC_KEYS = ("us_per_step", "us_per_call", "us_per_round", "wall_s")
+METRIC_KEYS = ("us_per_step", "us_per_call", "us_per_round", "wall_s",
+               "bytes_per_step")
 
 
 def extract_metrics(doc, metric_keys=METRIC_KEYS) -> Dict[str, float]:

@@ -366,3 +366,16 @@ class TrainConfig:
     lr_decay_factor: float = 0.1
     seed: int = 4                   # paper seeds: 4, 34, 5
     idkd: Optional[IDKDConfig] = None
+
+    # compressed / compute-overlapped gossip (DESIGN.md §9)
+    compression: str = "none"       # none | topk | randk (sparsified wire
+                                    # with per-node error feedback)
+    compression_frac: float = 0.01  # kept fraction of each leaf's elements
+    gossip: str = "sync"            # sync | delayed (one-step-stale mixing)
+
+    @property
+    def compression_spec(self):
+        """The ``mixing.make_mixer``-ready spec: None, or (kind, frac)."""
+        if self.compression in (None, "", "none"):
+            return None
+        return (self.compression, self.compression_frac)

@@ -178,9 +178,30 @@ def make_step(model, algo, mixer, loss_adapter) -> Callable:
     parameterized factory (``dense_kd_adapter(T)`` etc.). Returns
     ``step(params, opt_state, batch, lr) -> (params, opt_state, loss)``
     on node-stacked pytrees, with ``step.init_opt = algo.init``.
+
+    A *stateful* mixer (compressed / delayed / straggler gossip —
+    ``mixing.make_mixer(..., compression=..., gossip=..., stale=...)``)
+    changes the contract: the step carries the mixer's comm pytree
+    (error-feedback residuals + last wire payloads) like the sampler
+    ctx — ``step(params, opt_state, batch, lr, comm) -> (params,
+    opt_state, loss, comm)``, flagged ``step.comm = True``, with
+    ``step.init_comm = mixer.init_state`` building the initial state.
     """
     node_loss = loss_adapter(model)
     grad_fn = jax.vmap(jax.value_and_grad(node_loss))
+
+    if getattr(mixer, "stateful", False):
+        def comm_step(params, opt_state, batch, lr, comm):
+            losses, grads = grad_fn(params, batch)
+            bound = mixer.bind(comm)
+            params, opt_state = algo.step(params, grads, opt_state, lr,
+                                          bound)
+            return params, opt_state, jnp.mean(losses), bound.finalize()
+
+        comm_step.comm = True
+        comm_step.init_comm = mixer.init_state
+        comm_step.init_opt = algo.init
+        return comm_step
 
     def step(params, opt_state, batch, lr):
         losses, grads = grad_fn(params, batch)
@@ -192,7 +213,8 @@ def make_step(model, algo, mixer, loss_adapter) -> Callable:
 
 
 def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
-                    axis: str = NODE_AXIS) -> Callable:
+                    axis: str = NODE_AXIS, compression=None,
+                    gossip: str = "sync") -> Callable:
     """The decentralized train step under ``shard_map`` over the mesh
     node axis — the ``driver_mode="shard"`` twin of :func:`make_step`.
 
@@ -216,6 +238,15 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
     the mesh size, and per-edge-state algorithms (RelaySGD) are
     rejected. Churn / availability masks are unsupported under shard_map
     (DESIGN.md §7) — the scheduler raises before the run starts.
+
+    ``compression`` / ``gossip="delayed"`` select the stateful
+    compressed-wire ppermute backend (``mixing.
+    make_compressed_ppermute_mixer`` — top-k payloads cross device
+    boundaries as value+index pairs). The step then follows
+    :func:`make_step`'s stateful contract (``step.comm``,
+    ``step.init_comm``); the comm pytree shards its node axis like the
+    params (``init_comm`` runs *outside* shard_map on global arrays —
+    device_put its result with ``node_stacked_shardings``).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -238,10 +269,39 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
     # rejects non-ring/non-full topologies eagerly, naming the fallback
     mixer = mixing.make_mixer(topology, backend="ppermute",
                               axis_names=(axis,), axis_sizes=(size,),
-                              local_nodes=n // size)
+                              local_nodes=n // size,
+                              compression=compression, gossip=gossip)
 
     node_loss = loss_adapter(model)
     grad_fn = jax.vmap(jax.value_and_grad(node_loss))
+
+    if getattr(mixer, "stateful", False):
+        def comm_body(params, opt_state, batch, lr, comm):
+            losses, grads = grad_fn(params, batch)
+            bound = mixer.bind(comm)
+            params, opt_state = algo.step(params, grads, opt_state, lr,
+                                          bound)
+            comm = bound.finalize()
+            loss = jax.lax.psum(jnp.sum(losses), axis) / n
+            return params, opt_state, loss, comm
+
+        def comm_step(params, opt_state, batch, lr, comm):
+            sharded = shard_map(
+                comm_body, mesh=mesh,
+                in_specs=(node_stacked_specs(params, n, axis),
+                          node_stacked_specs(opt_state, n, axis),
+                          node_stacked_specs(batch, n, axis), P(),
+                          node_stacked_specs(comm, n, axis)),
+                out_specs=(node_stacked_specs(params, n, axis),
+                           node_stacked_specs(opt_state, n, axis), P(),
+                           node_stacked_specs(comm, n, axis)),
+                check_rep=False)
+            return sharded(params, opt_state, batch, lr, comm)
+
+        comm_step.comm = True
+        comm_step.init_comm = mixer.init_state
+        comm_step.init_opt = algo.init
+        return comm_step
 
     def body(params, opt_state, batch, lr):
         losses, grads = grad_fn(params, batch)
@@ -282,6 +342,21 @@ def make_frozen_step(step_fn, active) -> Callable:
             return jnp.where(act.reshape((n,) + (1,) * (new.ndim - 1)),
                              new, old)
         return new
+
+    if getattr(step_fn, "comm", False):
+        # stateful gossip: the comm pytree passes through untouched —
+        # the compressed mixer's own freshness mask (active & ~stale)
+        # already holds down nodes' residuals and payloads
+        def comm_step(params, opt_state, batch, lr, comm):
+            new_p, new_o, loss, comm = step_fn(params, opt_state, batch,
+                                               lr, comm)
+            return (jax.tree.map(select, new_p, params),
+                    jax.tree.map(select, new_o, opt_state), loss, comm)
+
+        comm_step.comm = True
+        comm_step.init_comm = step_fn.init_comm
+        comm_step.init_opt = step_fn.init_opt
+        return comm_step
 
     def step(params, opt_state, batch, lr):
         new_p, new_o, loss = step_fn(params, opt_state, batch, lr)
@@ -516,7 +591,34 @@ def make_scan_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
     compile per distinct chunk length); ``ctx`` is the round-varying
     sampler state (traced — the scheduler swaps label payloads between
     homogenization rounds without triggering a recompile).
+
+    A comm-carrying step (``step_fn.comm`` — stateful compressed/delayed
+    gossip) extends the contract to ``run(params, opt_state, key, step0,
+    num_steps, ctx=None, comm=None) -> (params, opt_state, key, losses,
+    comm)``: the mixer state rides the scan carry next to params, flagged
+    ``run.comm = True``.
     """
+    if getattr(step_fn, "comm", False):
+        @functools.partial(jax.jit, static_argnums=(4,))
+        def comm_run(params, opt_state, key, step0, num_steps, ctx=None,
+                     comm=None):
+            def body(carry, t):
+                params, opt_state, key, comm = carry
+                key, sub = jax.random.split(key)
+                batch = (sample_fn(sub, step0 + t) if ctx is None
+                         else sample_fn(sub, step0 + t, ctx))
+                params, opt_state, loss, comm = step_fn(
+                    params, opt_state, batch, lr_fn(step0 + t), comm)
+                return (params, opt_state, key, comm), loss
+
+            (params, opt_state, key, comm), losses = jax.lax.scan(
+                body, (params, opt_state, key, comm),
+                jnp.arange(num_steps))
+            return params, opt_state, key, losses, comm
+
+        comm_run.comm = True
+        return comm_run
+
     @functools.partial(jax.jit, static_argnums=(4,))
     def run(params, opt_state, key, step0, num_steps, ctx=None):
         def body(carry, t):
@@ -539,6 +641,31 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
     """Same contract as :func:`make_scan_runner`, but a per-step Python
     loop around one jitted step — the dispatch-overhead baseline. Key
     handling matches the scan body exactly, so trajectories agree."""
+    if getattr(step_fn, "comm", False):
+        @jax.jit
+        def comm_one(params, opt_state, key, t, ctx=None, comm=None):
+            key, sub = jax.random.split(key)
+            batch = (sample_fn(sub, t) if ctx is None
+                     else sample_fn(sub, t, ctx))
+            params, opt_state, loss, comm = step_fn(
+                params, opt_state, batch, lr_fn(t), comm)
+            return params, opt_state, key, loss, comm
+
+        def comm_run(params, opt_state, key, step0, num_steps, ctx=None,
+                     comm=None):
+            losses = []
+            for t in range(num_steps):
+                params, opt_state, key, loss, comm = comm_one(
+                    params, opt_state, key,
+                    jnp.asarray(step0 + t, jnp.int32), ctx, comm)
+                losses.append(loss)
+            return (params, opt_state, key,
+                    jnp.stack(losses) if losses
+                    else jnp.zeros((0,), jnp.float32), comm)
+
+        comm_run.comm = True
+        return comm_run
+
     @jax.jit
     def one(params, opt_state, key, t, ctx=None):
         key, sub = jax.random.split(key)

@@ -36,6 +36,26 @@ All node-stacked backends take ``wire_dtype``: "native" moves parameters
 between nodes in their storage dtype (bf16 params → bf16 gossip traffic,
 §Perf byte-halving) and accumulates the weighted sum in f32; "float32"
 upcasts before the exchange (paper-faithful full-precision mixing).
+**Every backend defaults to "native"** — the wire carries what the nodes
+store unless a caller explicitly asks for the full-precision wire. (The
+dense backend historically defaulted to "float32" while gather/roll
+defaulted to "native"; the defaults are unified, and callers that want
+paper-faithful f32 mixing — e.g. the CPU simulator — pass
+``wire_dtype="float32"`` explicitly.)
+
+**Compressed / stateful gossip** (DESIGN.md §9). ``make_mixer`` also
+takes ``compression`` (top-k / random-k sparsified wires with per-node
+error-feedback residuals), ``gossip`` ("sync" | "delayed" — the mixer
+consumes the *previous* step's payload so the exchange overlaps the next
+step's compute), and ``stale`` (an (n,) straggler mask: stale nodes keep
+training and receiving but their *outgoing* payload is frozen at the
+last one they produced). Any of these makes the mixer *stateful*: it
+carries a comm pytree (error residuals + last payload) across steps.
+Stateful mixers are not called directly — ``mix.init_state(params)``
+builds the comm pytree and ``mix.bind(comm)`` returns a single-use bound
+mixer with the ordinary ``mix(tree)`` / ``mix.mix_leaf`` protocol whose
+``finalize()`` yields the updated comm state (``core.driver.make_step``
+threads it through the scan carry like the sampler ctx).
 
 **Per-leaf mixer protocol.** Every mixer is leafwise: ``mix(tree)`` is
 ``jax.tree.map(mix.mix_leaf, tree)``, and the factories expose the
@@ -70,7 +90,7 @@ Mixer = Callable[[PyTree], PyTree]
 # ---------------------------------------------------------------------------
 
 
-def make_dense_mixer(W: np.ndarray, wire_dtype: str = "float32") -> Mixer:
+def make_dense_mixer(W: np.ndarray, wire_dtype: str = "native") -> Mixer:
     Wj = jnp.asarray(W, jnp.float32)
 
     def mix_leaf(x):
@@ -169,6 +189,8 @@ def make_roll_mixer(num_nodes: int, wire_dtype: str = "native") -> Mixer:
 
 def make_mixer(topology: Topology, backend: str = "auto",
                wire_dtype: str = "native", active=None,
+               compression=None, gossip: str = "sync", stale=None,
+               stateful: bool = None, consensus_lr: float = 1.0,
                **ppermute_kw) -> Mixer:
     """One entry point for every gossip backend (see module docstring).
 
@@ -193,16 +215,81 @@ def make_mixer(topology: Topology, backend: str = "auto",
     ring, so ``auto`` routes masked rings to the gather backend and the
     roll/ppermute fast paths reject masks. The node-stacked backends
     (dense / gather / roll / auto) return a mixer carrying a
-    ``remake(active=...)`` handle that rebuilds the same
-    backend/wire-dtype mixer for a new availability mask — the scheduler
-    path as nodes leave and rejoin. The ppermute backend has no masked
-    path and no remake handle (shard_map gossip under churn is an open
-    item).
+    ``remake(active=..., stale=...)`` handle that rebuilds the same
+    backend/wire-dtype/compression mixer for a new availability /
+    straggler mask — the scheduler path as nodes leave and rejoin. The
+    ppermute backend has no masked path and no remake handle (shard_map
+    gossip under churn is an open item).
+
+    ``compression`` / ``gossip`` / ``stale`` select the stateful
+    compressed-wire path (module docstring, DESIGN.md §9); any non-default
+    value returns a stateful mixer (``mix.stateful``, ``mix.init_state``,
+    ``mix.bind``) instead of a directly callable one. ``stateful=True``
+    forces the stateful protocol even for plain sync uncompressed gossip —
+    the scheduler uses it so the comm pytree's structure stays constant
+    across a schedule whose *later* segments mark nodes stale.
     """
     requested = backend
+    if gossip not in GOSSIP_MODES:
+        raise ValueError(f"unknown gossip mode {gossip!r}; expected one "
+                         f"of {GOSSIP_MODES}")
+    comp = normalize_compression(compression)
+    stale_any = stale is not None and bool(np.any(np.asarray(stale, bool)))
+    want_state = (stateful if stateful is not None
+                  else (comp is not None or gossip == "delayed"
+                        or stale_any))
     masked = active is not None and not np.all(np.asarray(active, bool))
     if not masked:
         active = None
+    if want_state:
+        if backend == "ppermute":
+            if masked:
+                raise ValueError(
+                    "ppermute mixer has no masked path (churn under "
+                    "shard_map is unsupported — DESIGN.md §7); run churn "
+                    "schedules node-stacked with backend='gather' (or "
+                    "'dense')")
+            if stale_any:
+                raise ValueError(
+                    "straggler (stale) masks are unsupported under "
+                    "shard_map — run straggler schedules node-stacked "
+                    "with backend='gather' (or 'dense')")
+            if wire_dtype != "native":
+                raise ValueError(
+                    "ppermute mixer moves shards in their storage dtype; "
+                    f"wire_dtype={wire_dtype!r} unsupported — use "
+                    "backend='gather' for an f32 wire")
+            full = _is_full(topology) and not _is_ring(topology)
+            if not full and not _is_ring(topology):
+                raise ValueError(
+                    "compressed/delayed ppermute gossip runs on ring or "
+                    f"complete graphs only; topology {topology.name!r} "
+                    "must run node-stacked — use backend='gather' (or "
+                    "'dense')")
+            kw = dict(ppermute_kw)
+            axis_names = kw.pop("axis_names")
+            axis_sizes = kw.pop("axis_sizes")
+            local_nodes = kw.pop("local_nodes", 1)
+            if kw.pop("self_weight", None) is not None:
+                raise ValueError("self_weight applies to the hierarchical "
+                                 "multi-axis mixer only")
+            if kw:
+                raise ValueError(f"unknown ppermute mixer options "
+                                 f"{sorted(kw)}")
+            return make_compressed_ppermute_mixer(
+                axis_names, axis_sizes, local_nodes=local_nodes,
+                num_nodes=topology.n, full_graph=full,
+                compression=comp, gossip=gossip,
+                consensus_lr=consensus_lr)
+        mix = make_compressed_mixer(
+            topology, backend, wire_dtype, active=active,
+            stale=(stale if stale_any else None),
+            compression=comp, gossip=gossip, consensus_lr=consensus_lr)
+        mix.remake = lambda active=None, stale=None: make_mixer(
+            topology, requested, wire_dtype, active=active,
+            compression=comp, gossip=gossip, stale=stale, stateful=True,
+            consensus_lr=consensus_lr)
+        return mix
     if backend == "auto":
         backend = "roll" if _is_ring(topology) and not masked else "gather"
     mix: Mixer
@@ -254,8 +341,8 @@ def make_mixer(topology: Topology, backend: str = "auto",
     else:
         raise ValueError(f"unknown mixer backend {backend!r}; expected one "
                          "of ('auto', 'dense', 'gather', 'roll', 'ppermute')")
-    mix.remake = lambda active=None: make_mixer(topology, requested,
-                                                wire_dtype, active=active)
+    mix.remake = lambda active=None, stale=None: make_mixer(
+        topology, requested, wire_dtype, active=active, stale=stale)
     return mix
 
 
@@ -399,6 +486,470 @@ def make_psum_mixer(axis_name: str, num_nodes: int) -> Mixer:
 
     mix.mix_leaf = mix_leaf
     mix.axis_name = axis_name
+    return mix
+
+
+# ---------------------------------------------------------------------------
+# compressed / stateful gossip (error feedback + delayed mixing, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+COMPRESSION_KINDS = ("none", "topk", "randk")
+GOSSIP_MODES = ("sync", "delayed")
+
+
+def normalize_compression(spec):
+    """Canonicalize a compression spec to ``None`` or ``(kind, frac)``.
+
+    Accepts ``None`` / ``"none"``, a ``"topk:0.01"`` / ``"randk:0.1"``
+    string (bare ``"topk"`` means 1%), or a ``(kind, frac)`` pair.
+    ``frac`` is the kept fraction of each leaf's per-node elements,
+    validated to (0, 1]."""
+    if spec is None or spec == "none" or spec == ("none",):
+        return None
+    if isinstance(spec, str):
+        kind, _, frac_s = spec.partition(":")
+        frac = float(frac_s) if frac_s else 0.01
+    else:
+        kind, frac = spec
+        if kind == "none":
+            return None
+        frac = float(frac)
+    if kind not in ("topk", "randk"):
+        raise ValueError(f"unknown compression kind {kind!r}; expected one "
+                         f"of {COMPRESSION_KINDS}")
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(f"compression fraction must be in (0, 1], "
+                         f"got {frac}")
+    return (kind, frac)
+
+
+def payload_k(size: int, frac: float) -> int:
+    """Elements a (topk|randk, frac) payload keeps per node for one leaf
+    of ``size`` per-node elements (at least 1, at most all)."""
+    return max(1, min(int(size), int(round(frac * int(size)))))
+
+
+def payload_elem_count(tree, compression, node_stacked: bool = True) -> int:
+    """Per-node element count one gossip send carries under
+    ``compression`` — the ledger's replacement for the raw param count.
+    ``node_stacked`` leaves have a leading node axis (counted per node).
+    ``None`` compression returns the full per-node parameter count."""
+    comp = normalize_compression(compression)
+    leaves = jax.tree.leaves(tree)
+
+    def per_node(x):
+        return int(np.prod(x.shape[1:])) if node_stacked else int(x.size)
+
+    if comp is None:
+        return sum(per_node(x) for x in leaves)
+    _, frac = comp
+    return sum(payload_k(per_node(x), frac) for x in leaves)
+
+
+def _select_payload(uf, kind: str, k: int, keys=None):
+    """(vals, idx) payload of a (rows, flat) matrix: per-row top-k by
+    magnitude, or a random k-subset (top-k of per-row uniforms — unique
+    indices; error feedback absorbs the selection bias). ``keys`` is a
+    (rows, 2) uint32 key array, randk only."""
+    if kind == "topk":
+        _, idx = jax.lax.top_k(jnp.abs(uf), k)
+    else:
+        r = jax.vmap(lambda kk: jax.random.uniform(kk, uf.shape[1:]))(keys)
+        _, idx = jax.lax.top_k(r, k)
+    return jnp.take_along_axis(uf, idx, axis=1), idx
+
+
+def _scatter_payload(vals, idx, flat: int):
+    """Dense (rows, flat) f32 reconstruction of a (vals, idx) payload
+    (row-wise inverse of :func:`_select_payload`'s gather)."""
+    rows = jnp.arange(vals.shape[0])[:, None]
+    return jnp.zeros((vals.shape[0], flat), jnp.float32
+                     ).at[rows, idx].set(vals.astype(jnp.float32))
+
+
+class _BoundStatefulMixer:
+    """One-trace recorder a stateful mixer returns from ``bind(comm)``.
+
+    Implements the ordinary mixer protocol (``mix(tree)`` /
+    ``mix.mix_leaf``) while consuming the comm pytree's leaves by
+    position: the algorithm's single whole-tree mix visits params leaves
+    in ``jax.tree.leaves`` order (``jax.tree.map`` visitation), so leaf
+    ``i`` of the params tree pairs with leaf ``i`` of each comm subtree.
+    ``finalize()`` rebuilds the updated comm pytree — and raises if the
+    algorithm mixed more or fewer leaves than the params tree has
+    (gradient tracking mixes twice, RelaySGD never mixes; both are
+    incompatible with per-leaf wire state and rejected loudly)."""
+
+    def __init__(self, leaf_fn, comm, state_names, extra, keys=None,
+                 axis_name=None):
+        self._leaf_fn = leaf_fn
+        self._names = state_names
+        self._treedef = jax.tree.structure(comm[state_names[0]])
+        self._leaves = {nm: jax.tree.leaves(comm[nm]) for nm in state_names}
+        self._num = len(self._leaves[state_names[0]])
+        self._new = {nm: [None] * self._num for nm in state_names}
+        self._extra = extra            # passthrough comm keys (e.g. "key")
+        self._keys = keys              # per-node base keys for randk
+        self._i = 0
+        if axis_name is not None:
+            self.axis_name = axis_name
+
+    def mix_leaf(self, x):
+        i = self._i
+        if i >= self._num:
+            raise ValueError(
+                "stateful gossip mixer mixed more leaves than the parameter "
+                "tree has — the algorithm mixes more than once per step "
+                "(e.g. gradient tracking); compressed/delayed gossip "
+                "supports single-mix algorithms only")
+        self._i += 1
+        state = {nm: self._leaves[nm][i] for nm in self._names}
+        y, new_state = self._leaf_fn(x, state, i, self._keys)
+        for nm in self._names:
+            self._new[nm][i] = new_state[nm]
+        return y
+
+    def __call__(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(self.mix_leaf, tree)
+
+    def finalize(self):
+        if self._i != self._num:
+            raise ValueError(
+                f"stateful gossip mixer finalized after {self._i} of "
+                f"{self._num} leaf mixes — the algorithm never mixed the "
+                "full parameter tree (e.g. RelaySGD routes params per-edge "
+                "and ignores the gossip mixer); compressed/delayed gossip "
+                "requires a single whole-tree mix per step")
+        out = {nm: jax.tree.unflatten(self._treedef, self._new[nm])
+               for nm in self._names}
+        out.update(self._extra)
+        return out
+
+
+def _split_node_keys(keys):
+    """Advance (n, 2) per-node PRNG keys one step: returns
+    (carry, use) — both (n, 2). Per-leaf keys fold the leaf index into
+    ``use`` so every leaf draws independent random-k masks."""
+    pair = jax.vmap(lambda kk: jax.random.split(kk))(keys)
+    return pair[:, 0], pair[:, 1]
+
+
+def _fold_leaf(keys, i: int):
+    return jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+        keys, jnp.uint32(i))
+
+
+def make_compressed_mixer(topology: Topology, backend: str = "auto",
+                          wire_dtype: str = "native", active=None,
+                          stale=None, compression=None,
+                          gossip: str = "sync", seed: int = 0,
+                          consensus_lr: float = 1.0) -> Mixer:
+    """Stateful node-stacked gossip: delta-sparsified wires with error
+    feedback, optional one-step-stale (delayed) mixing, and optional
+    per-node straggler masks — on top of any node-stacked backend.
+
+    Every node carries a *shared estimate* ``x̂`` of each node's params —
+    the accumulation of every payload that node ever shipped, so sender
+    and receivers hold identical copies. The wire moves compressed
+    parameter **deltas** (the sparsification the paper's wire budget
+    asks for), with ``C`` the top-k/random-k selection, mixed CHOCO-SGD
+    style::
+
+        p  = C(x - x̂)                   # (vals, idx) delta payload
+        x̂' = x̂ + scatter(p)             # both ends apply the same delta
+        y  = x + γ · (M(x̂*) - x̂*)       # x̂*: estimates actually mixed
+
+    where ``M`` is the *plain* backend mixer (one Metropolis row-sum
+    ``Σ_j W_ij x̂*_j``) and ``γ = consensus_lr`` — algebraically
+    ``y_i = x_i + γ·Σ_j W_ij (x̂*_j - x̂*_i)``: the consensus correction
+    is a difference of *public estimates*, so it vanishes when estimates
+    agree (local training proceeds unimpeded however aggressive the
+    compression) and never drags ``x`` toward stale snapshots. Error
+    feedback is implicit: whatever a payload cut stays in the gap
+    ``x - x̂'`` and rides the next delta (the gap is the EF residual;
+    ``frac=1, γ=1`` makes ``x̂' = x`` up to f32 rounding and ``y = Wx``,
+    recovering the dense mix). ``x̂*`` is this step's estimate (sync),
+    the previous step's (delayed), or — for stale stragglers — frozen at
+    the last payload the node produced. With ``compression=None`` the
+    wire is the raw params (state is just the previous snapshot,
+    classic one-step-stale gossip ``y_i = W_ii·x_i + Σ_{j≠i} W_ij·
+    x_j^{t-1}``) and the sync all-fresh path reduces to the plain
+    backend mix exactly.
+
+    Down nodes (``active`` mask) keep identity rows in the masked
+    Metropolis matrix, so ``y_i = x_i`` for them regardless of payloads.
+    Stale nodes stay *active* — they train and receive (weights are NOT
+    renormalized away from them); only their outgoing payload freezes.
+    """
+    comp = normalize_compression(compression)
+    kind, frac = comp if comp is not None else ("none", 1.0)
+    if gossip not in GOSSIP_MODES:
+        raise ValueError(f"unknown gossip mode {gossip!r}; expected one "
+                         f"of {GOSSIP_MODES}")
+    n = topology.n
+    masked = active is not None and not np.all(np.asarray(active, bool))
+    act = (np.asarray(active, bool) if masked else np.ones(n, bool))
+    stale_arr = (np.asarray(stale, bool)
+                 if stale is not None and np.any(stale) else None)
+    if stale_arr is not None and stale_arr.shape != (n,):
+        raise ValueError(f"stale mask shape {stale_arr.shape} != ({n},)")
+    base = make_mixer(topology, backend, wire_dtype,
+                      active=(act if masked else None))
+    W = topology.mixing_matrix(act if masked else None)
+    d_self = jnp.asarray(np.diag(W), jnp.float32)
+    gamma = float(consensus_lr)
+    if not 0.0 < gamma <= 1.0:
+        raise ValueError(f"consensus_lr must be in (0, 1], got {gamma}")
+    fresh_np = act & (~stale_arr if stale_arr is not None else True)
+    fresh = jnp.asarray(fresh_np)
+    stale_j = jnp.asarray(stale_arr) if stale_arr is not None else None
+
+    def _col(v, ndim):
+        return v.reshape((n,) + (1,) * (ndim - 1))
+
+    def leaf_fn(x, state, i, keys):
+        xf = x.astype(jnp.float32)
+        if kind == "none":
+            prev = state["prev"]
+            if gossip == "delayed":
+                p_hat = prev
+            elif stale_j is not None:
+                p_hat = jnp.where(_col(stale_j, x.ndim), prev, x)
+            else:
+                p_hat = x
+            phf = p_hat.astype(jnp.float32)
+            y = base.mix_leaf(p_hat).astype(jnp.float32) \
+                + _col(d_self, x.ndim) * (xf - phf)
+            new_prev = jnp.where(_col(fresh, x.ndim), x, prev)
+            return y.astype(x.dtype), {"prev": new_prev}
+        hat = state["hat"]                      # (n, flat) shared estimates
+        flat = int(np.prod(x.shape[1:]))
+        xr = xf.reshape(n, -1)
+        k = payload_k(flat, frac)
+        lk = _fold_leaf(keys, i) if kind == "randk" else None
+        vals, idx = _select_payload(xr - hat, kind, k, lk)
+        if wire_dtype != "float32":
+            # native wire: payload values round-trip the storage dtype;
+            # the quantization error stays in the x - x̂ gap (implicit EF)
+            vals = vals.astype(x.dtype).astype(jnp.float32)
+        fcol = fresh[:, None]
+        new_hat = jnp.where(fcol, hat + _scatter_payload(vals, idx, flat),
+                            hat)
+        use = hat if gossip == "delayed" else new_hat
+        p_hat = use.reshape(x.shape)
+        y = xf + gamma * (base.mix_leaf(p_hat).astype(jnp.float32)
+                          .reshape(n, -1) - use).reshape(x.shape)
+        return y.astype(x.dtype), {"hat": new_hat}
+
+    state_names = ("prev",) if kind == "none" else ("hat",)
+
+    def init_state(stacked: PyTree):
+        """The comm pytree for step 0: the shared estimates start at the
+        exact initial params (every node begins from the same broadcast
+        init, so ``x̂₀ = x₀`` needs no wire traffic) — delayed/stale
+        consumers at step 0 mix a real snapshot, and the first delta
+        payload carries only the first local step's drift."""
+        if kind == "none":
+            return {"prev": jax.tree.map(jnp.asarray, stacked)}
+        comm = {"hat": jax.tree.map(
+            lambda x: jnp.asarray(x).astype(jnp.float32).reshape(
+                x.shape[0], -1), stacked)}
+        if kind == "randk":
+            comm["key"] = jax.random.split(jax.random.PRNGKey(seed), n)
+        return comm
+
+    def bind(comm):
+        keys = None
+        extra = {}
+        if kind == "randk":
+            carry, keys = _split_node_keys(comm["key"])
+            extra = {"key": carry}
+        return _BoundStatefulMixer(leaf_fn, comm, state_names, extra, keys)
+
+    def mix(tree: PyTree) -> PyTree:
+        raise TypeError(
+            "stateful gossip mixer must be bound to its comm state: "
+            "mix.bind(comm)(tree) — core.driver.make_step does this when "
+            "step.comm is set; mix.init_state(params) builds the initial "
+            "comm pytree")
+
+    mix.stateful = True
+    mix.init_state = init_state
+    mix.bind = bind
+    mix.compression = comp
+    mix.gossip = gossip
+    return mix
+
+
+def make_compressed_ppermute_mixer(axis_names: Sequence[str],
+                                   axis_sizes: Sequence[int],
+                                   local_nodes: int = 1, *,
+                                   num_nodes: int, full_graph: bool = False,
+                                   compression=None, gossip: str = "sync",
+                                   seed: int = 0,
+                                   consensus_lr: float = 1.0) -> Mixer:
+    """The shard_map twin of :func:`make_compressed_mixer` — compressed /
+    delayed gossip inside ``shard_map`` over one mesh node axis.
+
+    Compressed delta payloads ride the same value+index wire format the
+    streaming label rounds use (``labeling.shard_label_round``): per
+    leaf, each node's (k,) values and (k,) int32 indices of
+    ``C(x - x̂)``. Each device carries its own nodes' shared estimates
+    ``x̂`` *plus replicas of its ring neighbours' estimates* (``hfwd`` /
+    ``hbwd``), kept in lockstep by applying the very payloads that cross
+    the wire: the (vals, idx) arrays take the boundary-row
+    :func:`block_ring_shift` (2·k·(4+4) bytes cross each device edge
+    instead of the full row) and are scattered into the replicas at the
+    receiver. The mix combines roll-mixer Metropolis weights over the
+    full-rank replicas, CHOCO-SGD style: ``y_i = x_i + γ·((x̂_i + x̂_fwd
+    + x̂_bwd)/3 - x̂_i)`` — identical math to the node-stacked
+    ``y_i = x_i + γ·Σ_j W_ij (x̂_j - x̂_i)`` form, so shard and stacked
+    trajectories agree to float tolerance. A complete graph keeps a
+    replicated running sum ``S = Σ_j x̂_j`` updated from an
+    ``all_gather`` of the (k,)-payloads (still a compressed wire):
+    ``y_i = x_i + γ·(S/n - x̂_i)``. Delayed gossip mixes the pre-update
+    replicas (the previous step's estimates). ``init_state`` is
+    collective-free (plain node-stacked math on the global arrays), so
+    the initial comm pytree is built outside shard_map and device_put
+    like params. Stragglers (``stale``) and churn masks are unsupported
+    under shard_map, as for the plain ppermute backend."""
+    comp = normalize_compression(compression)
+    kind, frac = comp if comp is not None else ("none", 1.0)
+    if gossip not in GOSSIP_MODES:
+        raise ValueError(f"unknown gossip mode {gossip!r}; expected one "
+                         f"of {GOSSIP_MODES}")
+    names = list(axis_names)
+    if len(names) != 1:
+        raise ValueError("compressed/delayed gossip supports the "
+                         "single-axis ppermute mixer only (no hierarchical "
+                         "ring-of-rings) — use the node-stacked backends")
+    ax, size = names[0], int(axis_sizes[0])
+    if local_nodes < 1:
+        raise ValueError(f"local_nodes must be >= 1, got {local_nodes}")
+    n = num_nodes
+    if n != local_nodes * size:
+        raise ValueError(f"num_nodes ({n}) != local_nodes ({local_nodes}) "
+                         f"· axis size ({size})")
+    if n <= 1:
+        raise ValueError("compressed/delayed gossip needs n >= 2 nodes "
+                         "(a single node has no wire to compress)")
+    gamma = float(consensus_lr)
+    if not 0.0 < gamma <= 1.0:
+        raise ValueError(f"consensus_lr must be in (0, 1], got {gamma}")
+
+    def leaf_fn(x, state, i, keys):
+        # x: this device's (L, ...) block of the global node axis
+        L = x.shape[0]
+        xf = x.astype(jnp.float32)
+        if kind == "none":
+            prev = state["prev"]
+            p_hat = prev if gossip == "delayed" else x
+            phf = p_hat.astype(jnp.float32)
+            if full_graph:
+                tot = jax.lax.psum(jnp.sum(phf, axis=0, keepdims=True), ax)
+                y = (xf + tot - phf) / n
+            else:
+                fwd = block_ring_shift(phf, ax, size, 1)
+                if n == 2:
+                    y = 0.5 * xf + 0.5 * fwd
+                else:
+                    bwd = block_ring_shift(phf, ax, size, -1)
+                    y = (xf + fwd + bwd) / 3.0
+            return y.astype(x.dtype), {"prev": x}
+        hat = state["hat"]             # (L, flat) own shared estimates
+        flat = int(np.prod(x.shape[1:]))
+        xr = xf.reshape(L, -1)
+        k = payload_k(flat, frac)
+        lk = _fold_leaf(keys, i) if kind == "randk" else None
+        vals, idx = _select_payload(xr - hat, kind, k, lk)
+        vals = vals.astype(x.dtype).astype(jnp.float32)  # native wire
+        new_hat = hat + _scatter_payload(vals, idx, flat)
+        if full_graph:
+            s = state["hsum"]          # (1, flat) replicated Σ_j x̂_j
+            gv = jax.lax.all_gather(vals, ax)            # (size, L, k)
+            gi = jax.lax.all_gather(idx, ax)
+            new_s = s + jnp.sum(_scatter_payload(
+                gv.reshape(-1, k), gi.reshape(-1, k), flat),
+                axis=0, keepdims=True)
+            uh, us = (hat, s) if gossip == "delayed" else (new_hat, new_s)
+            y = xr + gamma * (us / n - uh)
+            new_state = {"hat": new_hat, "hsum": new_s}
+        else:
+            hf = state["hfwd"]         # row i replicates x̂_{i-1}
+            new_hf = hf + _scatter_payload(
+                block_ring_shift(vals, ax, size, 1),
+                block_ring_shift(idx, ax, size, 1), flat)
+            if n == 2:
+                uh, unb = ((hat, hf) if gossip == "delayed"
+                           else (new_hat, new_hf))
+                y = xr + gamma * (0.5 * (uh + unb) - uh)
+                new_state = {"hat": new_hat, "hfwd": new_hf}
+            else:
+                hb = state["hbwd"]     # row i replicates x̂_{i+1}
+                new_hb = hb + _scatter_payload(
+                    block_ring_shift(vals, ax, size, -1),
+                    block_ring_shift(idx, ax, size, -1), flat)
+                uh, uf_, ub_ = ((hat, hf, hb) if gossip == "delayed"
+                                else (new_hat, new_hf, new_hb))
+                y = xr + gamma * ((uh + uf_ + ub_) / 3.0 - uh)
+                new_state = {"hat": new_hat, "hfwd": new_hf,
+                             "hbwd": new_hb}
+        return y.reshape(x.shape).astype(x.dtype), new_state
+
+    if kind == "none":
+        state_names = ("prev",)
+    elif full_graph:
+        state_names = ("hat", "hsum")
+    elif n == 2:
+        state_names = ("hat", "hfwd")
+    else:
+        state_names = ("hat", "hfwd", "hbwd")
+
+    def init_state(stacked: PyTree):
+        """Built on the *global* node-stacked arrays (no collectives) —
+        run it outside shard_map and device_put the result with
+        ``node_stacked_shardings`` like the params (the (1, flat)
+        ``hsum`` leaves land replicated)."""
+        if kind == "none":
+            return {"prev": jax.tree.map(jnp.asarray, stacked)}
+        hat = jax.tree.map(
+            lambda x: jnp.asarray(x).astype(jnp.float32).reshape(
+                x.shape[0], -1), stacked)
+        comm = {"hat": hat}
+        if full_graph:
+            comm["hsum"] = jax.tree.map(
+                lambda h: jnp.sum(h, axis=0, keepdims=True), hat)
+        else:
+            comm["hfwd"] = jax.tree.map(
+                lambda h: jnp.roll(h, 1, axis=0), hat)
+            if n > 2:
+                comm["hbwd"] = jax.tree.map(
+                    lambda h: jnp.roll(h, -1, axis=0), hat)
+        if kind == "randk":
+            comm["key"] = jax.random.split(jax.random.PRNGKey(seed), n)
+        return comm
+
+    def bind(comm):
+        keys = None
+        extra = {}
+        if kind == "randk":
+            carry, keys = _split_node_keys(comm["key"])
+            extra = {"key": carry}
+        return _BoundStatefulMixer(leaf_fn, comm, state_names, extra, keys,
+                                   axis_name=ax)
+
+    def mix(tree: PyTree) -> PyTree:
+        raise TypeError(
+            "stateful gossip mixer must be bound to its comm state: "
+            "mix.bind(comm)(tree) — core.driver.make_shard_step does this "
+            "inside its shard_map body")
+
+    mix.stateful = True
+    mix.init_state = init_state
+    mix.bind = bind
+    mix.compression = comp
+    mix.gossip = gossip
+    mix.axis_name = ax
     return mix
 
 

@@ -46,7 +46,8 @@ from repro import sched
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
 from repro.core import distill, driver, idkd, labeling
 from repro.core.algorithms import make_algorithm
-from repro.core.mixing import consensus_distance, make_mixer
+from repro.core.mixing import (consensus_distance, make_mixer,
+                               normalize_compression, payload_elem_count)
 from repro.core.topology import Topology
 from repro.data.dirichlet import dirichlet_partition, partition_stats
 from repro.data.synthetic import ClassificationData
@@ -90,6 +91,8 @@ class _SimFederation(sched.CompiledFederationHooks):
         self.result = result
         self.idkd_cfg = idkd_cfg
         self.sparse_round = False
+        self.compression = sim.compression
+        self.gossip = sim.gossip            # re-set per run by init_comm
         self._node_mesh = sim.node_mesh     # shard mode: one shared mesh
         self.priv_parts = driver.pad_partitions(sim.parts)
         self.plain_sampler = driver.make_classification_sampler(
@@ -107,12 +110,14 @@ class _SimFederation(sched.CompiledFederationHooks):
         self.sparse_round = False
 
     # ----------------------------------------------------- cache plumbing
-    def _make_mixer(self, topo: Topology, active):
-        if active is None and topo.edge_key() == \
-                self.sim.gossip_topo.edge_key():
-            return self.sim.mixer
-        return make_mixer(topo, "dense", wire_dtype="float32",
-                          active=active)
+    def _make_mixer(self, topo: Topology, active, stale=None):
+        sim = self.sim
+        if (active is None and stale is None
+                and topo.edge_key() == sim.gossip_topo.edge_key()
+                and self._force_state == sim._prebuilt_stateful):
+            return sim.mixer
+        return make_mixer(topo, "dense", wire_dtype=sim.wire_dtype,
+                          active=active, stale=stale, **self._mixer_opts())
 
     def _adapter(self):
         return {
@@ -127,12 +132,15 @@ class _SimFederation(sched.CompiledFederationHooks):
         return (self.plain_sampler if self.phase == "plain"
                 else self.kd_sampler)
 
-    def _base_step(self, topo: Topology, active: np.ndarray):
+    def _base_step(self, topo: Topology, active: np.ndarray,
+                   stale: np.ndarray):
         sim = self.sim
-        if active.all() and topo.edge_key() == sim.gossip_topo.edge_key():
+        if (active.all() and not stale.any()
+                and topo.edge_key() == sim.gossip_topo.edge_key()
+                and self._force_state == sim._prebuilt_stateful):
             return {"plain": sim._plain_step, "kd_dense": sim._kd_step,
                     "kd_sparse": sim._sparse_kd_step}[self.phase]
-        return super()._base_step(topo, active)
+        return super()._base_step(topo, active, stale)
 
     # -------------------------------------------------------------- hooks
     def on_round(self, params, round_index: int, step: int, topo: Topology,
@@ -189,7 +197,8 @@ class DecentralizedSimulator:
     def __init__(self, model_cfg: ModelConfig, train_cfg: TrainConfig,
                  data: ClassificationData, public_x: Optional[np.ndarray] = None,
                  kd_mode: Optional[str] = None, eval_every: int = 50,
-                 eval_batches: int = 4, driver_mode: str = "auto"):
+                 eval_batches: int = 4, driver_mode: str = "auto",
+                 wire_dtype: str = "float32"):
         self.mcfg = model_cfg
         self.tcfg = train_cfg
         self.data = data
@@ -199,6 +208,10 @@ class DecentralizedSimulator:
         self.eval_batches = eval_batches
         self.driver_mode = driver.resolve_runner_mode(
             driver_mode, model_cfg.arch_type, model_cfg.conv_backend)
+        # paper-faithful full-precision mixing is the simulator default;
+        # the configured value reaches the mixer, the ledger, and the
+        # result metadata alike (no more pinned "float32" anywhere)
+        self.wire_dtype = wire_dtype
 
         n = train_cfg.num_nodes
         self.topology = Topology.make(train_cfg.topology, n)
@@ -209,8 +222,18 @@ class DecentralizedSimulator:
             self.gossip_topo = Topology.make("full", n)
         else:
             self.gossip_topo = self.topology
+        # the prebuilt mixer/steps bake in the config's compression +
+        # gossip mode; a schedule that needs a different statefulness
+        # (e.g. stale churn on an uncompressed config) rebuilds through
+        # the scheduler's cache instead of reusing these
+        self.compression = normalize_compression(train_cfg.compression_spec)
+        self.gossip = train_cfg.gossip
+        self._prebuilt_stateful = bool(self.compression is not None
+                                       or self.gossip == "delayed")
         self.mixer = make_mixer(self.gossip_topo, "dense",
-                                wire_dtype="float32")
+                                wire_dtype=self.wire_dtype,
+                                compression=self.compression,
+                                gossip=self.gossip)
         self.algo = make_algorithm(train_cfg.algorithm,
                                    topology=self.topology,
                                    momentum=train_cfg.momentum,
@@ -272,11 +295,13 @@ class DecentralizedSimulator:
         if self.driver_mode == "shard":
             self._plain_step = driver.make_shard_step(
                 model, algo, driver.classification_adapter,
-                mesh=self.node_mesh, topology=self.gossip_topo)
+                mesh=self.node_mesh, topology=self.gossip_topo,
+                compression=self.compression, gossip=self.gossip)
             self._sparse_kd_step = driver.make_shard_step(
                 model, algo,
                 driver.sparse_kd_adapter(icfg.temperature, icfg.kd_weight),
-                mesh=self.node_mesh, topology=self.gossip_topo)
+                mesh=self.node_mesh, topology=self.gossip_topo,
+                compression=self.compression, gossip=self.gossip)
             # dense label payloads never exist in shard mode (top-k wire)
             self._kd_step = None
         else:
@@ -353,7 +378,8 @@ class DecentralizedSimulator:
         rounds = (sched.idkd_round_steps(idkd_cfg, self.tcfg.steps)
                   if self._kd_active(idkd_cfg) else ())
         return sched.compile_schedule(self.tcfg.steps, self.eval_every,
-                                      round_steps=rounds)
+                                      round_steps=rounds,
+                                      gossip=self.gossip)
 
     def _kd_active(self, idkd_cfg: IDKDConfig) -> bool:
         return (self.kd_mode is not None and self.public_x is not None
@@ -384,6 +410,13 @@ class DecentralizedSimulator:
             raise ValueError(
                 "schedule contains homogenization rounds but the simulator "
                 "has no kd_mode/public data to run them")
+        if schedule.gossip != self.gossip:
+            raise ValueError(
+                f"schedule compiled with gossip={schedule.gossip!r} but "
+                f"this simulator's TrainConfig.gossip is {self.gossip!r}; "
+                "pass gossip= to sched.compile_schedule (or use "
+                "default_schedule()) so the prebuilt steps and the "
+                "schedule agree")
 
         result = SimResult(final_acc=0.0)
         result.pre_hist = partition_stats(self.data.train_y, self.parts,
@@ -406,11 +439,25 @@ class DecentralizedSimulator:
                 opt_state,
                 node_stacked_shardings(opt_state, self.node_mesh, n))
 
-        nparams = sum(x.size for x in jax.tree.leaves(self.model.init(
-            jax.random.PRNGKey(0))))
+        proto = self.model.init(jax.random.PRNGKey(0))
+        nparams = sum(x.size for x in jax.tree.leaves(proto))
+        param_dtype = str(jax.tree.leaves(proto)[0].dtype)
+        elem_bytes = sched.wire_elem_bytes(self.wire_dtype, param_dtype)
+        # compressed wires ship (value, int32 index) pairs of the top-k /
+        # random-k per-node payload instead of the dense parameter row
+        payload_elems = (payload_elem_count(proto, self.compression,
+                                            node_stacked=False)
+                         if self.compression is not None else None)
+        index_bytes = 4 if self.compression is not None else 0
+        comp_kind, comp_frac = (self.compression
+                                if self.compression is not None
+                                else ("none", 0.0))
         ledger = sched.CommLedger(n, meta={
-            "topology": self.gossip_topo.name, "wire_dtype": "float32",
-            "param_count": int(nparams)})
+            "topology": self.gossip_topo.name,
+            "wire_dtype": self.wire_dtype,
+            "param_count": int(nparams),
+            "compression": comp_kind, "compression_frac": comp_frac,
+            "gossip": schedule.gossip})
         if self._fed is None:
             self._fed = _SimFederation(self, result, idkd_cfg)
         else:
@@ -419,7 +466,8 @@ class DecentralizedSimulator:
         params, opt_state, key, captured = sched.run_schedule(
             schedule, fed, params, opt_state, key,
             topology=self.gossip_topo, ledger=ledger,
-            param_count=int(nparams), elem_bytes=4,
+            param_count=int(nparams), elem_bytes=elem_bytes,
+            payload_elems=payload_elems, index_bytes=index_bytes,
             resume_step=resume_step, capture_at=capture_at)
 
         result.final_acc = (result.acc_history[-1]

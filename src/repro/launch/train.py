@@ -25,6 +25,14 @@ shard-local label scoring with a top-k-only exchange. Develop/test
 multi-device behaviour on CPU with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--compression topk --compression-frac 0.01`` sparsifies the gossip
+wire (error-feedback top-k / random-k, DESIGN.md §9), ``--gossip
+delayed`` switches to one-step-stale mixing, and ``--churn-mode stale``
+turns ``--churn`` windows into straggler-tolerant rounds — the slow
+node's neighbours keep mixing its last payload instead of stalling. All
+three run under both the node-stacked and the shard drivers and land
+compression-aware bytes in the ledger.
+
 Usage (CPU, reduced config):
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
         --steps 40 --nodes 8 --idkd [--rounds 2] [--churn 3@20-30]
@@ -44,7 +52,8 @@ from repro.configs import get_config
 from repro.configs.base import IDKDConfig, ModelConfig, TrainConfig
 from repro.core import distill, driver, labeling
 from repro.core.algorithms import make_algorithm
-from repro.core.mixing import Mixer, make_mixer
+from repro.core.mixing import (Mixer, make_mixer, normalize_compression,
+                               payload_elem_count)
 from repro.core.topology import Topology
 from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_lm_data
@@ -54,7 +63,9 @@ from repro.models import build_model
 
 def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native",
                       topology: Optional[Topology] = None,
-                      active=None) -> Tuple[Topology, Mixer]:
+                      active=None, stale=None, compression=None,
+                      gossip: str = "sync",
+                      stateful=None) -> Tuple[Topology, Mixer]:
     """The (topology, mixer) pair the launch path gossips params on —
     ``_LMFederation``'s mixer construction point.
 
@@ -63,10 +74,14 @@ def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native",
     so params-gossip and label-exchange always agree. ``wire_dtype``
     applies to every phase, KD included (the seed's KD step silently
     built an f32-wire mixer, losing the §Perf bf16-wire halving);
-    ``active`` is the churn mask.
+    ``active`` is the churn mask. ``stale`` / ``compression`` /
+    ``gossip`` / ``stateful`` are the compressed-wire controls
+    (DESIGN.md §9), forwarded verbatim to ``mixing.make_mixer``.
     """
     topo = topology or Topology.make(tcfg.topology, tcfg.num_nodes)
-    return topo, make_mixer(topo, wire_dtype=wire_dtype, active=active)
+    return topo, make_mixer(topo, wire_dtype=wire_dtype, active=active,
+                            stale=stale, compression=compression,
+                            gossip=gossip, stateful=stateful)
 
 
 def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
@@ -165,10 +180,14 @@ class _LMFederation(sched.CompiledFederationHooks):
         self.plain_sampler = driver.make_lm_sampler(
             self.priv_parts, tokens, tcfg.batch_size)
         self.kd_sampler = None
+        # compressed-wire spec ((kind, frac) or None) read off the config;
+        # self.gossip is overwritten from the schedule by init_comm
+        self.compression = tcfg.compression_spec
 
-    def _make_mixer(self, topo: Topology, active):
+    def _make_mixer(self, topo: Topology, active, stale=None):
         return make_gossip_mixer(self.tcfg, self.wire_dtype,
-                                 topology=topo, active=active)[1]
+                                 topology=topo, active=active, stale=stale,
+                                 **self._mixer_opts())[1]
 
     def _adapter(self):
         return (driver.lm_adapter if self.phase == "plain"
@@ -251,10 +270,16 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
         rounds = (sched.idkd_round_steps(idkd_cfg, tcfg.steps)
                   if kd_fires else ())
         schedule = sched.compile_schedule(tcfg.steps, log_every,
-                                          round_steps=rounds, events=events)
+                                          round_steps=rounds, events=events,
+                                          gossip=tcfg.gossip)
     elif events:
         raise ValueError("pass events to compile_schedule, not alongside "
                          "a prebuilt schedule")
+    if schedule.gossip != tcfg.gossip:
+        raise ValueError(
+            f"schedule gossip mode {schedule.gossip!r} disagrees with "
+            f"TrainConfig.gossip={tcfg.gossip!r}; pass gossip= to "
+            "compile_schedule (or drop the prebuilt schedule)")
     if schedule.round_steps and not use_idkd:
         raise ValueError("schedule contains homogenization rounds but "
                          "use_idkd=False")
@@ -288,9 +313,16 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
             opt_state, node_stacked_shardings(opt_state, mesh, n))
 
     nparams = sum(x.size for x in jax.tree.leaves(params)) // n
+    comp = normalize_compression(tcfg.compression_spec)
+    payload_elems = (payload_elem_count(params, comp, node_stacked=True)
+                     if comp is not None else None)
+    index_bytes = 4 if comp is not None else 0
+    comp_kind, comp_frac = comp if comp is not None else ("none", 0.0)
     ledger = sched.CommLedger(n, meta={
         "topology": topo.name, "wire_dtype": wire_dtype,
-        "param_count": int(nparams)})
+        "param_count": int(nparams),
+        "compression": comp_kind, "compression_frac": comp_frac,
+        "gossip": schedule.gossip})
 
     history = []
     t0 = time.time()
@@ -305,7 +337,8 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
     params, opt_state, key, _ = sched.run_schedule(
         schedule, fed, params, opt_state, key, topology=topo,
         ledger=ledger, param_count=int(nparams),
-        elem_bytes=sched.wire_elem_bytes(wire_dtype, cfg.dtype))
+        elem_bytes=sched.wire_elem_bytes(wire_dtype, cfg.dtype),
+        payload_elems=payload_elems, index_bytes=index_bytes)
     return {"params": consensus_params(params), "loss_history": history,
             "model": model, "topology": topo, "ledger": ledger.as_dict(),
             "schedule": schedule}
@@ -326,8 +359,23 @@ def main():
                          "into the post-start span)")
     ap.add_argument("--churn", default="",
                     help="churn spec node@down-up[,...], e.g. 3@20-30")
+    ap.add_argument("--churn-mode", default="freeze",
+                    choices=list(sched.CHURN_MODES),
+                    help="what --churn means: freeze (hold params), "
+                         "isolate (train but no gossip), or stale "
+                         "(straggler — neighbours mix its last payload)")
     ap.add_argument("--wire-dtype", default="native",
                     choices=["native", "float32"])
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "topk", "randk"],
+                    help="gossip wire compression (DESIGN.md §9)")
+    ap.add_argument("--compression-frac", type=float, default=0.01,
+                    help="fraction of each leaf kept per send (top-k / "
+                         "random-k)")
+    ap.add_argument("--gossip", default="sync",
+                    choices=list(sched.GOSSIP_MODES),
+                    help="sync mixes this step's params; delayed mixes "
+                         "the previous step's payload (one-step-stale)")
     ap.add_argument("--driver", default="scan",
                     choices=["scan", "host", "shard"])
     ap.add_argument("--full", action="store_true",
@@ -342,10 +390,14 @@ def main():
     tcfg = TrainConfig(num_nodes=args.nodes, steps=args.steps, lr=0.1,
                        alpha=args.alpha, batch_size=8,
                        topology=args.topology,
+                       compression=args.compression,
+                       compression_frac=args.compression_frac,
+                       gossip=args.gossip,
                        idkd=IDKDConfig(start_step=start, label_topk=8,
                                        every_k_steps=every_k,
                                        num_rounds=args.rounds))
-    events = (sched.parse_churn(args.churn, args.nodes, args.steps)
+    events = (sched.parse_churn(args.churn, args.nodes, args.steps,
+                                mode=args.churn_mode)
               if args.churn else ())
     out = run_training(cfg, tcfg, use_idkd=args.idkd,
                        wire_dtype=args.wire_dtype, driver_mode=args.driver,

@@ -2,10 +2,10 @@
 loop, and the unified communication ledger (DESIGN.md §6)."""
 from repro.sched.ledger import (CommLedger, LedgerEntry,  # noqa: F401
                                 gossip_bytes_per_step, wire_elem_bytes)
-from repro.sched.schedule import (CHURN_MODES, ChurnEvent,  # noqa: F401
-                                  HomogenizeEvent, RewireEvent, Schedule,
-                                  Segment, compile_schedule, fit_every_k,
-                                  idkd_round_steps, parse_churn)
+from repro.sched.schedule import (CHURN_MODES, GOSSIP_MODES,  # noqa: F401
+                                  ChurnEvent, HomogenizeEvent, RewireEvent,
+                                  Schedule, Segment, compile_schedule,
+                                  fit_every_k, idkd_round_steps, parse_churn)
 from repro.sched.scheduler import (CompiledFederationHooks,  # noqa: F401
                                    FederationHooks, run_schedule,
                                    validate_shard_schedule)

@@ -41,14 +41,30 @@ def wire_elem_bytes(wire_dtype: str, param_dtype: str) -> int:
 
 
 def gossip_bytes_per_step(topology: Topology, active: Optional[np.ndarray],
-                          param_count: int, elem_bytes: int) -> np.ndarray:
-    """(n,) bytes each node sends per step: active-degree · params · wire
-    bytes. Down nodes (and links to them) carry nothing."""
+                          param_count: int, elem_bytes: int, *,
+                          payload_elems: Optional[int] = None,
+                          index_bytes: int = 0,
+                          stale: Optional[np.ndarray] = None) -> np.ndarray:
+    """(n,) bytes each node sends per step: active-degree · payload
+    elements · per-element wire bytes. Down nodes (and links to them)
+    carry nothing.
+
+    Compressed wires (DESIGN.md §9): ``payload_elems`` overrides the raw
+    ``param_count`` with the sparsified per-node element count
+    (``mixing.payload_elem_count``), and ``index_bytes`` adds the int32
+    index rider each value carries (top-k/random-k send value+index
+    pairs, so 4 there; dense sends leave it 0). ``stale`` marks
+    straggler nodes whose *outgoing* payload is frozen — they ship
+    nothing new, so their send bytes are 0 (they still receive, which
+    their neighbours' rows account for)."""
     n = topology.n
     act = np.ones(n, bool) if active is None else np.asarray(active, bool)
     deg = np.array([sum(act[j] for j in topology.neighbors(i))
                     if act[i] else 0 for i in range(n)], np.int64)
-    return deg * int(param_count) * int(elem_bytes)
+    if stale is not None:
+        deg = np.where(np.asarray(stale, bool), 0, deg)
+    elems = int(param_count) if payload_elems is None else int(payload_elems)
+    return deg * elems * (int(elem_bytes) + int(index_bytes))
 
 
 @dataclass

@@ -34,7 +34,8 @@ from typing import List, Sequence, Tuple, Union
 from repro.configs.base import IDKDConfig
 from repro.core.topology import Topology
 
-CHURN_MODES = ("freeze", "isolate")
+CHURN_MODES = ("freeze", "isolate", "stale")
+GOSSIP_MODES = ("sync", "delayed")
 
 
 @dataclass(frozen=True)
@@ -52,6 +53,12 @@ class ChurnEvent:
     ``mode="freeze"``: a down node neither trains nor gossips (its params
     and optimizer state are held). ``mode="isolate"``: a *straggler* — it
     keeps training locally but misses every gossip exchange.
+    ``mode="stale"``: a *slow* node — it stays in the federation (trains,
+    receives gossip, keeps its Metropolis weights) but its *outgoing*
+    payload is frozen at the last one it produced, so neighbours mix a
+    stale snapshot instead of stalling on it (DESIGN.md §9). Stale runs
+    use the stateful gossip mixers; the scheduler forces the comm pytree
+    on for the whole schedule so its structure never changes mid-scan.
     """
     step: int
     down: Tuple[int, ...] = ()
@@ -92,6 +99,14 @@ class Schedule:
     eval_every: int
     segments: Tuple[Segment, ...] = ()
     round_steps: Tuple[int, ...] = ()
+    gossip: str = "sync"    # "sync" | "delayed" (one-step-stale mixing)
+
+    @property
+    def has_stale(self) -> bool:
+        """True when any churn event marks a node a stale straggler —
+        the run then needs the stateful gossip mixers from step 0."""
+        return any(isinstance(ev, ChurnEvent) and ev.mode == "stale"
+                   for seg in self.segments for ev in seg.events)
 
     def boundaries(self) -> List[Tuple[int, int]]:
         """The chunk [start, stop) spans — ``driver.eval_boundaries``'s
@@ -181,7 +196,8 @@ def _validate_events(events: Sequence[Event], steps: int) -> List[Event]:
 
 def compile_schedule(steps: int, eval_every: int, *,
                      round_steps: Sequence[int] = (),
-                     events: Sequence[Event] = ()) -> Schedule:
+                     events: Sequence[Event] = (),
+                     gossip: str = "sync") -> Schedule:
     """Compile the outer loop into runner-ready segments.
 
     Cuts fall at 0/steps, after every eval step, at every homogenization
@@ -189,11 +205,16 @@ def compile_schedule(steps: int, eval_every: int, *,
     fire at its start (churn/rewire ordered before the round at the same
     step) and an ``eval_after`` flag matching the drivers' historical
     ``last % eval_every == 0 or last == steps - 1`` eval rule.
+    ``gossip="delayed"`` selects one-step-stale mixing for every training
+    segment (the drivers pick the stateful mixers accordingly).
     """
     if steps <= 0:
         raise ValueError(f"steps must be positive, got {steps}")
     if eval_every <= 0:
         raise ValueError(f"eval_every must be positive, got {eval_every}")
+    if gossip not in GOSSIP_MODES:
+        raise ValueError(f"unknown gossip mode {gossip!r}; expected one "
+                         f"of {GOSSIP_MODES}")
     rounds = sorted(set(int(s) for s in round_steps))
     for s in rounds:
         if not 0 <= s < steps:
@@ -221,7 +242,8 @@ def compile_schedule(steps: int, eval_every: int, *,
             start=a, stop=b, events=tuple(by_step.get(a, ())),
             eval_after=((b - 1) % eval_every == 0 or b == steps)))
     return Schedule(steps=steps, eval_every=eval_every,
-                    segments=tuple(segments), round_steps=tuple(rounds))
+                    segments=tuple(segments), round_steps=tuple(rounds),
+                    gossip=gossip)
 
 
 # ------------------------------------------------------------- CLI parsing

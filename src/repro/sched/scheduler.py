@@ -19,6 +19,15 @@ The federation state threaded through the loop:
   ``isolate`` stragglers — they keep training locally but miss gossip.
   Each ChurnEvent's ``mode`` applies to its own ``down`` nodes, so
   frozen and isolated nodes coexist;
+* ``stale``   — the straggler-tolerant mask (``mode="stale"`` churn):
+  stale nodes stay *active* — they train and receive gossip — but
+  their outgoing payload is frozen at the last one they produced, so
+  neighbours mix a stale snapshot instead of waiting (DESIGN.md §9).
+  The ledger charges stale senders zero bytes;
+* ``comm``    — the stateful gossip mixers' comm pytree (error-feedback
+  residuals + last wire payloads) when the schedule uses compression,
+  delayed gossip, or stale churn: built once by ``hooks.init_comm`` and
+  threaded through every runner call, like params;
 * rounds fired so far — the ledger's round bucket index.
 
 Resume replays topology events *before* the resume step (they are cheap
@@ -45,10 +54,19 @@ class FederationHooks:
     """Driver-specific callbacks for :func:`run_schedule` (subclass and
     override; the base class documents the protocol)."""
 
+    def init_comm(self, params, topology: Topology,
+                  schedule: Schedule) -> Optional[Any]:
+        """Build the stateful gossip mixers' initial comm pytree for a
+        schedule that needs one (compression, delayed gossip, or stale
+        churn anywhere in the run — the comm structure must be constant
+        across every segment, so statefulness is decided up front).
+        Return None for plain synchronous gossip (the base default)."""
+        return None
+
     def on_topology(self, topology: Topology, active: np.ndarray,
-                    frozen: np.ndarray) -> None:
-        """The gossip graph or availability mask changed; invalidate or
-        re-key any mixer/step caches."""
+                    frozen: np.ndarray, stale: np.ndarray) -> None:
+        """The gossip graph, availability mask, or straggler mask
+        changed; invalidate or re-key any mixer/step caches."""
 
     def on_round(self, params, round_index: int, step: int,
                  topology: Topology, active: np.ndarray
@@ -59,9 +77,12 @@ class FederationHooks:
         return None
 
     def runner(self, topology: Topology, active: np.ndarray,
-               frozen: np.ndarray) -> Callable:
+               frozen: np.ndarray, stale: np.ndarray) -> Callable:
         """A ``run(params, opt_state, key, step0, num_steps)`` runner for
-        the current phase, graph, availability mask, and frozen subset."""
+        the current phase, graph, availability mask, frozen subset, and
+        straggler (stale) mask. A runner flagged ``run.comm`` takes and
+        returns the gossip comm pytree: ``run(..., comm=comm) -> (params,
+        opt_state, key, losses, comm)``."""
         raise NotImplementedError
 
     def on_eval(self, params, step: int, losses) -> None:
@@ -86,12 +107,16 @@ class CompiledFederationHooks(FederationHooks):
     run starts), topology swaps are fine as long as the target is a
     ring/complete graph.
 
-    Subclasses set ``model``, ``algo``, ``lr_fn``, ``driver_mode`` and
-    the phase state (``phase`` starts "plain"; ``on_round`` overrides
-    advance it and refresh ``ctx``), and implement:
+    Subclasses set ``model``, ``algo``, ``lr_fn``, ``driver_mode`` —
+    plus ``compression`` / ``gossip`` for the compressed-wire path —
+    and the phase state (``phase`` starts "plain"; ``on_round``
+    overrides advance it and refresh ``ctx``), and implement:
 
-    * ``_make_mixer(topology, active)`` — backend / wire-dtype choice
-      (``active`` is None for the all-up mask);
+    * ``_make_mixer(topology, active, stale=None)`` — backend /
+      wire-dtype choice (``active`` is None for the all-up mask,
+      ``stale`` None for no stragglers); forwards ``_mixer_opts()`` to
+      ``mixing.make_mixer`` so compression / gossip / forced
+      statefulness reach every mixer it builds;
     * ``_adapter()`` — the loss adapter for the current phase;
     * ``_sampler()`` — the sampler for the current phase.
 
@@ -104,6 +129,8 @@ class CompiledFederationHooks(FederationHooks):
     algo = None
     lr_fn = None
     driver_mode = "scan"
+    compression = None        # None | "topk:frac" | "randk:frac" | (kind, f)
+    gossip = "sync"           # overwritten from the schedule by init_comm
 
     def __init__(self):
         self.phase = "plain"
@@ -112,8 +139,10 @@ class CompiledFederationHooks(FederationHooks):
         self._steps: Dict = {}
         self._runners: Dict = {}
         self._node_mesh = None
+        self._force_state = False
 
-    def _make_mixer(self, topology: Topology, active) -> Callable:
+    def _make_mixer(self, topology: Topology, active,
+                    stale=None) -> Callable:
         raise NotImplementedError
 
     def _adapter(self):
@@ -121,6 +150,37 @@ class CompiledFederationHooks(FederationHooks):
 
     def _sampler(self):
         raise NotImplementedError
+
+    def _mixer_opts(self) -> Dict:
+        """kwargs a ``_make_mixer`` implementation forwards to
+        ``mixing.make_mixer``: the run's compression spec, gossip mode,
+        and — once ``init_comm`` saw a schedule that needs state
+        anywhere — ``stateful=True``, so every mixer of the run carries
+        the same comm structure (a scan carry cannot change pytree
+        structure mid-schedule)."""
+        return {"compression": self.compression, "gossip": self.gossip,
+                "stateful": True if self._force_state else None}
+
+    def init_comm(self, params, topology: Topology,
+                  schedule: Schedule) -> Optional[Any]:
+        from repro.core import mixing
+        self.gossip = schedule.gossip
+        self._force_state = bool(
+            mixing.normalize_compression(self.compression) is not None
+            or self.gossip == "delayed" or schedule.has_stale)
+        if not self._force_state:
+            return None
+        n = topology.n
+        step = self._step(topology, np.ones(n, bool), np.zeros(n, bool),
+                          np.zeros(n, bool))
+        comm = step.init_comm(params)
+        if self.driver_mode == "shard":
+            import jax
+
+            from repro.launch.sharding import node_stacked_shardings
+            comm = jax.device_put(comm, node_stacked_shardings(
+                comm, self.shard_mesh(n), n))
+        return comm
 
     # ------------------------------------------------------------- caches
     @staticmethod
@@ -131,21 +191,28 @@ class CompiledFederationHooks(FederationHooks):
     def _freeze_key(frozen: np.ndarray):
         return tuple(np.flatnonzero(frozen)) if frozen.any() else None
 
-    def _mixer(self, topo: Topology, active: np.ndarray):
+    @staticmethod
+    def _stale_key(stale: np.ndarray):
+        return tuple(np.flatnonzero(stale)) if stale.any() else None
+
+    def _mixer(self, topo: Topology, active: np.ndarray, stale=None):
         mask = self._mask_key(active)
-        key = (topo.edge_key(), mask)
+        sk = (self._stale_key(stale) if stale is not None else None)
+        key = (topo.edge_key(), mask, sk)
         if key not in self._mixers:
-            if mask is None:
+            if mask is None and sk is None:
                 self._mixers[key] = self._make_mixer(topo, None)
             else:
                 # churn path: remake the cached all-up mixer for the new
-                # availability mask (same backend/wire choice); mixers
-                # without a remake handle are rebuilt from scratch
+                # availability / straggler masks (same backend/wire
+                # choice); mixers without a remake handle are rebuilt
                 base = self._mixer(topo, np.ones_like(active))
                 remake = getattr(base, "remake", None)
-                self._mixers[key] = (remake(active=active)
-                                     if remake is not None
-                                     else self._make_mixer(topo, active))
+                self._mixers[key] = (
+                    remake(active=(active if mask is not None else None),
+                           stale=stale)
+                    if remake is not None
+                    else self._make_mixer(topo, active, stale))
         return self._mixers[key]
 
     def shard_mesh(self, num_nodes: int):
@@ -155,7 +222,8 @@ class CompiledFederationHooks(FederationHooks):
             self._node_mesh = make_node_mesh(num_nodes)
         return self._node_mesh
 
-    def _base_step(self, topo: Topology, active: np.ndarray):
+    def _base_step(self, topo: Topology, active: np.ndarray,
+                   stale: np.ndarray):
         from repro.core import driver
         if self.driver_mode == "shard":
             if not active.all():
@@ -164,20 +232,28 @@ class CompiledFederationHooks(FederationHooks):
                     "(freeze/isolate need the node-stacked gather/dense "
                     "mixers — DESIGN.md §7); run churn schedules with "
                     "driver_mode='scan' or 'host'")
+            if stale.any():
+                raise ValueError(
+                    "shard driver cannot apply straggler (stale) masks — "
+                    "run stale-churn schedules with driver_mode='scan' "
+                    "or 'host' (DESIGN.md §9)")
             return driver.make_shard_step(
                 self.model, self.algo, self._adapter(),
-                mesh=self.shard_mesh(topo.n), topology=topo)
-        return driver.make_step(self.model, self.algo,
-                                self._mixer(topo, active), self._adapter())
+                mesh=self.shard_mesh(topo.n), topology=topo,
+                compression=self.compression, gossip=self.gossip)
+        return driver.make_step(
+            self.model, self.algo,
+            self._mixer(topo, active, stale if stale.any() else None),
+            self._adapter())
 
     def _step(self, topo: Topology, active: np.ndarray,
-              frozen: np.ndarray):
+              frozen: np.ndarray, stale: np.ndarray):
         from repro.core import driver
         key = (self.phase, topo.edge_key(), self._mask_key(active),
-               self._freeze_key(frozen))
+               self._freeze_key(frozen), self._stale_key(stale))
         if key not in self._steps:
-            step = self._base_step(topo, active)
-            if key[-1] is not None:
+            step = self._base_step(topo, active, stale)
+            if self._freeze_key(frozen) is not None:
                 # hold exactly the frozen subset; isolate stragglers
                 # (down but unfrozen) keep taking local steps
                 step = driver.make_frozen_step(step, ~frozen)
@@ -185,15 +261,23 @@ class CompiledFederationHooks(FederationHooks):
         return self._steps[key]
 
     def runner(self, topo: Topology, active: np.ndarray,
-               frozen: np.ndarray) -> Callable:
+               frozen: np.ndarray, stale: np.ndarray) -> Callable:
         from repro.core import driver
         key = (self.phase, topo.edge_key(), self._mask_key(active),
-               self._freeze_key(frozen))
+               self._freeze_key(frozen), self._stale_key(stale))
         if key not in self._runners:
             self._runners[key] = driver.make_runner(
-                self._step(topo, active, frozen), self._sampler(),
+                self._step(topo, active, frozen, stale), self._sampler(),
                 self.lr_fn, self.driver_mode)
         run = self._runners[key]
+        if getattr(run, "comm", False):
+            ctx = None if self.phase == "plain" else self.ctx
+
+            def comm_run(p, o, k, s0, ns, comm=None, _run=run, _ctx=ctx):
+                return _run(p, o, k, s0, ns, _ctx, comm)
+
+            comm_run.comm = True
+            return comm_run
         if self.phase == "plain":
             return run
         return lambda p, o, k, s0, ns: run(p, o, k, s0, ns, self.ctx)
@@ -236,16 +320,25 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
                  opt_state, key, *, topology: Topology,
                  ledger: Optional[CommLedger] = None,
                  param_count: int = 0, elem_bytes: int = 4,
+                 payload_elems: Optional[int] = None, index_bytes: int = 0,
                  resume_step: int = 0, capture_at: Optional[int] = None
                  ) -> Tuple[Any, Any, Any, Optional[Dict]]:
     """Drive the full schedule. Returns ``(params, opt_state, key,
     captured)`` where ``captured`` is the ``{"params", "opt_state",
     "key", "step"}`` snapshot taken at the ``capture_at`` boundary
-    (None when not requested).
+    (None when not requested; plus ``"comm"`` on stateful-gossip runs).
 
     ``resume_step`` must satisfy ``schedule.validate_resume``; segments
     ending at or before it are skipped (topology events still replay so
-    the graph state is correct when training picks back up).
+    the graph state is correct when training picks back up). On a
+    stateful-gossip resume the comm pytree is re-initialized from the
+    restored params (zero residuals, fresh payloads) — the error-feedback
+    state is not part of checkpoints.
+
+    ``payload_elems`` / ``index_bytes`` are the ledger's compressed-wire
+    accounting (``mixing.payload_elem_count`` per-node elements and the
+    4-byte int32 index rider of top-k/random-k sends); left at their
+    defaults the gossip charge is the dense ``param_count · elem_bytes``.
     """
     n = topology.n
     schedule.validate_resume(resume_step)
@@ -260,11 +353,20 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
                 f"resume_step={resume_step}; nothing would be captured")
     active = np.ones(n, bool)
     frozen = np.zeros(n, bool)    # down nodes with freeze (vs isolate) mode
+    stale = np.zeros(n, bool)     # active stragglers with frozen payloads
     fired = 0                 # homogenization rounds fired so far
+    comm = hooks.init_comm(params, topology, schedule)
     captured: Optional[Dict] = None
+
+    def _snapshot(step):
+        snap = {"params": params, "opt_state": opt_state, "key": key,
+                "step": step}
+        if comm is not None:
+            snap["comm"] = comm
+        return snap
+
     if capture_at == 0:
-        captured = {"params": params, "opt_state": opt_state, "key": key,
-                    "step": 0}
+        captured = _snapshot(0)
 
     for seg in schedule.segments:
         skipped = seg.stop <= resume_step
@@ -272,24 +374,33 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
             if isinstance(ev, ChurnEvent):
                 active = active.copy()
                 frozen = frozen.copy()
+                stale = stale.copy()
                 for i in (*ev.down, *ev.up):
                     if not 0 <= i < n:
                         raise ValueError(
                             f"churn event at step {ev.step} names node "
                             f"{i} outside [0, {n})")
                 for i in ev.down:
-                    active[i] = False
-                    frozen[i] = ev.mode == "freeze"
+                    if ev.mode == "stale":
+                        # straggler-tolerant: the node stays active
+                        # (trains, receives) — only its outgoing payload
+                        # freezes at the last one it produced
+                        stale[i] = True
+                    else:
+                        active[i] = False
+                        frozen[i] = ev.mode == "freeze"
+                        stale[i] = False
                 for i in ev.up:
                     active[i] = True
                     frozen[i] = False
+                    stale[i] = False
                 if not active.any():
                     raise ValueError(f"churn at step {ev.step} leaves no "
                                      "active nodes")
-                hooks.on_topology(topology, active, frozen)
+                hooks.on_topology(topology, active, frozen, stale)
             elif isinstance(ev, RewireEvent):
                 topology = _resolve_topology(ev, n)
-                hooks.on_topology(topology, active, frozen)
+                hooks.on_topology(topology, active, frozen, stale)
             elif isinstance(ev, HomogenizeEvent):
                 if skipped:
                     fired += 1      # round happened before the checkpoint
@@ -303,18 +414,25 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
         if skipped:
             continue
 
-        runner = hooks.runner(topology, active, frozen)
+        runner = hooks.runner(topology, active, frozen, stale)
         if ledger is not None and param_count:
             ledger.log_gossip(
                 fired, seg.start, seg.stop,
                 gossip_bytes_per_step(topology, active, param_count,
-                                      elem_bytes))
-        params, opt_state, key, losses = runner(
-            params, opt_state, key, jnp.asarray(seg.start, jnp.int32),
-            seg.num_steps)
+                                      elem_bytes,
+                                      payload_elems=payload_elems,
+                                      index_bytes=index_bytes,
+                                      stale=stale if stale.any() else None))
+        if getattr(runner, "comm", False):
+            params, opt_state, key, losses, comm = runner(
+                params, opt_state, key, jnp.asarray(seg.start, jnp.int32),
+                seg.num_steps, comm=comm)
+        else:
+            params, opt_state, key, losses = runner(
+                params, opt_state, key, jnp.asarray(seg.start, jnp.int32),
+                seg.num_steps)
         if capture_at == seg.stop:
-            captured = {"params": params, "opt_state": opt_state,
-                        "key": key, "step": seg.stop}
+            captured = _snapshot(seg.stop)
         if seg.eval_after:
             hooks.on_eval(params, seg.stop - 1, losses)
 

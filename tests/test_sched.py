@@ -144,6 +144,55 @@ def test_ledger_gossip_and_label_accounting():
     assert led.as_dict()["total_bytes"] == led.total_bytes
 
 
+def test_ledger_compressed_and_stale_accounting():
+    """DESIGN.md §9 wire accounting: ``payload_elems`` replaces the raw
+    param count, ``index_bytes`` adds the int32 index rider, and stale
+    senders ship nothing."""
+    topo = Topology.make("ring", 4)
+    dense = sched.gossip_bytes_per_step(topo, None, param_count=1000,
+                                        elem_bytes=4)
+    assert dense.tolist() == [8000] * 4           # deg 2 · 1000 · 4
+    comp = sched.gossip_bytes_per_step(topo, None, param_count=1000,
+                                       elem_bytes=4, payload_elems=10,
+                                       index_bytes=4)
+    assert comp.tolist() == [160] * 4             # deg 2 · 10 · (4+4)
+    assert dense.sum() / comp.sum() == 50.0       # top-k 1% → 50×
+    stale = np.array([False, False, True, False])
+    st = sched.gossip_bytes_per_step(topo, None, 1000, 4, payload_elems=10,
+                                     index_bytes=4, stale=stale)
+    # the straggler ships nothing; its neighbours still send to it
+    assert st.tolist() == [160, 160, 0, 160]
+
+
+def test_ledger_mixed_traffic_per_round():
+    """Gossip and label traffic landing in the *same* round bucket with a
+    compressed wire: totals decompose exactly and per-round rows stay
+    ordered with both kinds accounted."""
+    topo = Topology.make("ring", 4)
+    comp = sched.gossip_bytes_per_step(topo, None, param_count=1000,
+                                       elem_bytes=4, payload_elems=10,
+                                       index_bytes=4)
+    led = sched.CommLedger(4, meta={"compression": "topk"})
+    led.log_gossip(0, 0, 6, comp)                 # round 0: 6 steps
+    lab = np.array([300.0, 0.0, 200.0, 100.0])
+    led.log_labels(1, 6, lab)                     # the round fires at 6
+    led.log_gossip(1, 6, 10, comp)                # round 1: 4 more steps
+    led.log_labels(2, 10, lab * 2)
+    assert led.total_bytes == led.gossip_bytes + led.label_bytes
+    assert led.gossip_bytes == 160 * 4 * (6 + 4)
+    assert led.label_bytes == 600.0 + 1200.0
+    rows = led.per_round()
+    assert [r["round"] for r in rows] == [0, 1, 2]
+    # round 1 holds BOTH its label payload and the post-round gossip
+    assert rows[1]["labels_bytes"] == 600.0
+    assert rows[1]["gossip_bytes"] == 160 * 4 * 4
+    assert rows[1]["steps"] == 4
+    # round 2 is labels-only (schedule ended at the round step)
+    assert rows[2]["gossip_bytes"] == 0.0
+    assert rows[2]["labels_bytes"] == 1200.0
+    assert rows[2]["labels_per_node"] == (lab * 2).tolist()
+
+
 def test_wire_elem_bytes():
     assert sched.wire_elem_bytes("float32", "bfloat16") == 4
     assert sched.wire_elem_bytes("native", "bfloat16") == 2
@@ -331,10 +380,10 @@ def test_mixed_churn_modes_coexist():
     seen = []
 
     class Spy(sched.FederationHooks):
-        def on_topology(self, topology, active, frozen):
+        def on_topology(self, topology, active, frozen, stale):
             seen.append(("topo", active.copy(), frozen.copy()))
 
-        def runner(self, topology, active, frozen):
+        def runner(self, topology, active, frozen, stale):
             seen.append(("runner", active.copy(), frozen.copy()))
             return lambda p, o, k, s0, ns: (p, o, k, np.zeros(ns))
 
