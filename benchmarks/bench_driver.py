@@ -476,6 +476,65 @@ def _lm_shard_comp_cell():
     return _median_rates(drivers), int(mesh.shape["node"])
 
 
+def _lm_mesh_shapes_cell():
+    """2-D federation-mesh cells (DESIGN.md §10): the plain LM shard
+    workload at every mesh factoring the device pool admits — e.g. 8
+    devices split 8×1 (pure node), 4×2, and 2×4 (node × model). Each
+    cell is labeled with its ``"mesh"`` shape string so the regression
+    guard keys them as distinct cells, and records the gossip
+    ``bytes_per_step``, which must be *identical* across model-parallel
+    widths: gossip ppermutes over the node axis only, so sharding a
+    replica over more devices changes where bytes live, never how many
+    cross the node graph."""
+    from repro import sched
+    from repro.launch.mesh import make_federation_mesh
+    from repro.launch.sharding import federation_shardings
+
+    n, B, S = NODES, 8, 32
+    cfg = get_config("qwen3-1.7b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    model = build_model(cfg)
+    topo = Topology.make("ring", n)
+    algo = make_algorithm("qg-dsgdm-n", momentum=0.9, weight_decay=1e-4)
+    tokens, topics = make_lm_data(cfg.vocab_size, S + 1, 512, seed=4)
+    parts = dirichlet_partition(topics, n, 0.1, np.random.default_rng(4))
+    params = stack_params(model.init(jax.random.PRNGKey(0)), n)
+    sampler = driver.make_lm_sampler(driver.pad_partitions(parts), tokens, B)
+    lr_fn = lambda s: jnp.asarray(0.1, jnp.float32)       # noqa: E731
+    nparams = sum(x.size for x in jax.tree.leaves(params)) // n
+    wire = float(sched.ledger.gossip_bytes_per_step(
+        topo, None, nparams, 4).sum())
+    k = jax.random.PRNGKey(0)
+    s0 = jnp.asarray(0, jnp.int32)
+
+    ndev = len(jax.devices())
+    drivers, labels = {}, {}
+    for mp in (1, 2, 4):
+        if mp > ndev:
+            continue
+        mesh = make_federation_mesh(n, mp)
+        shape = dict(mesh.shape)
+        label = f"{shape['node']}x{shape.get('model', 1)}"
+        if label in labels.values():
+            continue                       # tiny pools collapse shapes
+        step = driver.make_shard_step(model, algo, driver.lm_adapter,
+                                      mesh=mesh, topology=topo)
+        runr = driver.make_runner(step, sampler, lr_fn, "shard")
+        p_sh = jax.device_put(params, federation_shardings(params, mesh, n))
+        o_sh = jax.device_put(step.init_opt(params),
+                              federation_shardings(step.init_opt(params),
+                                                   mesh, n))
+
+        def bench(runr=runr, p_sh=p_sh, o_sh=o_sh):
+            jax.block_until_ready(runr(p_sh, o_sh, k, s0, CHUNK)[0])
+
+        drivers[mp] = bench
+        labels[mp] = label
+    rates = _median_rates(drivers)
+    return {labels[mp]: us for mp, us in rates.items()}, wire
+
+
 def run(out_path: str | None = "BENCH_driver.json"):
     csv, cells = [], []
     for path, cell_fn in (("sim", _sim_cell), ("lm", _lm_cell)):
@@ -523,6 +582,17 @@ def run(out_path: str | None = "BENCH_driver.json"):
             csv.append((f"driver/{phase}_shard_vs_stacked@{devices}dev",
                         0.0,
                         f"{rates[stacked_mode] / rates['shard']:.2f}x"))
+    # 2-D mesh-shape cells (node × model factorings of the device pool);
+    # gossip bytes are mesh-shape-invariant — the guard watches that too
+    mesh_rates, mesh_wire = _lm_mesh_shapes_cell()
+    for label, us in mesh_rates.items():
+        csv.append((f"driver/lm_plain_shard_mesh[{label}]", round(us, 1),
+                    f"{1e6 / us:.1f} steps/s, "
+                    f"{mesh_wire / 1e3:.1f} KB/step gossip"))
+        cells.append({"path": "lm", "kd": False, "mode": "shard",
+                      "mesh": label, "us_per_step": round(us, 1),
+                      "steps_per_sec": round(1e6 / us, 2),
+                      "bytes_per_step": round(mesh_wire, 1)})
     # sharded compressed-gossip cells (top-k 1%, sync + delayed)
     shc_rates, devices = _lm_shard_comp_cell()
     for key, us in shc_rates.items():

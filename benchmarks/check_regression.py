@@ -10,8 +10,12 @@ count means the sparsifier stopped sparsifying. Metrics present in only one of
 {fresh, committed} are *always* skipped (reported, never failed) —
 benches are allowed to grow cells, and cells keyed by environment labels
 (e.g. the sharded driver's ``devices=8`` rows, measured under a forced
-8-device mesh) legitimately exist on one side when the other ran in a
-different environment. The only hard failure besides a real slowdown is
+8-device mesh, or the 2-D federation-mesh rows keyed by their
+``mesh=4x2``-style shape string) legitimately exist on one side when
+the other ran in a different environment; a shape the current pool
+can't factor simply doesn't appear. String fields like ``mesh`` join a
+cell's name automatically — no schema change needed here when a bench
+grows a new label column. The only hard failure besides a real slowdown is
 the two documents sharing *no* metrics at all before ``--include``
 filtering — that means schema/label drift left the guard checking
 nothing; an ``--include`` regex that happens to match only one-sided

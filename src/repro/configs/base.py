@@ -129,8 +129,13 @@ class ModelConfig:
     # numerics / distribution
     dtype: str = "bfloat16"
     remat: bool = True
-    remat_policy: str = "full"          # full | dots (save matmul outputs —
-                                        # avoids recomputing TP all-reduces)
+    remat_policy: str = "nothing"       # what jax.checkpoint saves per layer:
+                                        # "nothing" (recompute all — min HBM),
+                                        # "dots" (save matmul outputs — avoids
+                                        # recomputing TP all-reduces),
+                                        # "everything" (remat as a no-op).
+                                        # "full" is a legacy alias of
+                                        # "nothing".
     scan_layers: bool = True
     node_scope: str = "replica"         # gossip node = data replica | "pod"
                                         # ("pod" for models too large to hold

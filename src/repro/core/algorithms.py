@@ -155,14 +155,22 @@ def make_qg_dsgdm_n(momentum: float = 0.9, weight_decay: float = 1e-4,
                                       + wd * p.astype(jnp.float32)) ** 2)
                 if wd else jnp.sum(g.astype(jnp.float32) ** 2),
                 grads, params)
-            total = sum(jax.tree.leaves(sq))
             # the norm spans the whole node-stacked tree; under shard_map
             # (mix.axis_name set) the node axis is a mesh axis, so the
             # local-block sum completes across devices via psum — keeps
-            # sharded trajectories equal to the node-stacked runner's
-            axis = getattr(mix, "axis_name", None)
-            if axis is not None:
-                total = jax.lax.psum(total, axis)
+            # sharded trajectories equal to the node-stacked runner's.
+            # On the 2-D federation mesh the reduction is leaf-dependent
+            # (model-sharded leaves also reduce over "model"; replicated
+            # leaves must not be double-counted), so a mixer may supply
+            # the whole reduction as reduce_tree_sum.
+            reduce = getattr(mix, "reduce_tree_sum", None)
+            if reduce is not None:
+                total = reduce(sq)
+            else:
+                total = sum(jax.tree.leaves(sq))
+                axis = getattr(mix, "axis_name", None)
+                if axis is not None:
+                    total = jax.lax.psum(total, axis)
             scale = 1.0 / (jnp.sqrt(total) + eps)
         else:
             scale = 1.0

@@ -246,21 +246,41 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
     :func:`make_step`'s stateful contract (``step.comm``,
     ``step.init_comm``); the comm pytree shards its node axis like the
     params (``init_comm`` runs *outside* shard_map on global arrays —
-    device_put its result with ``node_stacked_shardings``).
+    device_put its result with ``launch.sharding.federation_shardings``).
+
+    **2-D federation mesh** (DESIGN.md §10): when ``mesh`` carries a
+    non-trivial ``"model"`` axis (``launch.mesh.make_federation_mesh``),
+    params / optimizer state / comm store FSDP-style model-axis shards
+    (``launch.sharding.federation_specs``). The body all-gathers the
+    model-sharded weight leaves back to full width for the forward /
+    backward, slices the grads back to the local shard, and runs the
+    algorithm update + gossip on the *sharded* trees — elementwise
+    updates and the linear node-axis mix commute with the slicing, so
+    the 2-D trajectory equals the 1-D shard run exactly. All gossip
+    collectives stay on the node axis (model peers hold shards of the
+    *same* replica); ``psum`` touches the model axis only for true
+    replica-wide reductions (qg-dsgdm-n grad norms — see the mixer's
+    ``reduce_tree_sum`` hook). Compressed gossip wraps the mixer in
+    ``mixing.make_model_sharded_mixer`` so payload top-k still sees full
+    delta rows.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.core import mixing
-    from repro.launch.sharding import node_stacked_specs
+    from repro.launch.sharding import (federation_specs, gather_model_tree,
+                                       node_stacked_specs, slice_model_tree,
+                                       spec_model_dim)
 
     n = topology.n
     size = mesh.shape[axis]
+    model_axis = "model"
+    model_size = dict(mesh.shape).get(model_axis, 1)
     if n % size != 0:
         raise ValueError(
             f"shard driver needs the node count ({n}) divisible by the "
             f"mesh {axis!r} axis ({size}); build the mesh with "
-            "launch.mesh.make_node_mesh")
+            "launch.mesh.make_federation_mesh")
     if getattr(algo, "needs_topology", False):
         raise ValueError(
             f"algorithm {algo.name!r} carries per-edge state and cannot "
@@ -275,26 +295,65 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
     node_loss = loss_adapter(model)
     grad_fn = jax.vmap(jax.value_and_grad(node_loss))
 
-    if getattr(mixer, "stateful", False):
-        def comm_body(params, opt_state, batch, lr, comm):
-            losses, grads = grad_fn(params, batch)
-            bound = mixer.bind(comm)
-            params, opt_state = algo.step(params, grads, opt_state, lr,
-                                          bound)
-            comm = bound.finalize()
-            loss = jax.lax.psum(jnp.sum(losses), axis) / n
-            return params, opt_state, loss, comm
+    def specs_of(tree):
+        return federation_specs(tree, n, mesh, axis)
 
+    def _leaf_model_dims(p_specs):
+        return [spec_model_dim(s) for s in jax.tree.leaves(
+            p_specs, is_leaf=lambda s: isinstance(s, P))]
+
+    def _make_reduce(model_dims):
+        # replica-wide tree-sum for qg-dsgdm-n's grad norm: model-sharded
+        # leaf sums are partial (complete over "model" too); replicated
+        # leaves appear on every model peer (node axis only, or they
+        # would be counted model_size times)
+        def reduce_tree_sum(sq):
+            leaves = jax.tree.leaves(sq)
+            sh = [v for v, d in zip(leaves, model_dims) if d is not None]
+            rep = [v for v, d in zip(leaves, model_dims) if d is None]
+            total = 0.0
+            if sh:
+                total = total + jax.lax.psum(sum(sh), (axis, model_axis))
+            if rep:
+                total = total + jax.lax.psum(sum(rep), (axis,))
+            return total
+        return reduce_tree_sum
+
+    if getattr(mixer, "stateful", False):
         def comm_step(params, opt_state, batch, lr, comm):
+            p_specs = specs_of(params)
+            model_dims = _leaf_model_dims(p_specs)
+            step_mixer = mixer
+            if model_size > 1 and compression is not None:
+                # payload selection must see full delta rows (see
+                # make_model_sharded_mixer); the uncompressed delayed
+                # mixer is per-coordinate linear and runs shard-natively
+                step_mixer = mixing.make_model_sharded_mixer(
+                    mixer, model_dims, model_size, model_axis)
+
+            def comm_body(params, opt_state, batch, lr, comm):
+                full = (gather_model_tree(params, p_specs, model_axis)
+                        if model_size > 1 else params)
+                losses, grads = grad_fn(full, batch)
+                if model_size > 1:
+                    grads = slice_model_tree(grads, p_specs, model_size,
+                                             model_axis)
+                bound = step_mixer.bind(comm)
+                if model_size > 1:
+                    bound.reduce_tree_sum = _make_reduce(model_dims)
+                params, opt_state = algo.step(params, grads, opt_state, lr,
+                                              bound)
+                comm = bound.finalize()
+                loss = jax.lax.psum(jnp.sum(losses), axis) / n
+                return params, opt_state, loss, comm
+
             sharded = shard_map(
                 comm_body, mesh=mesh,
-                in_specs=(node_stacked_specs(params, n, axis),
-                          node_stacked_specs(opt_state, n, axis),
+                in_specs=(p_specs, specs_of(opt_state),
                           node_stacked_specs(batch, n, axis), P(),
-                          node_stacked_specs(comm, n, axis)),
-                out_specs=(node_stacked_specs(params, n, axis),
-                           node_stacked_specs(opt_state, n, axis), P(),
-                           node_stacked_specs(comm, n, axis)),
+                          specs_of(comm)),
+                out_specs=(p_specs, specs_of(opt_state), P(),
+                           specs_of(comm)),
                 check_rep=False)
             return sharded(params, opt_state, batch, lr, comm)
 
@@ -303,20 +362,28 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
         comm_step.init_opt = algo.init
         return comm_step
 
-    def body(params, opt_state, batch, lr):
-        losses, grads = grad_fn(params, batch)
-        params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
-        loss = jax.lax.psum(jnp.sum(losses), axis) / n
-        return params, opt_state, loss
-
     def step(params, opt_state, batch, lr):
+        p_specs = specs_of(params)
+        model_dims = _leaf_model_dims(p_specs)
+
+        def body(params, opt_state, batch, lr):
+            full = (gather_model_tree(params, p_specs, model_axis)
+                    if model_size > 1 else params)
+            losses, grads = grad_fn(full, batch)
+            if model_size > 1:
+                grads = slice_model_tree(grads, p_specs, model_size,
+                                         model_axis)
+                mixer.reduce_tree_sum = _make_reduce(model_dims)
+            params, opt_state = algo.step(params, grads, opt_state, lr,
+                                          mixer)
+            loss = jax.lax.psum(jnp.sum(losses), axis) / n
+            return params, opt_state, loss
+
         sharded = shard_map(
             body, mesh=mesh,
-            in_specs=(node_stacked_specs(params, n, axis),
-                      node_stacked_specs(opt_state, n, axis),
+            in_specs=(p_specs, specs_of(opt_state),
                       node_stacked_specs(batch, n, axis), P()),
-            out_specs=(node_stacked_specs(params, n, axis),
-                       node_stacked_specs(opt_state, n, axis), P()),
+            out_specs=(p_specs, specs_of(opt_state), P()),
             check_rep=False)
         return sharded(params, opt_state, batch, lr)
 

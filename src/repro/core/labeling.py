@@ -62,7 +62,9 @@ import jax.numpy as jnp
 from repro.configs.base import IDKDConfig
 from repro.core import distill, ood
 from repro.core.topology import Topology
-from repro.kernels.head_select import head_select, head_select_ref
+from repro.kernels.head_select import (NEG_INF, head_select, head_select_ref,
+                                       head_select_stats_ref,
+                                       merge_head_stats)
 from repro.kernels.msp_select import msp_select, msp_select_ref
 
 BACKENDS = ("dense", "fused", "sparse")
@@ -249,6 +251,68 @@ def _head_pass(model, params_i, x, cfg: IDKDConfig, k: int):
     return conf, vals.reshape(lead + (k,)), idx.reshape(lead + (k,))
 
 
+def _vocab_sharded_head_pass(model, params_i, x, cfg: IDKDConfig, k: int,
+                             model_axis: str, model_size: int):
+    """:func:`_head_pass` on the 2-D federation mesh (DESIGN.md §10):
+    each model-axis shard runs the fused select over its own vocab slice
+    — ``O(mb · C / model_size)`` scores, never the full row — and the
+    per-shard online-softmax stats ``(m, z)`` + top-k raw logits merge
+    across the model axis with the kernel's own cross-tile streaming
+    math (``merge_head_stats``). The finalizer (detector confidence,
+    temperature renormalization) runs only on the merged stats, so the
+    result matches the unsharded pass: indices exactly, conf/vals to
+    float tolerance.
+
+    The vocab slice is cut here (pad C to ``model_size`` equal slices;
+    padded columns get a ``NEG_INF`` bias so they self-mask out of both
+    ``z`` and the top-k) rather than read from the storage sharding, so
+    ragged ``C % model_size != 0`` heads and replicated small heads work
+    identically. Runs inside ``shard_map`` (under the node-block vmap);
+    all collectives are over ``model_axis`` only.
+    """
+    feats, _ = model.forward_features(params_i, {model.input_key: x})
+    w, b = model.head_params(params_i)
+    C = w.shape[-1]
+    w_sh = -(-C // model_size)
+    pad_c = w_sh * model_size - C
+    if b is None:
+        b = jnp.zeros((C,), jnp.float32)
+    if pad_c:
+        w = jnp.pad(w, ((0, 0), (0, pad_c)))
+        b = jnp.pad(b.astype(jnp.float32), (0, pad_c),
+                    constant_values=NEG_INF)
+    j = jax.lax.axis_index(model_axis)
+    w_loc = jax.lax.dynamic_slice_in_dim(w, j * w_sh, w_sh, axis=1)
+    b_loc = jax.lax.dynamic_slice_in_dim(b, j * w_sh, w_sh, axis=0)
+    k_loc = min(k, w_sh)
+    lead = feats.shape[:-1]                                # (mb,) or (mb, S)
+    flat = feats.reshape(-1, feats.shape[-1])
+    if jax.default_backend() == "tpu":
+        block = cfg.select_block_rows
+        pad = (-flat.shape[0]) % block
+        n_rows = flat.shape[0]
+        if pad:
+            flat = jnp.pad(flat, ((0, pad), (0, 0)))
+        ms, zs, tv, ti = head_select(
+            flat, w_loc, b_loc, temperature=cfg.temperature, k=k_loc,
+            block_rows=block, detector=cfg.detector, raw_stats=True)
+        ms, zs = ms[:n_rows], zs[:n_rows]
+        tv, ti = tv[:n_rows], ti[:n_rows]
+    else:
+        ms, zs, tv, ti = head_select_stats_ref(flat, w_loc, b_loc, k=k_loc)
+    ti = ti + j * w_sh                                     # global vocab idx
+    conf, vals, idx = merge_head_stats(
+        jax.lax.all_gather(ms, model_axis),
+        jax.lax.all_gather(zs, model_axis),
+        jax.lax.all_gather(tv, model_axis),
+        jax.lax.all_gather(ti, model_axis),
+        temperature=cfg.temperature, k=k, detector=cfg.detector)
+    conf = conf.reshape(lead)
+    if conf.ndim == 2:                                     # (mb, S) tokens
+        conf = conf.mean(-1)
+    return conf, vals.reshape(lead + (k,)), idx.reshape(lead + (k,))
+
+
 def _head_width(model, params) -> int:
     """Class/vocab count C from the head shape (no compute — eval_shape
     on one node's param slice)."""
@@ -271,16 +335,18 @@ def _chunk_public(public_x, microbatch: int):
     return pub.reshape((num_chunks, mb) + pub.shape[1:]), P, mb
 
 
-def _stream_public(model, params, chunks, P: int, cfg: IDKDConfig, k: int):
+def _stream_public(model, params, chunks, P: int, cfg: IDKDConfig, k: int,
+                   head_pass=_head_pass):
     """Scan the chunked public set through the fused head pass for a
     (possibly local) block of nodes; accumulate only (conf, vals, idx).
+    ``head_pass`` swaps in the vocab-sharded pass on the 2-D mesh.
     """
     L = jax.tree.leaves(params)[0].shape[0]
 
     def one_chunk(xc):                                     # (mb, ...)
         xb = jnp.broadcast_to(xc[None], (L,) + xc.shape)
         return jax.vmap(
-            lambda p, x: _head_pass(model, p, x, cfg, k))(params, xb)
+            lambda p, x: head_pass(model, p, x, cfg, k))(params, xb)
 
     _, (conf, vals, idx) = jax.lax.scan(
         lambda carry, xc: (carry, one_chunk(xc)), None, chunks)
@@ -293,11 +359,12 @@ def _stream_public(model, params, chunks, P: int, cfg: IDKDConfig, k: int):
     return conf, distill.SparseLabels(vals, idx)
 
 
-def _stream_val_conf(model, params, val_x, cfg: IDKDConfig):
+def _stream_val_conf(model, params, val_x, cfg: IDKDConfig,
+                     head_pass=_head_pass):
     """Per-node detector confidence on each node's own (small) val set,
     through the same fused head pass (k=1: only conf is consumed)."""
     return jax.vmap(
-        lambda p, x: _head_pass(model, p, x, cfg, 1)[0])(
+        lambda p, x: head_pass(model, p, x, cfg, 1)[0])(
             params, jnp.asarray(val_x))
 
 
@@ -576,27 +643,49 @@ def shard_streaming_label_round(model, params, public_x, val_x,
     :func:`shard_label_round`, only the top-k payload crosses the node
     axis (boundary-row ppermutes on rings, all_gather on complete
     graphs); churn masks remain unsupported in shard mode.
+
+    On a 2-D ``("node", "model")`` federation mesh (``launch.mesh.
+    make_federation_mesh``) the params arrive model-sharded
+    (``launch.sharding.federation_specs``): the body all-gathers the
+    weight leaves over the model axis for ``forward_features`` and runs
+    the **vocab-sharded** head pass (:func:`_vocab_sharded_head_pass`) —
+    each model shard scores only its own vocab slice and the stats merge
+    across the model axis with the kernel's streaming math. The label
+    exchange still moves top-k payloads over the node axis only, so
+    label wire bytes are unchanged by model parallelism (DESIGN.md §10).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    from repro.launch.sharding import node_stacked_specs
+    from repro.launch.sharding import federation_specs, gather_model_tree
 
     n = jax.tree.leaves(params)[0].shape[0]
     size, ring, full = _shard_layout(topology, n, mesh, axis)
+    model_axis = "model"
+    model_size = dict(mesh.shape).get(model_axis, 1)
     C = _head_width(model, params)
     k = min(cfg.label_topk or DEFAULT_TOPK, C)
     chunks, P_pub, _ = _chunk_public(public_x, cfg.stream_microbatch)
     val_x = jnp.asarray(val_x)
     spec = P(axis)
+    p_specs = federation_specs(params, n, mesh, axis)
+    if model_size > 1:
+        def head_pass(model, p, x, cfg, k):
+            return _vocab_sharded_head_pass(model, p, x, cfg, k,
+                                            model_axis, model_size)
+    else:
+        head_pass = _head_pass
 
     def body(p_local, chunks_rep, val_local):
+        if model_size > 1:
+            p_local = gather_model_tree(p_local, p_specs, model_axis)
         # ---- stream / score / calibrate / select: shard-local
         conf_pub, sp = _stream_public(model, p_local, chunks_rep, P_pub,
-                                      cfg, k)
+                                      cfg, k, head_pass)
         if filter_ood:
             thresholds = calibrate(
-                _stream_val_conf(model, p_local, val_local, cfg), conf_pub)
+                _stream_val_conf(model, p_local, val_local, cfg, head_pass),
+                conf_pub)
             id_mask = conf_pub > thresholds[:, None]
         else:
             thresholds = jnp.zeros((conf_pub.shape[0],), jnp.float32)
@@ -609,7 +698,7 @@ def shard_streaming_label_round(model, params, public_x, val_x,
 
     vals, idx, w, id_mask, thresholds = shard_map(
         body, mesh=mesh,
-        in_specs=(node_stacked_specs(params, n, axis), P(), spec),
+        in_specs=(p_specs, P(), spec),
         out_specs=(spec, spec, spec, spec, spec), check_rep=False)(
             params, chunks, val_x)
     return SparseHomogenizedSet(distill.SparseLabels(vals, idx), w,

@@ -953,6 +953,67 @@ def make_compressed_ppermute_mixer(axis_names: Sequence[str],
     return mix
 
 
+def make_model_sharded_mixer(inner, model_dims, model_size: int,
+                             model_axis: str = "model") -> Mixer:
+    """2-D federation-mesh adapter for the stateful *compressed* ppermute
+    mixer (DESIGN.md §10).
+
+    On the ``("node", "model")`` mesh each device holds only a model-axis
+    slice of every sharded param leaf, but the CHOCO payload selection
+    (``_select_payload`` top-k / random-k of ``x − x̂``) must see the
+    **full** delta row to pick the same coordinates as the 1-D run — a
+    per-shard top-k is a different compressor and breaks the trajectory
+    oracle. So per leaf: all-gather ``x`` over the model axis on its
+    sharded dim, run the unchanged 1-D ``leaf_fn`` on full rows (the comm
+    state ``x̂``/``hfwd``/``hbwd``/``hsum`` stays full-width, replicated
+    over the model axis — a deliberate memory trade, noted in §10), then
+    slice the mixed row back to this shard. Every model peer computes
+    identical payloads and estimate updates from identical inputs, so
+    the comm state is genuinely replicated and the wire bytes per *node*
+    are unchanged by model parallelism.
+
+    ``model_dims``: per-leaf (params ``jax.tree.leaves`` order) index of
+    the model-sharded dim, or None for model-replicated leaves — from
+    ``launch.sharding.spec_model_dim`` over the federation spec tree.
+    The uncompressed delayed mixer (``kind == "none"``) needs no adapter:
+    its ``prev`` state is params-shaped and its mix is linear per
+    coordinate, so it runs shard-natively on the sliced leaves.
+    """
+    dims = list(model_dims)
+
+    def _wrap(fn):
+        def wrapped(x, state, i, keys):
+            d = dims[i]
+            if d is None:
+                return fn(x, state, i, keys)
+            xg = jax.lax.all_gather(x, model_axis, axis=d, tiled=True)
+            y, new_state = fn(xg, state, i, keys)
+            j = jax.lax.axis_index(model_axis)
+            width = y.shape[d] // model_size
+            return (jax.lax.dynamic_slice_in_dim(y, j * width, width,
+                                                 axis=d), new_state)
+        return wrapped
+
+    def bind(comm):
+        bound = inner.bind(comm)
+        bound._leaf_fn = _wrap(bound._leaf_fn)
+        return bound
+
+    def mix(tree: PyTree) -> PyTree:
+        raise TypeError(
+            "stateful gossip mixer must be bound to its comm state: "
+            "mix.bind(comm)(tree) — core.driver.make_shard_step does this "
+            "inside its shard_map body")
+
+    mix.stateful = True
+    mix.init_state = inner.init_state
+    mix.bind = bind
+    mix.compression = getattr(inner, "compression", None)
+    mix.gossip = getattr(inner, "gossip", "sync")
+    mix.axis_name = inner.axis_name
+    return mix
+
+
 def consensus_distance(stacked: PyTree) -> jax.Array:
     """Mean L2 distance of node params from the node-average (diagnostic)."""
     def per_leaf(x):

@@ -94,6 +94,7 @@ class _SimFederation(sched.CompiledFederationHooks):
         self.compression = sim.compression
         self.gossip = sim.gossip            # re-set per run by init_comm
         self._node_mesh = sim.node_mesh     # shard mode: one shared mesh
+        self.model_parallel = sim.model_parallel
         self.priv_parts = driver.pad_partitions(sim.parts)
         self.plain_sampler = driver.make_classification_sampler(
             self.priv_parts, sim.data.train_x, sim.data.train_y,
@@ -198,7 +199,7 @@ class DecentralizedSimulator:
                  data: ClassificationData, public_x: Optional[np.ndarray] = None,
                  kd_mode: Optional[str] = None, eval_every: int = 50,
                  eval_batches: int = 4, driver_mode: str = "auto",
-                 wire_dtype: str = "float32"):
+                 wire_dtype: str = "float32", model_parallel: int = 1):
         self.mcfg = model_cfg
         self.tcfg = train_cfg
         self.data = data
@@ -208,6 +209,13 @@ class DecentralizedSimulator:
         self.eval_batches = eval_batches
         self.driver_mode = driver.resolve_runner_mode(
             driver_mode, model_cfg.arch_type, model_cfg.conv_backend)
+        # shard mode only: width of the federation mesh's "model" axis
+        # (1 = the 1-D node mesh; DESIGN.md §10)
+        self.model_parallel = model_parallel
+        if model_parallel > 1 and self.driver_mode != "shard":
+            raise ValueError(
+                "model_parallel > 1 shards each replica over the 2-D "
+                "federation mesh and needs driver_mode='shard'")
         # paper-faithful full-precision mixing is the simulator default;
         # the configured value reaches the mixer, the ledger, and the
         # result metadata alike (no more pinned "float32" anywhere)
@@ -266,8 +274,8 @@ class DecentralizedSimulator:
                     "across the node axis; set IDKDConfig.label_backend="
                     "'sparse' (or 'fused'), or use driver_mode='scan'/"
                     "'host' for the dense oracle")
-            from repro.launch.mesh import make_node_mesh
-            self.node_mesh = make_node_mesh(n)
+            from repro.launch.mesh import make_federation_mesh
+            self.node_mesh = make_federation_mesh(n, self.model_parallel)
 
         rng = np.random.default_rng(train_cfg.seed)
         if train_cfg.algorithm == "centralized":
@@ -431,13 +439,13 @@ class DecentralizedSimulator:
             resume_step = 0
         if self.driver_mode == "shard":
             # churn / unsupported rewires fail here, before any training
-            sched.validate_shard_schedule(schedule, n)
-            from repro.launch.sharding import node_stacked_shardings
+            sched.validate_shard_schedule(schedule, n, self.model_parallel)
+            from repro.launch.sharding import federation_shardings
             params = jax.device_put(
-                params, node_stacked_shardings(params, self.node_mesh, n))
+                params, federation_shardings(params, self.node_mesh, n))
             opt_state = jax.device_put(
                 opt_state,
-                node_stacked_shardings(opt_state, self.node_mesh, n))
+                federation_shardings(opt_state, self.node_mesh, n))
 
         proto = self.model.init(jax.random.PRNGKey(0))
         nparams = sum(x.size for x in jax.tree.leaves(proto))

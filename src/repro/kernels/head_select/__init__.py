@@ -1,2 +1,5 @@
+from repro.kernels.head_select.kernel import NEG_INF  # noqa: F401
 from repro.kernels.head_select.ops import head_select  # noqa: F401
-from repro.kernels.head_select.ref import head_select_ref  # noqa: F401
+from repro.kernels.head_select.ref import (head_select_ref,  # noqa: F401
+                                           head_select_stats_ref,
+                                           merge_head_stats)

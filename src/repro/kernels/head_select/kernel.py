@@ -43,10 +43,14 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _head_kernel(h_ref, w_ref, b_ref, conf_ref, vals_ref, idx_ref,
-                 m_scr, z_scr, tv_scr, ti_scr, *,
+def _head_kernel(h_ref, w_ref, b_ref, *refs,
                  temperature: float, k: int, detector: str,
-                 block_c: int, num_c_blocks: int, num_classes: int):
+                 block_c: int, num_c_blocks: int, num_classes: int,
+                 raw_stats: bool = False):
+    # outputs: (conf, vals, idx) or — raw_stats, for the model-axis
+    # merge — (m, z, tv, ti); the last four refs are always the
+    # (m, z, tv, ti) VMEM scratch carry.
+    out_refs, (m_scr, z_scr, tv_scr, ti_scr) = refs[:-4], refs[-4:]
     ci = pl.program_id(1)
 
     @pl.when(ci == 0)
@@ -100,6 +104,18 @@ def _head_kernel(h_ref, w_ref, b_ref, conf_ref, vals_ref, idx_ref,
 
     @pl.when(ci == num_c_blocks - 1)
     def _finalize():
+        if raw_stats:
+            # vocab-sharded path: ship the raw carry; the caller merges
+            # (m, z) and the top-k logits across model-axis shards with
+            # the same streaming math (ref.merge_head_stats) and only
+            # then applies the detector / temperature finalizer.
+            m_ref, z_ref, tv_ref, ti_ref = out_refs
+            m_ref[...] = m_scr[...]
+            z_ref[...] = z_scr[...]
+            tv_ref[...] = tv_scr[...]
+            ti_ref[...] = ti_scr[...]
+            return
+        conf_ref, vals_ref, idx_ref = out_refs
         z = jnp.maximum(z_scr[...], 1e-30)
         if detector == "energy":
             conf_ref[...] = m_scr[...] + jnp.log(z)
@@ -114,9 +130,15 @@ def _head_kernel(h_ref, w_ref, b_ref, conf_ref, vals_ref, idx_ref,
 
 def head_select_pallas(hidden, w, bias, *, temperature: float, k: int = 8,
                        block_rows: int = 8, block_c: int = 512,
-                       interpret: bool = True, detector: str = "msp"):
+                       interpret: bool = True, detector: str = "msp",
+                       raw_stats: bool = False):
     """hidden (N, D) + head (D, C) [+ bias (C,)] ->
-    (conf (N,), vals (N, k), idx (N, k)) with the vocab axis tiled."""
+    (conf (N,), vals (N, k), idx (N, k)) with the vocab axis tiled.
+
+    ``raw_stats=True`` returns the pre-finalizer carry
+    ``(m (N,), z (N,), tv (N, k), ti (N, k))`` instead — the per-shard
+    half of the vocab-sharded 2-D label round, merged across the model
+    axis by ``ref.merge_head_stats``."""
     N, D = hidden.shape
     C = w.shape[1]
     assert w.shape[0] == D, (w.shape, hidden.shape)
@@ -136,7 +158,25 @@ def head_select_pallas(hidden, w, bias, *, temperature: float, k: int = 8,
 
     kernel = functools.partial(
         _head_kernel, temperature=temperature, k=k, detector=detector,
-        block_c=block_c, num_c_blocks=num_c_blocks, num_classes=C)
+        block_c=block_c, num_c_blocks=num_c_blocks, num_classes=C,
+        raw_stats=raw_stats)
+    row_spec = pl.BlockSpec((block_rows,), lambda i, c: (i,))
+    topk_spec = pl.BlockSpec((block_rows, k), lambda i, c: (i, 0))
+    if raw_stats:
+        out_specs = (row_spec, row_spec, topk_spec, topk_spec)
+        out_shape = (
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N, k), jnp.float32),
+            jax.ShapeDtypeStruct((N, k), jnp.int32),
+        )
+    else:
+        out_specs = (row_spec, topk_spec, topk_spec)
+        out_shape = (
+            jax.ShapeDtypeStruct((N,), jnp.float32),
+            jax.ShapeDtypeStruct((N, k), jnp.float32),
+            jax.ShapeDtypeStruct((N, k), jnp.int32),
+        )
     return pl.pallas_call(
         kernel,
         grid=(N // block_rows, num_c_blocks),
@@ -145,16 +185,8 @@ def head_select_pallas(hidden, w, bias, *, temperature: float, k: int = 8,
             pl.BlockSpec((D, block_c), lambda i, c: (0, c)),
             pl.BlockSpec((1, block_c), lambda i, c: (0, c)),
         ],
-        out_specs=(
-            pl.BlockSpec((block_rows,), lambda i, c: (i,)),
-            pl.BlockSpec((block_rows, k), lambda i, c: (i, 0)),
-            pl.BlockSpec((block_rows, k), lambda i, c: (i, 0)),
-        ),
-        out_shape=(
-            jax.ShapeDtypeStruct((N,), jnp.float32),
-            jax.ShapeDtypeStruct((N, k), jnp.float32),
-            jax.ShapeDtypeStruct((N, k), jnp.int32),
-        ),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((block_rows,), jnp.float32),
             pltpu.VMEM((block_rows,), jnp.float32),

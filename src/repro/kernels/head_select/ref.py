@@ -30,3 +30,47 @@ def head_select_ref(hidden, w, bias=None, *, temperature: float, k: int,
     vals, idx = jax.lax.top_k(logits, k)
     vals = jax.nn.softmax(vals / temperature, axis=-1)
     return conf, vals, idx.astype(jnp.int32)
+
+
+def head_select_stats_ref(hidden, w, bias=None, *, k: int):
+    """Pre-finalizer half of :func:`head_select_ref`: raw online-softmax
+    stats and the top-k *logits* over this vocab slice —
+    ``(m (N,), z (N,), tv (N, k), ti (N, k))``. One slice's worth of the
+    vocab-sharded label pass; :func:`merge_head_stats` combines slices.
+    """
+    logits = (hidden.astype(jnp.float32) @ w.astype(jnp.float32))
+    if bias is not None:
+        logits = logits + bias.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    z = jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)
+    tv, ti = jax.lax.top_k(logits, k)
+    return m, z, tv, ti.astype(jnp.int32)
+
+
+def merge_head_stats(ms, zs, tvs, tis, *, temperature: float, k: int,
+                     detector: str = "msp"):
+    """Merge per-vocab-slice stats into the global labeling quantities —
+    the cross-shard form of the kernel's cross-tile streaming merge.
+
+    ``ms/zs (S, N)``, ``tvs (S, N, k_loc)``, ``tis (S, N, k_loc)``
+    stacked over S slices; ``tis`` holds *global* vocab indices. Returns
+    the same ``(conf, vals, idx)`` as :func:`head_select_ref` on the
+    unsharded head: ``m_g = max_s m``, ``z_g = Σ_s z_s·exp(m_s − m_g)``
+    re-bases each slice's normalizer, the global top-k is the top-k of
+    the concatenated per-slice candidates (each slice's true top-k_loc
+    contains every global winner that lives in that slice), and the
+    temperature/detector finalizer runs only here.
+    """
+    m_g = jnp.max(ms, axis=0)                              # (N,)
+    z_g = jnp.maximum(jnp.sum(zs * jnp.exp(ms - m_g[None]), axis=0), 1e-30)
+    if detector == "energy":
+        conf = m_g + jnp.log(z_g)
+    else:
+        conf = 1.0 / z_g
+    S = tvs.shape[0]
+    cv = jnp.concatenate([tvs[s] for s in range(S)], axis=-1)  # (N, S·k_loc)
+    ci = jnp.concatenate([tis[s] for s in range(S)], axis=-1)
+    vals, pos = jax.lax.top_k(cv, k)
+    idx = jnp.take_along_axis(ci, pos, axis=-1)
+    vals = jax.nn.softmax(vals / temperature, axis=-1)
+    return conf, vals, idx.astype(jnp.int32)

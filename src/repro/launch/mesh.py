@@ -29,6 +29,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
 
 
+def _largest_divisor(num_nodes: int, limit: int) -> int:
+    """Largest divisor of ``num_nodes`` that is ≤ ``limit`` (≥ 1)."""
+    return max(d for d in range(1, max(min(limit, num_nodes), 1) + 1)
+               if num_nodes % d == 0)
+
+
 def make_node_mesh(num_nodes: int):
     """1-D mesh for the sharded decentralized driver (``driver_mode=
     "shard"``): one ``"node"`` axis over the largest device count that
@@ -38,14 +44,60 @@ def make_node_mesh(num_nodes: int):
     what the tier-1 suite exercises; CI's forced-8-device job and
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` give the real
     multi-device placement.
+
+    When ``num_nodes`` has no divisor matching the device count (e.g. a
+    prime node count larger than the device pool), the mesh quietly uses
+    fewer devices than available — a warning names the chosen size so a
+    7-node run on 8 devices doesn't silently serialize onto one.
     """
     if num_nodes < 1:
         raise ValueError(f"num_nodes must be >= 1, got {num_nodes}")
     import numpy as np
     devices = jax.devices()
-    size = max(d for d in range(1, min(len(devices), num_nodes) + 1)
-               if num_nodes % d == 0)
+    size = _largest_divisor(num_nodes, len(devices))
+    if size < min(len(devices), num_nodes):
+        import warnings
+        warnings.warn(
+            f"make_node_mesh: num_nodes={num_nodes} has no divisor matching "
+            f"the {len(devices)}-device pool; using a {size}-device node "
+            f"mesh ({num_nodes // size} node(s) per device). Pick a node "
+            "count that divides by the device count to use every device.",
+            RuntimeWarning, stacklevel=2)
     return jax.sharding.Mesh(np.asarray(devices[:size]), ("node",))
+
+
+def make_federation_mesh(num_nodes: int, model_parallel: int = 1):
+    """2-D ``("node", "model")`` mesh for the sharded driver: the node
+    axis places node blocks exactly like :func:`make_node_mesh`; the
+    model axis shards each replica's parameters (FSDP-style, see
+    ``launch/sharding.federation_specs``). ``model_parallel=1`` returns
+    the plain 1-D node mesh — today's path, byte-for-byte.
+
+    The device grid factors as ``(node_size, model_parallel)``:
+    ``node_size`` is the largest divisor of ``num_nodes`` that fits in
+    ``len(devices) // model_parallel``. Gossip collectives run over
+    ``"node"`` only; ``"model"`` carries the all-gathers/psums inside
+    one replica (DESIGN.md §10).
+    """
+    if model_parallel == 1:
+        return make_node_mesh(num_nodes)
+    if model_parallel < 1:
+        raise ValueError(
+            f"model_parallel must be >= 1, got {model_parallel}")
+    if num_nodes < 1:
+        raise ValueError(f"num_nodes must be >= 1, got {num_nodes}")
+    import numpy as np
+    devices = jax.devices()
+    if model_parallel > len(devices):
+        raise ValueError(
+            f"model_parallel={model_parallel} exceeds the device count "
+            f"({len(devices)}) — shrink --model-parallel or force more "
+            "host devices (XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=N)")
+    node_size = _largest_divisor(num_nodes, len(devices) // model_parallel)
+    grid = np.asarray(devices[:node_size * model_parallel]).reshape(
+        node_size, model_parallel)
+    return jax.sharding.Mesh(grid, ("node", "model"))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):

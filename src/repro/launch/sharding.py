@@ -53,6 +53,86 @@ def node_stacked_shardings(tree, mesh, num_nodes: int, axis: str = "node"):
         tree)
 
 
+def _param_skip_dims(path: str, ndim: int) -> int:
+    """Leading dims of a node-stacked param leaf that are NOT shardable
+    weight dims: dim 0 is the node axis; scanned-layer stacking
+    (``layers_*`` subtrees, stacked codebooks) adds one more."""
+    skip = 2 if ("layers_" in path or "embed_cb" in path
+                 or ("head" in path and ndim > 3)) else 1
+    return min(skip, max(ndim - 1, 1))
+
+
+def federation_specs(tree, num_nodes: int, mesh, axis: str = "node"):
+    """Per-leaf PartitionSpec pytree for the 2-D federation mesh
+    (``("node", "model")``, from ``make_federation_mesh``).
+
+    Node-stacked leaves (leading dim == num_nodes) put dim 0 on the node
+    axis and — when the mesh has a non-trivial ``"model"`` axis — shard
+    the largest divisible trailing weight dim over ``"model"`` (FSDP-
+    style storage; for embedding/LM-head leaves the vocab dim is the
+    largest, so they come out vocab-sharded). Scalars, norms, biases and
+    non-node-stacked leaves replicate beyond the node axis. On a 1-D
+    node mesh this reduces exactly to ``node_stacked_specs``.
+    """
+    model_size = dict(mesh.shape).get("model", 1)
+    if model_size <= 1:
+        return node_stacked_specs(tree, num_nodes, axis)
+
+    def one(path, leaf):
+        if getattr(leaf, "ndim", 0) < 1 or leaf.shape[0] != num_nodes:
+            return P()
+        ps = _path_str(path)
+        return leaf_spec(ps, leaf.shape, mesh, (axis,), "replica",
+                         skip_dims=_param_skip_dims(ps, len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def federation_shardings(tree, mesh, num_nodes: int, axis: str = "node"):
+    """NamedSharding pytree for ``jax.device_put`` of node-stacked state
+    onto the (1-D or 2-D) federation mesh."""
+    specs = federation_specs(tree, num_nodes, mesh, axis)
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def spec_model_dim(spec: P) -> Optional[int]:
+    """Index of the dim a PartitionSpec shards over ``"model"`` (None if
+    the leaf is model-replicated)."""
+    for i, s in enumerate(spec):
+        if s == "model" or (isinstance(s, tuple) and "model" in s):
+            return i
+    return None
+
+
+def gather_model_tree(tree, specs, axis: str = "model"):
+    """Inside ``shard_map``: all-gather every model-sharded leaf back to
+    full width along its sharded dim (tiled, so the result is the
+    unsharded leaf). Model-replicated leaves pass through untouched."""
+    def one(x, spec):
+        d = spec_model_dim(spec)
+        if d is None:
+            return x
+        return jax.lax.all_gather(x, axis, axis=d, tiled=True)
+    return jax.tree.map(one, tree, specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def slice_model_tree(tree, specs, model_size: int, axis: str = "model"):
+    """Inside ``shard_map``: slice full-width leaves back down to this
+    model-shard's slice — the inverse of :func:`gather_model_tree`."""
+    idx = jax.lax.axis_index(axis)
+
+    def one(x, spec):
+        d = spec_model_dim(spec)
+        if d is None:
+            return x
+        width = x.shape[d] // model_size
+        return jax.lax.dynamic_slice_in_dim(x, idx * width, width, axis=d)
+    return jax.tree.map(one, tree, specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
 def leaf_spec(path: str, shape: Tuple[int, ...], mesh, node_axes,
               scope: str, skip_dims: int = 1) -> P:
     """PartitionSpec for one node-stacked param leaf.
@@ -119,9 +199,7 @@ def param_shardings(params_shape, mesh, scope: str):
 
     def one(path, leaf):
         ps = _path_str(path)
-        skip = 2 if ("layers_" in ps or "embed_cb" in ps
-                     or ("head" in ps and len(leaf.shape) > 3)) else 1
-        skip = min(skip, max(len(leaf.shape) - 1, 1))
+        skip = _param_skip_dims(ps, len(leaf.shape))
         return NamedSharding(mesh, leaf_spec(ps, leaf.shape, mesh, node_axes,
                                              scope, skip_dims=skip))
 

@@ -23,7 +23,11 @@ labels moved on ``tcfg.topology``).
 mesh (DESIGN.md §7): per-device node blocks, ppermute params-gossip,
 shard-local label scoring with a top-k-only exchange. Develop/test
 multi-device behaviour on CPU with
-``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Adding
+``--model-parallel N`` factors the device grid into a 2-D
+``("node", "model")`` mesh (DESIGN.md §10): each replica's params and
+optimizer state shard over N devices (FSDP-style), gossip stays
+node-axis-only, and streaming label rounds run vocab-sharded.
 
 ``--compression topk --compression-frac 0.01`` sparsifies the gossip
 wire (error-feedback top-k / random-k, DESIGN.md §9), ``--gossip
@@ -161,8 +165,9 @@ class _LMFederation(sched.CompiledFederationHooks):
     def __init__(self, *, model, algo, tcfg: TrainConfig,
                  idkd_cfg: IDKDConfig, cfg: ModelConfig, tokens, parts,
                  public_tokens, seq_len: int, wire_dtype: str,
-                 driver_mode: str, verbose: bool):
+                 driver_mode: str, verbose: bool, model_parallel: int = 1):
         super().__init__()
+        self.model_parallel = model_parallel
         self.model = model
         self.algo = algo
         self.tcfg = tcfg
@@ -241,13 +246,18 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
                  use_idkd: bool = False, verbose: bool = True,
                  wire_dtype: str = "native", driver_mode: str = "scan",
                  events: Sequence = (),
-                 schedule: Optional[sched.Schedule] = None
+                 schedule: Optional[sched.Schedule] = None,
+                 model_parallel: int = 1
                  ) -> Dict[str, Any]:
     """End-to-end reduced-scale decentralized LM training (CPU-friendly).
 
     ``events`` (churn / rewire) and a custom ``schedule`` feed the
     federation scheduler; by default the schedule is compiled from
     ``tcfg`` (log boundaries + the IDKD rounds ``tcfg.idkd`` asks for).
+    ``model_parallel > 1`` (shard driver only) runs each replica sharded
+    over the second (``"model"``) axis of the 2-D federation mesh
+    (DESIGN.md §10): FSDP-style parameter/optimizer sharding,
+    vocab-sharded streaming label rounds, node-axis-only gossip.
     """
     n = tcfg.num_nodes
     model = build_model(cfg)
@@ -284,18 +294,23 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
         raise ValueError("schedule contains homogenization rounds but "
                          "use_idkd=False")
 
+    if model_parallel != 1 and driver_mode != "shard":
+        raise ValueError("model_parallel > 1 shards each replica over "
+                         "the 2-D federation mesh and needs "
+                         "driver_mode='shard' (DESIGN.md §10)")
     fed = _LMFederation(model=model, algo=algo, tcfg=tcfg,
                         idkd_cfg=idkd_cfg, cfg=cfg, tokens=tokens,
                         parts=parts, public_tokens=public_tokens,
                         seq_len=seq_len, wire_dtype=wire_dtype,
-                        driver_mode=driver_mode, verbose=verbose)
+                        driver_mode=driver_mode, verbose=verbose,
+                        model_parallel=model_parallel)
     opt_state = algo.init(params)
     key = jax.random.PRNGKey(tcfg.seed + 1)
 
     if driver_mode == "shard":
         # shard-mode pre-flight: fail before training, not mid-schedule
         from repro.core.mixing import shard_supported_topology
-        from repro.launch.sharding import node_stacked_shardings
+        from repro.launch.sharding import federation_shardings
         if wire_dtype != "native":
             raise ValueError("driver_mode='shard' moves shards in their "
                              f"storage dtype; wire_dtype={wire_dtype!r} "
@@ -305,12 +320,12 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
                 f"driver_mode='shard' gossips on ring/complete graphs "
                 f"only; topology {topo.name!r} needs driver_mode="
                 "'scan' or 'host'")
-        sched.validate_shard_schedule(schedule, n)
+        sched.validate_shard_schedule(schedule, n, model_parallel)
         mesh = fed.shard_mesh(n)
         params = jax.device_put(
-            params, node_stacked_shardings(params, mesh, n))
+            params, federation_shardings(params, mesh, n))
         opt_state = jax.device_put(
-            opt_state, node_stacked_shardings(opt_state, mesh, n))
+            opt_state, federation_shardings(opt_state, mesh, n))
 
     nparams = sum(x.size for x in jax.tree.leaves(params)) // n
     comp = normalize_compression(tcfg.compression_spec)
@@ -378,6 +393,12 @@ def main():
                          "the previous step's payload (one-step-stale)")
     ap.add_argument("--driver", default="scan",
                     choices=["scan", "host", "shard"])
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="width of the 2-D federation mesh's 'model' "
+                         "axis (shard driver only): each replica's "
+                         "params/optimizer shard over this many devices "
+                         "while gossip stays node-axis-only "
+                         "(DESIGN.md §10)")
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-reduced) config — TPU scale")
     args = ap.parse_args()
@@ -401,7 +422,7 @@ def main():
               if args.churn else ())
     out = run_training(cfg, tcfg, use_idkd=args.idkd,
                        wire_dtype=args.wire_dtype, driver_mode=args.driver,
-                       events=events)
+                       events=events, model_parallel=args.model_parallel)
     print(f"final loss: {out['loss_history'][-1]:.4f}")
     led = out["ledger"]
     print(f"comm ledger: {led['gossip_bytes']/1e6:.2f} MB gossip + "

@@ -48,6 +48,23 @@ def _constrain(h):
     return h
 
 
+def _remat_policy(cfg: ModelConfig):
+    """``jax.checkpoint`` policy for ``cfg.remat_policy``: "nothing"
+    (recompute everything — the minimum-HBM default; "full" is its
+    legacy alias), "dots" (save matmul outputs, so TP all-reduces are
+    not recomputed in the backward pass), "everything" (save all
+    residuals — remat as a structural no-op)."""
+    name = cfg.remat_policy
+    if name in ("nothing", "full"):
+        return jax.checkpoint_policies.nothing_saveable
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "everything":
+        return jax.checkpoint_policies.everything_saveable
+    raise ValueError(f"unknown remat_policy {name!r}: expected 'nothing', "
+                     "'dots', or 'everything'")
+
+
 # ---------------------------------------------------------------------------
 # per-layer init / apply
 # ---------------------------------------------------------------------------
@@ -275,9 +292,7 @@ class DecoderModel:
                 def f(lp_, x_, win_):
                     return _layer_forward(lp_, x_, cfg, kind, win_, memory)
                 if cfg.remat:
-                    policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
-                              if cfg.remat_policy == "dots" else None)
-                    f = jax.checkpoint(f, policy=policy)
+                    f = jax.checkpoint(f, policy=_remat_policy(cfg))
                 y, aux = f(lp, x, win)
                 return _constrain(y), aux
 

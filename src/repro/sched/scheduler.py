@@ -129,6 +129,7 @@ class CompiledFederationHooks(FederationHooks):
     algo = None
     lr_fn = None
     driver_mode = "scan"
+    model_parallel = 1        # shard mode: width of the mesh "model" axis
     compression = None        # None | "topk:frac" | "randk:frac" | (kind, f)
     gossip = "sync"           # overwritten from the schedule by init_comm
 
@@ -177,8 +178,8 @@ class CompiledFederationHooks(FederationHooks):
         if self.driver_mode == "shard":
             import jax
 
-            from repro.launch.sharding import node_stacked_shardings
-            comm = jax.device_put(comm, node_stacked_shardings(
+            from repro.launch.sharding import federation_shardings
+            comm = jax.device_put(comm, federation_shardings(
                 comm, self.shard_mesh(n), n))
         return comm
 
@@ -216,10 +217,13 @@ class CompiledFederationHooks(FederationHooks):
         return self._mixers[key]
 
     def shard_mesh(self, num_nodes: int):
-        """The (cached) 1-D node mesh shard-mode steps run on."""
+        """The (cached) federation mesh shard-mode steps run on — 1-D
+        node mesh at ``model_parallel == 1``, 2-D ``("node", "model")``
+        otherwise."""
         if self._node_mesh is None:
-            from repro.launch.mesh import make_node_mesh
-            self._node_mesh = make_node_mesh(num_nodes)
+            from repro.launch.mesh import make_federation_mesh
+            self._node_mesh = make_federation_mesh(num_nodes,
+                                                   self.model_parallel)
         return self._node_mesh
 
     def _base_step(self, topo: Topology, active: np.ndarray,
@@ -283,11 +287,19 @@ class CompiledFederationHooks(FederationHooks):
         return lambda p, o, k, s0, ns: run(p, o, k, s0, ns, self.ctx)
 
 
-def validate_shard_schedule(schedule: Schedule, num_nodes: int) -> None:
+def validate_shard_schedule(schedule: Schedule, num_nodes: int,
+                            model_parallel: int = 1) -> None:
     """Pre-flight for ``driver_mode="shard"``: shard_map gossip has no
     churn path and only ring/complete-graph rewire targets, so reject
     unsupported schedules *before* the run starts instead of failing
-    mid-schedule when the event fires (DESIGN.md §7)."""
+    mid-schedule when the event fires (DESIGN.md §7).
+
+    On the 2-D federation mesh (``model_parallel > 1``) rewires are
+    rejected too: a mid-run graph change would re-specialize every
+    model-axis collective in the compiled step, which the 2-D driver
+    does not support yet — run such schedules on the 1-D node mesh
+    (``--model-parallel 1``) or node-stacked (DESIGN.md §10).
+    """
     from repro.core.mixing import shard_supported_topology
     for seg in schedule.segments:
         for ev in seg.events:
@@ -298,6 +310,12 @@ def validate_shard_schedule(schedule: Schedule, num_nodes: int) -> None:
                     "under driver_mode='shard' — run it node-stacked "
                     "with driver_mode='scan' or 'host' (DESIGN.md §7)")
             if isinstance(ev, RewireEvent):
+                if model_parallel > 1:
+                    raise ValueError(
+                        f"rewire at step {ev.step} is unsupported on the "
+                        "2-D (node, model) federation mesh — run this "
+                        "schedule with --model-parallel 1 (the 1-D node "
+                        "mesh) or driver_mode='scan' (DESIGN.md §10)")
                 topo = _resolve_topology(ev, num_nodes)
                 if not shard_supported_topology(topo):
                     raise ValueError(

@@ -125,3 +125,31 @@ def test_param_count_analytic_close_to_actual():
         actual = sum(x.size for x in jax.tree.leaves(model.init(KEY)))
         analytic = cfg.param_count()
         assert abs(actual - analytic) / actual < 0.15, arch
+
+
+def test_remat_policy_values_agree_and_validate():
+    """remat_policy only changes what the backward pass recomputes:
+    "nothing" (+ its legacy alias "full"), "dots", and "everything"
+    must produce identical losses and gradients; unknown names fail
+    with the valid choices."""
+    base = get_config("qwen3-1.7b").reduced().replace(
+        num_layers=2, d_model=32, num_heads=2, num_kv_heads=2, d_ff=64,
+        vocab_size=64, dtype="float32", remat=True, scan_layers=True)
+    batch = _batch(base.replace(remat=False))
+    out = {}
+    for pol in ("nothing", "full", "dots", "everything"):
+        model = build_model(base.replace(remat_policy=pol))
+        params = model.init(KEY)
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch)[0])(params)
+        out[pol] = (loss, grads)
+    ref_loss, ref_grads = out["nothing"]
+    assert bool(jnp.isfinite(ref_loss))
+    for pol, (loss, grads) in out.items():
+        np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(grads), jax.tree.leaves(ref_grads)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+    with pytest.raises(ValueError, match="remat_policy"):
+        model = build_model(base.replace(remat_policy="bogus"))
+        model.loss(model.init(KEY), batch)

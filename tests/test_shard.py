@@ -207,6 +207,131 @@ def test_make_node_mesh_divides_nodes():
     assert make_node_mesh(1).shape["node"] == 1
 
 
+def test_make_node_mesh_prime_warns():
+    """A prime node count larger than the device pool has no non-trivial
+    divisor: the mesh degrades to fewer devices and the warning names
+    the size it picked instead of silently serializing."""
+    import warnings
+    ndev = len(jax.devices())
+    prime = next(p for p in (3, 5, 7, 11, 13, 17) if p > ndev)
+    if ndev < 2:
+        # a 1-device mesh IS the best fit for a 1-device pool — no noise
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            assert make_node_mesh(prime).shape["node"] == 1
+        return
+    with pytest.warns(RuntimeWarning, match="no divisor") as rec:
+        mesh = make_node_mesh(prime)
+    assert mesh.shape["node"] == 1          # only divisor of prime <= ndev
+    assert "using a 1-device node mesh" in str(rec[0].message)
+    assert f"num_nodes={prime}" in str(rec[0].message)
+
+
+def test_make_federation_mesh_factors_grid():
+    from repro.launch.mesh import make_federation_mesh
+    ndev = len(jax.devices())
+    # model_parallel=1 degenerates to the plain 1-D node mesh
+    m1 = make_federation_mesh(4, 1)
+    assert m1.axis_names == ("node",)
+    with pytest.raises(ValueError, match="model_parallel"):
+        make_federation_mesh(4, ndev + 1)
+    with pytest.raises(ValueError, match="model_parallel"):
+        make_federation_mesh(4, 0)
+    if ndev >= 2:
+        m = make_federation_mesh(4, 2)
+        assert m.axis_names == ("node", "model")
+        assert m.shape["model"] == 2
+        assert 4 % m.shape["node"] == 0
+    if ndev >= 8:
+        assert dict(make_federation_mesh(4, 2).shape) == \
+            {"node": 4, "model": 2}
+        assert dict(make_federation_mesh(4, 4).shape) == \
+            {"node": 2, "model": 4}
+
+
+# ------------------------------------------- 2-D mesh (node × model) runs
+def _sim_run_2d(mcfg, tcfg, data, pub, model_parallel):
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=3, driver_mode="shard",
+                                 model_parallel=model_parallel)
+    return sim.run()
+
+
+@pytest.mark.parametrize("topology", ["ring", "full"])
+def test_sim_2d_mesh_equals_1d_shard(tiny_data, mcfg, topology):
+    """model_parallel=2 shards every replica's params/optimizer over the
+    mesh "model" axis; the trajectory must equal the 1-D shard runner
+    exactly (the forward gathers full weights, grads slice back, and
+    every elementwise/linear-mix op commutes with the slicing)."""
+    if len(jax.devices()) < 2:
+        pytest.skip("model_parallel=2 needs >= 2 devices")
+    data, pub = tiny_data
+    runs = {mp: _sim_run_2d(mcfg, _kd_tcfg(topology, 4), data, pub, mp)
+            for mp in (1, 2)}
+    assert np.allclose(runs[2].acc_history, runs[1].acc_history, atol=1e-5)
+    assert np.allclose(runs[2].loss_history, runs[1].loss_history, atol=1e-4)
+    assert np.allclose(runs[2].consensus_history, runs[1].consensus_history,
+                       rtol=0.05, atol=1e-8)
+    assert runs[2].label_bytes_total == runs[1].label_bytes_total
+
+
+def test_sim_2d_mesh_compressed_gossip_equals_1d(tiny_data, mcfg):
+    """Compressed delayed gossip on the 2-D mesh: the mixer's comm state
+    stays full-width (model-replicated) so payload selection is identical
+    on every model peer — trajectories match the 1-D shard run."""
+    if len(jax.devices()) < 2:
+        pytest.skip("model_parallel=2 needs >= 2 devices")
+    data, pub = tiny_data
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=4, alpha=0.05,
+                       steps=8, batch_size=8, lr=0.3, seed=4,
+                       topology="ring", compression="topk",
+                       compression_frac=0.25, gossip="delayed",
+                       idkd=IDKDConfig(start_step=4, temperature=10.0,
+                                       label_topk=4, label_backend="sparse"))
+    runs = {mp: _sim_run_2d(mcfg, tcfg, data, pub, mp) for mp in (1, 2)}
+    assert np.allclose(runs[2].acc_history, runs[1].acc_history, atol=1e-5)
+    assert np.allclose(runs[2].loss_history, runs[1].loss_history, atol=1e-4)
+
+
+def test_lm_2d_mesh_equals_1d_shard():
+    """LM launch path under --model-parallel 2: vocab-sharded streaming
+    label rounds + FSDP-sharded steps reproduce the 1-D shard run."""
+    if len(jax.devices()) < 2:
+        pytest.skip("model_parallel=2 needs >= 2 devices")
+    from repro.configs import get_config
+    from repro.launch.train import run_training
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    tcfg = TrainConfig(num_nodes=2, steps=6, lr=0.1, alpha=0.1, batch_size=4,
+                       idkd=IDKDConfig(start_step=3, label_topk=4,
+                                       kd_weight=0.3))
+    hist = {}
+    for mp in (1, 2):
+        out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                           use_idkd=True, log_every=2, verbose=False,
+                           driver_mode="shard", model_parallel=mp)
+        hist[mp] = out["loss_history"]
+    assert np.allclose(hist[2], hist[1], rtol=1e-4, atol=1e-5)
+
+
+def test_2d_mesh_rejects_rewire_and_non_shard_driver(tiny_data, mcfg):
+    """Eager 2-D validation: rewires name the 1-D fallback before the
+    run starts, and model_parallel>1 without the shard driver fails at
+    construction."""
+    from repro import sched
+    schedule = compile_schedule(
+        8, 3, events=[sched.RewireEvent(step=4, topology="full")])
+    with pytest.raises(ValueError, match="model-parallel 1"):
+        sched.validate_shard_schedule(schedule, 4, 2)
+    sched.validate_shard_schedule(schedule, 4, 1)     # 1-D still allows it
+    data, pub = tiny_data
+    with pytest.raises(ValueError, match="shard"):
+        DecentralizedSimulator(mcfg, _kd_tcfg("ring"), data, pub,
+                               kd_mode="idkd", driver_mode="scan",
+                               model_parallel=2)
+
+
 # ------------------------------------------------------------ im2col conv
 def test_im2col_forward_matches_lax(mcfg):
     """The im2col conv path (patch-gather + matmul, no lax.conv) must

@@ -77,6 +77,92 @@ def test_head_select_single_vocab_block():
     _check_head(h, w, None, 10.0, 4, block_c=512)
 
 
+# ----------------------------------------- vocab-sharded stats + merge
+def _merged_shards(h, w, b, S, T, k, det):
+    """Emulate the 2-D label round's vocab sharding in pure numpy/jnp:
+    pad W to S equal column shards (padded bias = NEG_INF so fake
+    columns self-mask), per-shard raw stats, offset local indices to
+    global, merge across shards."""
+    from repro.kernels.head_select import (NEG_INF, head_select_stats_ref,
+                                           merge_head_stats)
+    C = w.shape[1]
+    w_sh = -(-C // S)
+    pad = S * w_sh - C
+    wp = np.pad(np.asarray(w), ((0, 0), (0, pad)))
+    bv = np.zeros(C, np.float32) if b is None else np.asarray(b)
+    bp = np.pad(bv, (0, pad), constant_values=NEG_INF)
+    k_loc = min(k, w_sh)
+    ms, zs, tvs, tis = [], [], [], []
+    for s in range(S):
+        m, z, tv, ti = head_select_stats_ref(
+            jnp.asarray(h), jnp.asarray(wp[:, s * w_sh:(s + 1) * w_sh]),
+            jnp.asarray(bp[s * w_sh:(s + 1) * w_sh]), k=k_loc)
+        ms.append(m)
+        zs.append(z)
+        tvs.append(tv)
+        tis.append(ti + s * w_sh)
+    return merge_head_stats(jnp.stack(ms), jnp.stack(zs), jnp.stack(tvs),
+                            jnp.stack(tis), temperature=T, k=k,
+                            detector=det)
+
+
+@pytest.mark.parametrize("det", ["msp", "energy"])
+@pytest.mark.parametrize("C,S,k", [(50, 4, 4),    # ragged: 50 % 4 != 0
+                                   (64, 4, 8),    # exact split
+                                   (10, 3, 8),    # k > shard width (k_loc=4)
+                                   (96, 2, 1)])
+def test_merge_head_stats_matches_unsharded_ref(det, C, S, k):
+    """The cross-shard online-softmax merge == the unsharded oracle:
+    same confidences, renormalized top-k payloads, and *global* vocab
+    indices — including ragged vocab tails (C % S != 0, where padded
+    columns must self-mask out of both z and the top-k) and shards
+    narrower than k."""
+    rng = np.random.default_rng(C * 7 + S)
+    h = jnp.asarray(rng.normal(size=(12, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, C)) * 0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(C,)), jnp.float32)
+    conf, vals, idx = _merged_shards(h, w, b, S, 5.0, k, det)
+    cr, vr, ir = head_select_ref(h, w, b, temperature=5.0, k=k,
+                                 detector=det)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(cr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vr), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ir))
+
+
+def test_merge_head_stats_no_bias_matches_ref():
+    """bias=None on the sharded path (zeros + NEG_INF padding) == the
+    no-bias oracle."""
+    rng = np.random.default_rng(42)
+    h = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 50)), jnp.float32)
+    conf, vals, idx = _merged_shards(h, w, None, 4, 10.0, 4, "msp")
+    cr, vr, ir = head_select_ref(h, w, temperature=10.0, k=4)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(cr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vr), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ir))
+
+
+def test_head_select_raw_stats_matches_stats_ref():
+    """The kernel's raw_stats mode (what the vocab-sharded round feeds
+    the merge on TPU) == the jnp stats oracle: pre-softmax m/z and raw
+    top-k logits, not finalized payloads."""
+    from repro.kernels.head_select import head_select_stats_ref
+    rng = np.random.default_rng(5)
+    h = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 80)) * 0.5, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(80,)), jnp.float32)
+    m, z, tv, ti = head_select(h, w, b, temperature=7.0, k=4,
+                               block_rows=4, block_c=32, interpret=True,
+                               raw_stats=True)
+    mr, zr, tvr, tir = head_select_stats_ref(h, w, b, k=4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(tv), np.asarray(tvr), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ti), np.asarray(tir))
+
+
 @given(scale=st.floats(0.1, 4.0), T=st.floats(0.5, 20.0),
        k=st.integers(1, 8))
 @settings(max_examples=15, deadline=None)
@@ -222,6 +308,37 @@ def test_shard_streaming_matches_stacked(cls_setup):
                                       np.asarray(ref.weights))
         np.testing.assert_allclose(np.asarray(out.densify(10)),
                                    np.asarray(ref.densify(10)), atol=1e-5)
+
+
+@pytest.mark.parametrize("setup_name,C", [("cls_setup", 10),
+                                          ("lm_setup", 64)])
+def test_shard_streaming_2d_mesh_matches_stacked(request, setup_name, C):
+    """The vocab-sharded round on the 2-D (node, model) mesh — per-shard
+    head passes merged with the online-softmax streaming math — equals
+    the node-stacked streaming round, classifier and LM stacks. C=10
+    over model=2 shards ragged-free; vocab=64 splits exactly; both hit
+    the NEG_INF-padded tail when the device pool forces model > C
+    factors."""
+    if len(jax.devices()) < 2:
+        pytest.skip("model axis needs >= 2 devices")
+    from repro.launch.mesh import make_federation_mesh
+    model, params, pub, val = request.getfixturevalue(setup_name)
+    mesh = make_federation_mesh(N, 2)
+    cfg = IDKDConfig(label_topk=4, stream_microbatch=8)
+    for topo_kind in ("ring", "full"):
+        topo = Topology.make(topo_kind, N)
+        ref = labeling.streaming_label_round(model, params, pub, val, topo,
+                                             cfg)
+        out = labeling.shard_streaming_label_round(
+            model, params, pub, val, topo, cfg, mesh=mesh)
+        np.testing.assert_array_equal(np.asarray(out.id_masks),
+                                      np.asarray(ref.id_masks))
+        np.testing.assert_allclose(np.asarray(out.thresholds),
+                                   np.asarray(ref.thresholds), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(out.weights),
+                                      np.asarray(ref.weights))
+        np.testing.assert_allclose(np.asarray(out.densify(C)),
+                                   np.asarray(ref.densify(C)), atol=1e-5)
 
 
 # --------------------------------------------------------- jaxpr audit
