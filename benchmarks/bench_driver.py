@@ -74,13 +74,29 @@ from repro.data.synthetic import (make_classification_data, make_lm_data,
 from repro.launch.steps import stack_params
 from repro.models import build_model
 
+from benchmarks.common import step_percentiles
+
 NODES = 8
 CHUNK = 20          # steps per timed chunk
 ROUNDS = 5          # interleaved rounds; report medians
 
 
+class _Rate(float):
+    """µs/step median that also carries the p95 of its sample rounds.
+
+    Subclassing float keeps every existing consumer (ratios, rounding,
+    JSON cells) working on the p50 while ``rate.p95`` rides along for
+    the BENCH percentile fields."""
+
+    def __new__(cls, p50: float, p95: float):
+        obj = super().__new__(cls, p50)
+        obj.p95 = p95
+        return obj
+
+
 def _median_rates(drivers):
-    """Interleave ROUNDS of each driver fn, return µs/step medians."""
+    """Interleave ROUNDS of each driver fn; µs/step ``_Rate`` (p50 with
+    a ``.p95`` attribute) per driver."""
     for fn in drivers.values():        # compile / warm everything first
         fn()
     times = {k: [] for k in drivers}
@@ -89,7 +105,7 @@ def _median_rates(drivers):
             t0 = time.time()
             fn()
             times[k].append((time.time() - t0) / CHUNK * 1e6)
-    return {k: float(np.median(v)) for k, v in times.items()}
+    return {k: _Rate(*step_percentiles(v)) for k, v in times.items()}
 
 
 # ------------------------------------------------------------- sim (CNN)
@@ -418,6 +434,74 @@ def _lm_shard_cell(kd: bool):
     return rates, int(mesh.shape["node"])
 
 
+def _lm_tel_cell():
+    """Telemetry metrics-bus overhead cells (DESIGN.md §11): the plain
+    LM workload with the on-device metrics carry off vs on, node-stacked
+    scan and shard_map runners, all four interleaved. The acceptance
+    gate is on ≤ 1.05× off per runner (the metrics update is a handful
+    of per-leaf square-sums fused into the step); trajectories are
+    bitwise identical either way (tests/test_obs.py)."""
+    from repro.launch.mesh import make_node_mesh
+    from repro.launch.sharding import (node_stacked_shardings,
+                                       node_stacked_specs)
+    from repro.obs import metrics as obs_metrics
+
+    n, B, S = NODES, 8, 32
+    cfg = get_config("qwen3-1.7b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    model = build_model(cfg)
+    topo = Topology.make("ring", n)
+    mesh = make_node_mesh(n)
+    algo = make_algorithm("qg-dsgdm-n", momentum=0.9, weight_decay=1e-4)
+    tokens, topics = make_lm_data(cfg.vocab_size, S + 1, 512, seed=4)
+    parts = dirichlet_partition(topics, n, 0.1, np.random.default_rng(4))
+    params = stack_params(model.init(jax.random.PRNGKey(0)), n)
+    sampler = driver.make_lm_sampler(driver.pad_partitions(parts), tokens, B)
+    lr_fn = lambda s: jnp.asarray(0.1, jnp.float32)       # noqa: E731
+    k = jax.random.PRNGKey(0)
+    s0 = jnp.asarray(0, jnp.int32)
+
+    scan_off = driver.make_step(model, algo, make_mixer(topo),
+                                driver.lm_adapter)
+    scan_on = driver.make_step(model, algo, make_mixer(topo),
+                               driver.lm_adapter, telemetry=True)
+    shard_off = driver.make_shard_step(model, algo, driver.lm_adapter,
+                                       mesh=mesh, topology=topo)
+    shard_on = driver.make_shard_step(model, algo, driver.lm_adapter,
+                                      mesh=mesh, topology=topo,
+                                      telemetry=True)
+    opt = scan_off.init_opt(params)
+    params_sh = jax.device_put(params,
+                               node_stacked_shardings(params, mesh, n))
+    opt_sh = jax.device_put(opt, node_stacked_shardings(opt, mesh, n))
+    m0 = obs_metrics.init_node_metrics(n)
+    m0_sh = jax.device_put(
+        m0, jax.tree.map(
+            lambda sp: jax.sharding.NamedSharding(mesh, sp),
+            node_stacked_specs(m0, n, "node")))
+    runners = {
+        "scan|off": driver.make_runner(scan_off, sampler, lr_fn, "scan"),
+        "scan|on": driver.make_runner(scan_on, sampler, lr_fn, "scan"),
+        "shard|off": driver.make_runner(shard_off, sampler, lr_fn, "shard"),
+        "shard|on": driver.make_runner(shard_on, sampler, lr_fn, "shard"),
+    }
+
+    def bench(key):
+        runr = runners[key]
+        mode, tel = key.split("|")
+        p = params_sh if mode == "shard" else params
+        o = opt_sh if mode == "shard" else opt
+        if tel == "on":
+            m = m0_sh if mode == "shard" else m0
+            return lambda: jax.block_until_ready(
+                runr(p, o, k, s0, CHUNK, None, None, m)[0])
+        return lambda: jax.block_until_ready(runr(p, o, k, s0, CHUNK)[0])
+
+    rates = _median_rates({key: bench(key) for key in runners})
+    return rates, int(mesh.shape["node"])
+
+
 def _lm_shard_comp_cell():
     """Sharded compressed-gossip cells: ``make_shard_step`` with the
     ppermute compressed mixer (top-k 1%, sync and delayed) against the
@@ -546,6 +630,7 @@ def run(out_path: str | None = "BENCH_driver.json"):
                             f"{1e6 / us:.1f} steps/s"))
                 cells.append({"path": path, "kd": kd, "mode": mode,
                               "us_per_step": round(us, 1),
+                              "us_per_step_p95": round(us.p95, 1),
                               "steps_per_sec": round(1e6 / us, 2)})
             csv.append((f"driver/{phase}_speedup", 0.0,
                         f"{rates['preref'] / rates['scan']:.2f}x"))
@@ -560,6 +645,7 @@ def run(out_path: str | None = "BENCH_driver.json"):
         cells.append({"path": "lm", "mode": "scan",
                       "compression": comp_name, "gossip": gossip,
                       "us_per_step": round(us, 1),
+                      "us_per_step_p95": round(us.p95, 1),
                       "steps_per_sec": round(1e6 / us, 2),
                       "bytes_per_step": round(comp_wire[key], 1)})
     dense_key, topk_key = "none|sync", "topk:0.01|sync"
@@ -578,10 +664,30 @@ def run(out_path: str | None = "BENCH_driver.json"):
                 cells.append({"path": path, "kd": kd, "mode": mode,
                               "devices": devices,
                               "us_per_step": round(us, 1),
+                              "us_per_step_p95": round(us.p95, 1),
                               "steps_per_sec": round(1e6 / us, 2)})
             csv.append((f"driver/{phase}_shard_vs_stacked@{devices}dev",
                         0.0,
                         f"{rates[stacked_mode] / rates['shard']:.2f}x"))
+    # telemetry metrics-bus overhead cells (DESIGN.md §11): off vs on
+    # per runner; the acceptance gate is on ≤ 1.05x off
+    tel_rates, devices = _lm_tel_cell()
+    for key, us in tel_rates.items():
+        mode, tel = key.split("|")
+        dev = f"@{devices}dev" if mode == "shard" else ""
+        csv.append((f"driver/lm_plain_{mode}_telemetry_{tel}{dev}",
+                    round(us, 1), f"{1e6 / us:.1f} steps/s"))
+        cells.append({"path": "lm", "kd": False, "mode": mode,
+                      "telemetry": tel == "on",
+                      **({"devices": devices} if mode == "shard" else {}),
+                      "us_per_step": round(us, 1),
+                      "us_per_step_p95": round(us.p95, 1),
+                      "steps_per_sec": round(1e6 / us, 2)})
+    for mode in ("scan", "shard"):
+        dev = f"@{devices}dev" if mode == "shard" else ""
+        ratio = tel_rates[f"{mode}|on"] / tel_rates[f"{mode}|off"]
+        csv.append((f"driver/lm_plain_{mode}_telemetry_overhead{dev}", 0.0,
+                    f"{ratio:.3f}x"))
     # 2-D mesh-shape cells (node × model factorings of the device pool);
     # gossip bytes are mesh-shape-invariant — the guard watches that too
     mesh_rates, mesh_wire = _lm_mesh_shapes_cell()
@@ -591,6 +697,7 @@ def run(out_path: str | None = "BENCH_driver.json"):
                     f"{mesh_wire / 1e3:.1f} KB/step gossip"))
         cells.append({"path": "lm", "kd": False, "mode": "shard",
                       "mesh": label, "us_per_step": round(us, 1),
+                      "us_per_step_p95": round(us.p95, 1),
                       "steps_per_sec": round(1e6 / us, 2),
                       "bytes_per_step": round(mesh_wire, 1)})
     # sharded compressed-gossip cells (top-k 1%, sync + delayed)
@@ -603,6 +710,7 @@ def run(out_path: str | None = "BENCH_driver.json"):
         cells.append({"path": "lm", "mode": mode, "devices": devices,
                       "compression": "topk:0.01", "gossip": gossip,
                       "us_per_step": round(us, 1),
+                      "us_per_step_p95": round(us.p95, 1),
                       "steps_per_sec": round(1e6 / us, 2)})
     if out_path:
         with open(out_path, "w") as f:

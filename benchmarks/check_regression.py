@@ -4,6 +4,11 @@ Extracts every named hot-path metric (``us_per_step`` / ``us_per_call`` /
 ``wall_s`` / ``bytes_per_step`` leaves, named by the string fields of
 their enclosing cell) from both documents and fails when any shared
 metric slowed down by more than ``--threshold`` (default 1.5×).
+Timing cells gate on the **p50**: ``us_per_step`` is the median over
+interleaved bench rounds (``bench_driver._median_rates``); the
+``us_per_step_p95`` tail-latency field rides along in the BENCH cells
+for visibility but is deliberately not in ``METRIC_KEYS`` — p95 on a
+shared CI box is noise-dominated and would flake the guard.
 ``bytes_per_step`` guards the *wire*, not the clock: a compressed-gossip
 cell (labels ``compression=topk:0.01|gossip=...``) regressing its byte
 count means the sparsifier stopped sparsifying. Metrics present in only one of
@@ -33,6 +38,9 @@ import re
 import sys
 from typing import Dict
 
+# gated metrics: medians (p50) only — us_per_step_p95 is recorded in the
+# BENCH cells but intentionally absent here (tail latency is informative,
+# not gateable, on shared CI hardware)
 METRIC_KEYS = ("us_per_step", "us_per_call", "us_per_round", "wall_s",
                "bytes_per_step")
 
@@ -114,11 +122,15 @@ def main() -> None:
     with open(args.fresh) as f:
         fresh = extract_metrics(json.load(f))
     bad = compare(base, fresh, args.threshold, args.include)
+    # the summary line carries the one-sided count so a CI log's last
+    # line says both what failed and what was never compared
+    n_skipped = len(set(base) ^ set(fresh))
+    note = (f", {n_skipped} one-sided cell(s) skipped" if n_skipped else "")
     if bad:
         print(f"\nbench regression guard failed ({bad} issue(s), "
-              f"threshold {args.threshold:.2f}x)")
+              f"threshold {args.threshold:.2f}x{note})")
         sys.exit(1)
-    print("\nno bench regressions")
+    print(f"\nno bench regressions (p50-gated{note})")
 
 
 if __name__ == "__main__":

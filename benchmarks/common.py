@@ -118,3 +118,15 @@ def run_cell(method: str, alpha: float, nodes: int = 8,
 def mean_std(cells) -> str:
     accs = [c["final_acc"] * 100 for c in cells]
     return f"{np.mean(accs):.2f} ± {np.std(accs):.2f}"
+
+
+def step_percentiles(samples) -> tuple:
+    """(p50, p95) of a per-step timing sample list (µs/step).
+
+    BENCH cells record both: the regression guard gates on the median
+    (``us_per_step`` — robust to one noisy round), while the p95 keeps
+    tail latency visible in the committed baselines without ever
+    failing a build on it.
+    """
+    a = np.asarray(list(samples), np.float64)
+    return (float(np.percentile(a, 50)), float(np.percentile(a, 95)))

@@ -38,6 +38,9 @@ def main():
                     help="steps between rounds (default: fit evenly)")
     ap.add_argument("--churn", default="",
                     help="churn spec node@down-up[,...], e.g. 7@120-200")
+    ap.add_argument("--telemetry", default="", metavar="DIR",
+                    help="write the QG-IDKD run's telemetry (run.jsonl + "
+                         "trace.json, DESIGN.md §11) under DIR")
     args = ap.parse_args()
 
     data = make_classification_data(image_size=8, n_train=1024, n_val=256,
@@ -68,7 +71,18 @@ def main():
         schedule = sched.compile_schedule(
             tcfg.steps, sim.eval_every,
             round_steps=sim.default_schedule().round_steps, events=churn)
-        r = sim.run(schedule=schedule)
+        telemetry = None
+        if args.telemetry and kd == "idkd":
+            from repro.obs import Telemetry
+            telemetry = Telemetry(args.telemetry, trace=True,
+                                  meta={"method": name, "steps": args.steps,
+                                        "nodes": args.nodes,
+                                        "alpha": args.alpha})
+        try:
+            r = sim.run(schedule=schedule, telemetry=telemetry)
+        finally:
+            if telemetry is not None:
+                telemetry.close()
         results[name] = r
         extra = ""
         if r.post_hist is not None:

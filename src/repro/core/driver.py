@@ -170,7 +170,8 @@ def lm_sparse_kd_adapter(idkd_cfg: IDKDConfig) -> LossAdapter:
 
 
 # ----------------------------------------------------------- step factory
-def make_step(model, algo, mixer, loss_adapter) -> Callable:
+def make_step(model, algo, mixer, loss_adapter,
+              telemetry: bool = False) -> Callable:
     """The one decentralized train step.
 
     ``loss_adapter`` is either ``adapter(model) -> node_loss`` directly
@@ -186,11 +187,41 @@ def make_step(model, algo, mixer, loss_adapter) -> Callable:
     ctx — ``step(params, opt_state, batch, lr, comm) -> (params,
     opt_state, loss, comm)``, flagged ``step.comm = True``, with
     ``step.init_comm = mixer.init_state`` building the initial state.
+
+    ``telemetry=True`` adds the on-device metrics bus
+    (:mod:`repro.obs.metrics`) as a trailing carry, after comm when both
+    are present: ``step(..., metrics) -> (..., metrics)``, flagged
+    ``step.metrics = True``. The metrics pytree accumulates per-node
+    loss / grad norm / consensus distance (and, with a stateful mixer,
+    the ‖x − x̂‖ EF residual via ``mixer.ef_ref``) with no host syncs;
+    the update touches nothing the training math reads, so telemetry-on
+    trajectories are bitwise-equal to telemetry-off.
     """
     node_loss = loss_adapter(model)
     grad_fn = jax.vmap(jax.value_and_grad(node_loss))
+    if telemetry:
+        from repro.obs import metrics as obs_metrics
+    ef_fn = getattr(mixer, "ef_ref", None) if telemetry else None
 
     if getattr(mixer, "stateful", False):
+        if telemetry:
+            def tele_comm_step(params, opt_state, batch, lr, comm, metrics):
+                losses, grads = grad_fn(params, batch)
+                bound = mixer.bind(comm)
+                params, opt_state = algo.step(params, grads, opt_state, lr,
+                                              bound)
+                comm = bound.finalize()
+                metrics = obs_metrics.update(
+                    metrics, losses, grads, params,
+                    ef_ref=ef_fn(comm) if ef_fn is not None else None)
+                return params, opt_state, jnp.mean(losses), comm, metrics
+
+            tele_comm_step.comm = True
+            tele_comm_step.metrics = True
+            tele_comm_step.init_comm = mixer.init_state
+            tele_comm_step.init_opt = algo.init
+            return tele_comm_step
+
         def comm_step(params, opt_state, batch, lr, comm):
             losses, grads = grad_fn(params, batch)
             bound = mixer.bind(comm)
@@ -203,6 +234,18 @@ def make_step(model, algo, mixer, loss_adapter) -> Callable:
         comm_step.init_opt = algo.init
         return comm_step
 
+    if telemetry:
+        def tele_step(params, opt_state, batch, lr, metrics):
+            losses, grads = grad_fn(params, batch)
+            params, opt_state = algo.step(params, grads, opt_state, lr,
+                                          mixer)
+            metrics = obs_metrics.update(metrics, losses, grads, params)
+            return params, opt_state, jnp.mean(losses), metrics
+
+        tele_step.metrics = True
+        tele_step.init_opt = algo.init
+        return tele_step
+
     def step(params, opt_state, batch, lr):
         losses, grads = grad_fn(params, batch)
         params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
@@ -214,7 +257,8 @@ def make_step(model, algo, mixer, loss_adapter) -> Callable:
 
 def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
                     axis: str = NODE_AXIS, compression=None,
-                    gossip: str = "sync") -> Callable:
+                    gossip: str = "sync",
+                    telemetry: bool = False) -> Callable:
     """The decentralized train step under ``shard_map`` over the mesh
     node axis — the ``driver_mode="shard"`` twin of :func:`make_step`.
 
@@ -263,6 +307,16 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
     ``reduce_tree_sum`` hook). Compressed gossip wraps the mixer in
     ``mixing.make_model_sharded_mixer`` so payload top-k still sees full
     delta rows.
+
+    ``telemetry=True`` adds the on-device metrics-bus carry (see
+    :func:`make_step`): per-node quantities are computed *inside* the
+    shard_map body — the node mean for consensus is psum'd over the node
+    axis, and on a 2-D mesh the per-leaf contributions of model-sharded
+    leaves are additionally psum'd over the model axis (the same
+    reduction split as ``reduce_tree_sum``). EF residuals are reported
+    for 1-D compressed/delayed gossip and for the shard-native
+    uncompressed state; the 2-D compressed mixer keeps full-width
+    estimates against sharded params, so its ``ef_sq`` stays zero.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -319,8 +373,11 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
             return total
         return reduce_tree_sum
 
+    if telemetry:
+        from repro.obs import metrics as obs_metrics
+
     if getattr(mixer, "stateful", False):
-        def comm_step(params, opt_state, batch, lr, comm):
+        def comm_step(params, opt_state, batch, lr, comm, metrics=None):
             p_specs = specs_of(params)
             model_dims = _leaf_model_dims(p_specs)
             step_mixer = mixer
@@ -330,8 +387,10 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
                 # mixer is per-coordinate linear and runs shard-natively
                 step_mixer = mixing.make_model_sharded_mixer(
                     mixer, model_dims, model_size, model_axis)
+            ef_fn = (getattr(step_mixer, "ef_ref", None) if telemetry
+                     else None)
 
-            def comm_body(params, opt_state, batch, lr, comm):
+            def comm_body(params, opt_state, batch, lr, comm, *m):
                 full = (gather_model_tree(params, p_specs, model_axis)
                         if model_size > 1 else params)
                 losses, grads = grad_fn(full, batch)
@@ -345,28 +404,42 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
                                               bound)
                 comm = bound.finalize()
                 loss = jax.lax.psum(jnp.sum(losses), axis) / n
-                return params, opt_state, loss, comm
+                if not m:
+                    return params, opt_state, loss, comm
+                metrics = obs_metrics.update(
+                    m[0], losses, grads, params,
+                    ef_ref=ef_fn(comm) if ef_fn is not None else None,
+                    axis_name=axis, num_nodes=n,
+                    model_dims=(model_dims if model_size > 1 else None),
+                    model_axis=model_axis)
+                return params, opt_state, loss, comm, metrics
 
-            sharded = shard_map(
-                comm_body, mesh=mesh,
-                in_specs=(p_specs, specs_of(opt_state),
-                          node_stacked_specs(batch, n, axis), P(),
-                          specs_of(comm)),
-                out_specs=(p_specs, specs_of(opt_state), P(),
-                           specs_of(comm)),
-                check_rep=False)
-            return sharded(params, opt_state, batch, lr, comm)
+            base_in = (p_specs, specs_of(opt_state),
+                       node_stacked_specs(batch, n, axis), P(),
+                       specs_of(comm))
+            base_out = (p_specs, specs_of(opt_state), P(), specs_of(comm))
+            if metrics is None:
+                sharded = shard_map(comm_body, mesh=mesh, in_specs=base_in,
+                                    out_specs=base_out, check_rep=False)
+                return sharded(params, opt_state, batch, lr, comm)
+            m_specs = node_stacked_specs(metrics, n, axis)
+            sharded = shard_map(comm_body, mesh=mesh,
+                                in_specs=base_in + (m_specs,),
+                                out_specs=base_out + (m_specs,),
+                                check_rep=False)
+            return sharded(params, opt_state, batch, lr, comm, metrics)
 
         comm_step.comm = True
+        comm_step.metrics = telemetry
         comm_step.init_comm = mixer.init_state
         comm_step.init_opt = algo.init
         return comm_step
 
-    def step(params, opt_state, batch, lr):
+    def step(params, opt_state, batch, lr, metrics=None):
         p_specs = specs_of(params)
         model_dims = _leaf_model_dims(p_specs)
 
-        def body(params, opt_state, batch, lr):
+        def body(params, opt_state, batch, lr, *m):
             full = (gather_model_tree(params, p_specs, model_axis)
                     if model_size > 1 else params)
             losses, grads = grad_fn(full, batch)
@@ -377,16 +450,28 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
             params, opt_state = algo.step(params, grads, opt_state, lr,
                                           mixer)
             loss = jax.lax.psum(jnp.sum(losses), axis) / n
-            return params, opt_state, loss
+            if not m:
+                return params, opt_state, loss
+            metrics = obs_metrics.update(
+                m[0], losses, grads, params, axis_name=axis, num_nodes=n,
+                model_dims=(model_dims if model_size > 1 else None),
+                model_axis=model_axis)
+            return params, opt_state, loss, metrics
 
-        sharded = shard_map(
-            body, mesh=mesh,
-            in_specs=(p_specs, specs_of(opt_state),
-                      node_stacked_specs(batch, n, axis), P()),
-            out_specs=(p_specs, specs_of(opt_state), P()),
-            check_rep=False)
-        return sharded(params, opt_state, batch, lr)
+        base_in = (p_specs, specs_of(opt_state),
+                   node_stacked_specs(batch, n, axis), P())
+        base_out = (p_specs, specs_of(opt_state), P())
+        if metrics is None:
+            sharded = shard_map(body, mesh=mesh, in_specs=base_in,
+                                out_specs=base_out, check_rep=False)
+            return sharded(params, opt_state, batch, lr)
+        m_specs = node_stacked_specs(metrics, n, axis)
+        sharded = shard_map(body, mesh=mesh, in_specs=base_in + (m_specs,),
+                            out_specs=base_out + (m_specs,),
+                            check_rep=False)
+        return sharded(params, opt_state, batch, lr, metrics)
 
+    step.metrics = telemetry
     step.init_opt = algo.init
     return step
 
@@ -410,26 +495,20 @@ def make_frozen_step(step_fn, active) -> Callable:
                              new, old)
         return new
 
-    if getattr(step_fn, "comm", False):
-        # stateful gossip: the comm pytree passes through untouched —
-        # the compressed mixer's own freshness mask (active & ~stale)
-        # already holds down nodes' residuals and payloads
-        def comm_step(params, opt_state, batch, lr, comm):
-            new_p, new_o, loss, comm = step_fn(params, opt_state, batch,
-                                               lr, comm)
-            return (jax.tree.map(select, new_p, params),
-                    jax.tree.map(select, new_o, opt_state), loss, comm)
+    # trailing carries pass through untouched: the stateful mixer's own
+    # freshness mask (active & ~stale) already holds down nodes' comm
+    # residuals and payloads, and the metrics bus keeps accumulating the
+    # inner step's pre-freeze values (a frozen node's rows describe the
+    # discarded hypothetical update — telemetry, not training state)
+    def step(params, opt_state, batch, lr, *rest):
+        out = step_fn(params, opt_state, batch, lr, *rest)
+        return (jax.tree.map(select, out[0], params),
+                jax.tree.map(select, out[1], opt_state)) + tuple(out[2:])
 
-        comm_step.comm = True
-        comm_step.init_comm = step_fn.init_comm
-        comm_step.init_opt = step_fn.init_opt
-        return comm_step
-
-    def step(params, opt_state, batch, lr):
-        new_p, new_o, loss = step_fn(params, opt_state, batch, lr)
-        return (jax.tree.map(select, new_p, params),
-                jax.tree.map(select, new_o, opt_state), loss)
-
+    step.comm = getattr(step_fn, "comm", False)
+    step.metrics = getattr(step_fn, "metrics", False)
+    if hasattr(step_fn, "init_comm"):
+        step.init_comm = step_fn.init_comm
     step.init_opt = step_fn.init_opt
     return step
 
@@ -663,28 +742,51 @@ def make_scan_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
     gossip) extends the contract to ``run(params, opt_state, key, step0,
     num_steps, ctx=None, comm=None) -> (params, opt_state, key, losses,
     comm)``: the mixer state rides the scan carry next to params, flagged
-    ``run.comm = True``.
+    ``run.comm = True``. A metrics-carrying step (``step_fn.metrics`` —
+    the :mod:`repro.obs` metrics bus) appends ``metrics`` the same way
+    (after comm when both are present), flagged ``run.metrics = True``.
+    Both carries ride one generic scan: jax treats ``None`` as an empty
+    pytree, so absent carries cost nothing in the compiled program.
     """
-    if getattr(step_fn, "comm", False):
+    has_comm = getattr(step_fn, "comm", False)
+    has_metrics = getattr(step_fn, "metrics", False)
+
+    if has_comm or has_metrics:
         @functools.partial(jax.jit, static_argnums=(4,))
-        def comm_run(params, opt_state, key, step0, num_steps, ctx=None,
-                     comm=None):
+        def aug_run(params, opt_state, key, step0, num_steps, ctx=None,
+                    comm=None, metrics=None):
             def body(carry, t):
-                params, opt_state, key, comm = carry
+                params, opt_state, key, comm, metrics = carry
                 key, sub = jax.random.split(key)
                 batch = (sample_fn(sub, step0 + t) if ctx is None
                          else sample_fn(sub, step0 + t, ctx))
-                params, opt_state, loss, comm = step_fn(
-                    params, opt_state, batch, lr_fn(step0 + t), comm)
-                return (params, opt_state, key, comm), loss
+                args = (params, opt_state, batch, lr_fn(step0 + t))
+                if has_comm:
+                    args += (comm,)
+                if has_metrics:
+                    args += (metrics,)
+                out = step_fn(*args)
+                params, opt_state, loss = out[0], out[1], out[2]
+                rest = list(out[3:])
+                if has_comm:
+                    comm = rest.pop(0)
+                if has_metrics:
+                    metrics = rest.pop(0)
+                return (params, opt_state, key, comm, metrics), loss
 
-            (params, opt_state, key, comm), losses = jax.lax.scan(
-                body, (params, opt_state, key, comm),
+            (params, opt_state, key, comm, metrics), losses = jax.lax.scan(
+                body, (params, opt_state, key, comm, metrics),
                 jnp.arange(num_steps))
-            return params, opt_state, key, losses, comm
+            out = (params, opt_state, key, losses)
+            if has_comm:
+                out += (comm,)
+            if has_metrics:
+                out += (metrics,)
+            return out
 
-        comm_run.comm = True
-        return comm_run
+        aug_run.comm = has_comm
+        aug_run.metrics = has_metrics
+        return aug_run
 
     @functools.partial(jax.jit, static_argnums=(4,))
     def run(params, opt_state, key, step0, num_steps, ctx=None):
@@ -708,30 +810,50 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
     """Same contract as :func:`make_scan_runner`, but a per-step Python
     loop around one jitted step — the dispatch-overhead baseline. Key
     handling matches the scan body exactly, so trajectories agree."""
-    if getattr(step_fn, "comm", False):
+    has_comm = getattr(step_fn, "comm", False)
+    has_metrics = getattr(step_fn, "metrics", False)
+
+    if has_comm or has_metrics:
         @jax.jit
-        def comm_one(params, opt_state, key, t, ctx=None, comm=None):
+        def aug_one(params, opt_state, key, t, ctx=None, comm=None,
+                    metrics=None):
             key, sub = jax.random.split(key)
             batch = (sample_fn(sub, t) if ctx is None
                      else sample_fn(sub, t, ctx))
-            params, opt_state, loss, comm = step_fn(
-                params, opt_state, batch, lr_fn(t), comm)
-            return params, opt_state, key, loss, comm
+            args = (params, opt_state, batch, lr_fn(t))
+            if has_comm:
+                args += (comm,)
+            if has_metrics:
+                args += (metrics,)
+            out = step_fn(*args)
+            params, opt_state, loss = out[0], out[1], out[2]
+            rest = list(out[3:])
+            if has_comm:
+                comm = rest.pop(0)
+            if has_metrics:
+                metrics = rest.pop(0)
+            return params, opt_state, key, loss, comm, metrics
 
-        def comm_run(params, opt_state, key, step0, num_steps, ctx=None,
-                     comm=None):
+        def aug_run(params, opt_state, key, step0, num_steps, ctx=None,
+                    comm=None, metrics=None):
             losses = []
             for t in range(num_steps):
-                params, opt_state, key, loss, comm = comm_one(
+                params, opt_state, key, loss, comm, metrics = aug_one(
                     params, opt_state, key,
-                    jnp.asarray(step0 + t, jnp.int32), ctx, comm)
+                    jnp.asarray(step0 + t, jnp.int32), ctx, comm, metrics)
                 losses.append(loss)
-            return (params, opt_state, key,
-                    jnp.stack(losses) if losses
-                    else jnp.zeros((0,), jnp.float32), comm)
+            out = (params, opt_state, key,
+                   jnp.stack(losses) if losses
+                   else jnp.zeros((0,), jnp.float32))
+            if has_comm:
+                out += (comm,)
+            if has_metrics:
+                out += (metrics,)
+            return out
 
-        comm_run.comm = True
-        return comm_run
+        aug_run.comm = has_comm
+        aug_run.metrics = has_metrics
+        return aug_run
 
     @jax.jit
     def one(params, opt_state, key, t, ctx=None):

@@ -37,6 +37,10 @@ def homogenization_round(public_logits, val_logits, cal_logits,
     val_logits:    (n, V, C) — each node's logits on its private D_V^i (ID)
     cal_logits:    (n, K, C) — each node's logits on D_C (OoD calibration)
     """
+    from repro.obs import log
+    log.debug("idkd.homogenization_round", n=public_logits.shape[0],
+              public=public_logits.shape[1], topology=topology.name,
+              detector=cfg.detector, temperature=cfg.temperature)
     return labeling.label_round(public_logits, val_logits, cal_logits,
                                 topology, cfg, backend="dense")
 

@@ -703,3 +703,34 @@ def shard_streaming_label_round(model, params, public_x, val_x,
             params, chunks, val_x)
     return SparseHomogenizedSet(distill.SparseLabels(vals, idx), w,
                                 id_mask, thresholds)
+
+
+def neighbor_topk_overlap(indices, topology: Topology):
+    """Telemetry diagnostic: how much of each node's top-k label index
+    set its graph neighbours share.
+
+    ``indices`` is the sparse payload's index tensor, shape
+    (n, P[, S], k) — each node's selected class/token ids per public
+    sample. For every undirected edge (i, j) the overlap is the
+    fraction of node i's entries that also appear in node j's set for
+    the same sample, averaged over samples (symmetric because both
+    sets have the same width k). Returns ``(mean, per_edge)`` where
+    ``per_edge`` maps ``"i-j"`` -> overlap fraction; mean is 0.0 on an
+    edgeless graph. Host-side numpy — runs once per homogenization
+    round, never inside jit.
+    """
+    import numpy as np
+
+    idx = np.asarray(indices)
+    n = idx.shape[0]
+    flat = idx.reshape(n, -1, idx.shape[-1])            # (n, M, k)
+    per_edge = {}
+    for i in range(n):
+        for j in topology.neighbors(i):
+            if j <= i:
+                continue
+            a, b = flat[i], flat[j]                      # (M, k) each
+            hit = (a[:, :, None] == b[:, None, :]).any(-1)
+            per_edge[f"{i}-{j}"] = float(hit.mean())
+    mean = float(np.mean(list(per_edge.values()))) if per_edge else 0.0
+    return mean, per_edge

@@ -778,6 +778,11 @@ def make_compressed_mixer(topology: Topology, backend: str = "auto",
     mix.bind = bind
     mix.compression = comp
     mix.gossip = gossip
+    # telemetry hook: the shared-estimate tree x̂ inside a comm pytree —
+    # each leaf row-congruent with params, so the metrics bus can form
+    # the CHOCO EF residual ‖x − x̂‖ (for kind "none" the 'prev' snapshot
+    # plays x̂ and the residual measures the delayed/stale gossip gap).
+    mix.ef_ref = lambda comm: comm["prev" if kind == "none" else "hat"]
     return mix
 
 
@@ -950,6 +955,10 @@ def make_compressed_ppermute_mixer(axis_names: Sequence[str],
     mix.compression = comp
     mix.gossip = gossip
     mix.axis_name = ax
+    # telemetry hook (see make_compressed_mixer): inside shard_map the
+    # comm leaves are this device's local (L, flat) rows, matching the
+    # local param rows, so the EF residual shards for free.
+    mix.ef_ref = lambda comm: comm["prev" if kind == "none" else "hat"]
     return mix
 
 
@@ -1011,6 +1020,9 @@ def make_model_sharded_mixer(inner, model_dims, model_size: int,
     mix.compression = getattr(inner, "compression", None)
     mix.gossip = getattr(inner, "gossip", "sync")
     mix.axis_name = inner.axis_name
+    # no ef_ref: the comm estimates are full-width (model-replicated)
+    # while params are model-sharded, so forming ‖x − x̂‖ would need an
+    # extra per-step all-gather; the metrics bus reports ef=0 here.
     return mix
 
 

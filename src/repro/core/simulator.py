@@ -109,6 +109,9 @@ class _SimFederation(sched.CompiledFederationHooks):
         self.phase = "plain"
         self.ctx = None
         self.sparse_round = False
+        # drop any previous run's (likely closed) telemetry sink; each
+        # run() passes its own through run_schedule
+        self.telemetry = None
 
     # ----------------------------------------------------- cache plumbing
     def _make_mixer(self, topo: Topology, active, stale=None):
@@ -136,7 +139,9 @@ class _SimFederation(sched.CompiledFederationHooks):
     def _base_step(self, topo: Topology, active: np.ndarray,
                    stale: np.ndarray):
         sim = self.sim
-        if (active.all() and not stale.any()
+        # the prebuilt steps from sim._build_jits were compiled without
+        # the metrics carry — telemetry runs rebuild through the cache
+        if (active.all() and not stale.any() and not self._metrics_on()
                 and topo.edge_key() == sim.gossip_topo.edge_key()
                 and self._force_state == sim._prebuilt_stateful):
             return {"plain": sim._plain_step, "kd_dense": sim._kd_step,
@@ -184,14 +189,29 @@ class _SimFederation(sched.CompiledFederationHooks):
         res.rounds.append({"step": step, "round": round_index,
                            "id_fraction": res.id_fraction,
                            "label_bytes": float(per_node.sum())})
+        # telemetry: run_schedule reads this right after on_round and
+        # forwards it to hooks.on_labels + the "labels" run-log event
+        stats = {"thresholds": np.asarray(hom.thresholds),
+                 "selected": id_counts, "id_fraction": res.id_fraction,
+                 "detector": cfg.detector}
+        if self.sparse_round:
+            mean_ov, per_edge = labeling.neighbor_topk_overlap(
+                np.asarray(hom.labels.indices), topo)
+            stats["topk_overlap"] = mean_ov
+            stats["topk_overlap_per_edge"] = per_edge
+        self.last_round_stats = stats
         return per_node
 
     def on_eval(self, params, step: int, losses) -> None:
         acc, nll = self.sim._eval(params)
         self.result.acc_history.append(acc)
         self.result.loss_history.append(nll)
-        self.result.consensus_history.append(
-            float(consensus_distance(params)))
+        cons = float(consensus_distance(params))
+        self.result.consensus_history.append(cons)
+        tel = self.telemetry
+        if tel is not None:
+            tel.event("accuracy", step=step, acc=acc, nll=nll,
+                      consensus=cons)
 
 
 class DecentralizedSimulator:
@@ -395,7 +415,8 @@ class DecentralizedSimulator:
 
     def run(self, schedule: Optional[sched.Schedule] = None,
             resume: Optional[Dict] = None,
-            capture_at: Optional[int] = None) -> SimResult:
+            capture_at: Optional[int] = None,
+            telemetry=None) -> SimResult:
         """Replay the federation schedule through the scheduler: chunked
         scan/host runners between boundaries, homogenization rounds
         re-labeling and refreshing the KD sampler as they fire, churn /
@@ -406,6 +427,11 @@ class DecentralizedSimulator:
         (as produced by ``capture_at``) restarting mid-schedule at a legal
         boundary; ``capture_at`` snapshots the state at that boundary into
         ``result.captured``.
+
+        ``telemetry`` (a :class:`repro.obs.Telemetry`) turns on the
+        observability layers for this run — JSONL run events, the
+        on-device metrics bus, and trace spans (DESIGN.md §11). The
+        trajectory is bitwise identical with it on or off.
         """
         t0 = time.time()
         tcfg = self.tcfg
@@ -476,7 +502,8 @@ class DecentralizedSimulator:
             topology=self.gossip_topo, ledger=ledger,
             param_count=int(nparams), elem_bytes=elem_bytes,
             payload_elems=payload_elems, index_bytes=index_bytes,
-            resume_step=resume_step, capture_at=capture_at)
+            resume_step=resume_step, capture_at=capture_at,
+            telemetry=telemetry)
 
         result.final_acc = (result.acc_history[-1]
                             if result.acc_history else 0.0)

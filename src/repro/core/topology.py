@@ -102,6 +102,20 @@ class Topology:
     # -- constructors --------------------------------------------------------
     @staticmethod
     def make(kind: str, n: int) -> "Topology":
+        topo = Topology._make(kind, n)
+        import logging
+
+        from repro.obs import log
+        if log.get_logger().isEnabledFor(logging.DEBUG):
+            # spectral_gap is an eigendecomposition — only pay for it
+            # when the debug line will actually be shown
+            log.debug("topology.make", kind=kind, n=n, name=topo.name,
+                      edges=sum(len(v) for v in topo.adj.values()) // 2,
+                      spectral_gap=round(topo.spectral_gap(), 4))
+        return topo
+
+    @staticmethod
+    def _make(kind: str, n: int) -> "Topology":
         if kind == "ring":
             return Topology(n, ring_edges(n), f"ring{n}")
         if kind == "chain":

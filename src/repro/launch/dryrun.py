@@ -40,6 +40,7 @@ from repro.launch.mesh import (HBM_BANDWIDTH, ICI_LINK_BANDWIDTH,
 from repro.launch.steps import (make_decode_step, make_prefill_step,
                                 make_train_step)
 from repro.models import build_model
+from repro.obs import log as obs_log
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
                 "u64": 8, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
@@ -276,12 +277,13 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
                                 if hw else 0.0)
     rec["status"] = "ok"
     if verbose:
-        print(f"[dryrun] {arch} × {shape_name} × {rec['mesh']}: "
-              f"compile {rec['compile_s']:.1f}s  "
-              f"compute {rec['compute_s']*1e3:.2f}ms  "
-              f"memory {rec['memory_s']*1e3:.2f}ms  "
-              f"collective {rec['collective_s']*1e3:.2f}ms  "
-              f"dominant={rec['dominant']}", flush=True)
+        obs_log.info("dryrun.ok", arch=arch, shape=shape_name,
+                     mesh=rec["mesh"],
+                     compile_s=round(rec["compile_s"], 1),
+                     compute_ms=round(rec["compute_s"] * 1e3, 2),
+                     memory_ms=round(rec["memory_s"] * 1e3, 2),
+                     collective_ms=round(rec["collective_s"] * 1e3, 2),
+                     dominant=rec["dominant"])
     return rec
 
 
@@ -307,7 +309,7 @@ def main():
                 tag = f"{arch}_{shape_name}_{'multi' if multi else 'single'}"
                 path = os.path.join(args.out, tag + ".json")
                 if os.path.exists(path):
-                    print(f"[dryrun] cached {tag}")
+                    obs_log.info("dryrun.cached", tag=tag)
                     continue
                 try:
                     rec = run_one(arch, shape_name, multi)
@@ -316,7 +318,7 @@ def main():
                            "mesh": "multi" if multi else "single",
                            "status": "error", "error": repr(e)[:2000]}
                     failures.append(tag)
-                    print(f"[dryrun] FAILED {tag}: {e}", flush=True)
+                    obs_log.warning("dryrun.failed", tag=tag, error=repr(e))
                 hlo = rec.pop("_hlo", None)
                 if hlo is not None:
                     import gzip
@@ -327,7 +329,8 @@ def main():
                     json.dump(rec, f, indent=1)
     if failures:
         raise SystemExit(f"dry-run failures: {failures}")
-    print("[dryrun] all requested combinations lowered + compiled OK")
+    obs_log.info("dryrun.done",
+                 status="all requested combinations lowered + compiled OK")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
 from repro.models import build_model
+from repro.obs import log as obs_log
 
 
 @dataclass
@@ -119,10 +120,11 @@ def main():
     out = server.submit_all(reqs)
     dt = time.time() - t0
     total_toks = sum(len(v) for v in out.values())
-    print(f"served {len(out)} requests, {total_toks} tokens "
-          f"in {dt:.1f}s ({total_toks/dt:.1f} tok/s)")
+    obs_log.info("serve.done", requests=len(out), tokens=total_toks,
+                 elapsed_s=round(dt, 1),
+                 tok_per_s=round(total_toks / dt, 1))
     for rid in sorted(out)[:3]:
-        print(f"  req {rid}: {out[rid][:10]}...")
+        obs_log.info("serve.req", rid=rid, head=list(out[rid][:10]))
 
 
 if __name__ == "__main__":

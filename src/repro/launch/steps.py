@@ -24,6 +24,7 @@ from repro.core.algorithms import make_algorithm
 from repro.core.driver import lm_adapter, make_step
 from repro.core.mixing import make_mixer
 from repro.core.topology import Topology
+from repro.obs import log as obs_log
 
 
 def stack_params(params, num_nodes: int):
@@ -47,6 +48,9 @@ def make_train_step(model, tcfg: TrainConfig, num_nodes: int,
                           weight_decay=tcfg.weight_decay)
     mixer = make_mixer(Topology.make(tcfg.topology, num_nodes),
                        wire_dtype=wire_dtype)
+    obs_log.debug("steps.make_train_step", algorithm=tcfg.algorithm,
+                  topology=tcfg.topology, nodes=num_nodes,
+                  wire_dtype=wire_dtype)
     inner = make_step(model, algo, mixer, lm_adapter)
 
     def train_step(params, opt_state, batch, lr):

@@ -63,6 +63,7 @@ from repro.data.dirichlet import dirichlet_partition
 from repro.data.synthetic import make_lm_data
 from repro.launch.steps import consensus_params, stack_params
 from repro.models import build_model
+from repro.obs import log as obs_log
 
 
 def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native",
@@ -213,9 +214,8 @@ class _LMFederation(sched.CompiledFederationHooks):
         if backend not in ("fused", "sparse"):
             # the LM KD step consumes sparse payloads; the dense
             # oracle backend is not an option at vocab scale
-            if self.verbose:
-                print(f"[idkd] label_backend={backend!r} unsupported "
-                      "for LM stacks; using 'sparse'")
+            obs_log.warning("idkd.backend_fallback", requested=backend,
+                            using="sparse")
             backend = "sparse"
         sparse, w, id_mask, thr = idkd_label_round(
             self.model, params, self.public_tokens, priv, cfg, topo,
@@ -229,13 +229,22 @@ class _LMFederation(sched.CompiledFederationHooks):
                 self.public_tokens, sparse.values, sparse.indices, w,
                 pub_batch=min(4, len(self.public_tokens)))
         self.phase = "kd"
+        id_fraction = float(np.asarray(id_mask).mean())
+        counts = np.asarray(id_mask).sum(axis=1)
         if self.verbose:
-            print(f"[idkd] step {step} (round {round_index}): kept "
-                  f"{float(np.asarray(id_mask).mean()):.2f} of public "
-                  f"set; thresholds {np.asarray(thr).round(3)}")
+            obs_log.info("idkd.round", step=step, round=round_index,
+                         id_fraction=round(id_fraction, 4),
+                         thresholds=np.asarray(thr).round(3).tolist())
+        # telemetry: run_schedule forwards this to on_labels + the
+        # "labels" run-log event right after on_round returns
+        mean_ov, per_edge = labeling.neighbor_topk_overlap(
+            np.asarray(sparse.indices), topo)
+        self.last_round_stats = {
+            "thresholds": np.asarray(thr), "selected": counts,
+            "id_fraction": id_fraction, "detector": cfg.detector,
+            "topk_overlap": mean_ov, "topk_overlap_per_edge": per_edge}
         k_wire = min(cfg.label_topk or labeling.DEFAULT_TOPK,
                      self.cfg.vocab_size)
-        counts = np.asarray(id_mask).sum(axis=1)
         return np.array([distill.label_bytes(int(c) * self.seq_len,
                                              self.cfg.vocab_size, k_wire)
                          for c in counts], np.float64)
@@ -247,8 +256,8 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
                  wire_dtype: str = "native", driver_mode: str = "scan",
                  events: Sequence = (),
                  schedule: Optional[sched.Schedule] = None,
-                 model_parallel: int = 1
-                 ) -> Dict[str, Any]:
+                 model_parallel: int = 1,
+                 telemetry=None) -> Dict[str, Any]:
     """End-to-end reduced-scale decentralized LM training (CPU-friendly).
 
     ``events`` (churn / rewire) and a custom ``schedule`` feed the
@@ -258,6 +267,10 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
     over the second (``"model"``) axis of the 2-D federation mesh
     (DESIGN.md §10): FSDP-style parameter/optimizer sharding,
     vocab-sharded streaming label rounds, node-axis-only gossip.
+
+    ``telemetry`` (a :class:`repro.obs.Telemetry`) turns on the run-log /
+    metrics-bus / trace-span layers for this run (DESIGN.md §11); the
+    trajectory is bitwise identical with it on or off.
     """
     n = tcfg.num_nodes
     model = build_model(cfg)
@@ -345,15 +358,17 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
     def on_eval(params, step, losses):
         history.append(float(losses[-1]))
         if verbose:
-            print(f"[train] step {step}: loss {history[-1]:.4f} "
-                  f"({time.time()-t0:.1f}s)", flush=True)
+            obs_log.info("train.eval", step=step,
+                         loss=round(history[-1], 4),
+                         elapsed_s=round(time.time() - t0, 1))
 
     fed.on_eval = on_eval
     params, opt_state, key, _ = sched.run_schedule(
         schedule, fed, params, opt_state, key, topology=topo,
         ledger=ledger, param_count=int(nparams),
         elem_bytes=sched.wire_elem_bytes(wire_dtype, cfg.dtype),
-        payload_elems=payload_elems, index_bytes=index_bytes)
+        payload_elems=payload_elems, index_bytes=index_bytes,
+        telemetry=telemetry)
     return {"params": consensus_params(params), "loss_history": history,
             "model": model, "topology": topo, "ledger": ledger.as_dict(),
             "schedule": schedule}
@@ -401,7 +416,16 @@ def main():
                          "(DESIGN.md §10)")
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-reduced) config — TPU scale")
+    ap.add_argument("--telemetry", default="", metavar="DIR",
+                    help="write run.jsonl (events + metrics-bus flushes) "
+                         "under DIR (DESIGN.md §11); off when empty")
+    ap.add_argument("--trace", action="store_true",
+                    help="also export Chrome trace_event spans to "
+                         "DIR/trace.json (Perfetto-loadable; needs "
+                         "--telemetry)")
     args = ap.parse_args()
+    if args.trace and not args.telemetry:
+        ap.error("--trace needs --telemetry DIR for the output location")
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
@@ -420,14 +444,32 @@ def main():
     events = (sched.parse_churn(args.churn, args.nodes, args.steps,
                                 mode=args.churn_mode)
               if args.churn else ())
-    out = run_training(cfg, tcfg, use_idkd=args.idkd,
-                       wire_dtype=args.wire_dtype, driver_mode=args.driver,
-                       events=events, model_parallel=args.model_parallel)
+    telemetry = None
+    if args.telemetry:
+        from repro.obs import Telemetry
+        telemetry = Telemetry(args.telemetry, trace=args.trace,
+                              meta={"arch": args.arch, "steps": args.steps,
+                                    "nodes": args.nodes,
+                                    "topology": args.topology,
+                                    "driver": args.driver,
+                                    "idkd": args.idkd})
+    try:
+        out = run_training(cfg, tcfg, use_idkd=args.idkd,
+                           wire_dtype=args.wire_dtype,
+                           driver_mode=args.driver, events=events,
+                           model_parallel=args.model_parallel,
+                           telemetry=telemetry)
+    finally:
+        if telemetry is not None:
+            telemetry.close()
     print(f"final loss: {out['loss_history'][-1]:.4f}")
     led = out["ledger"]
     print(f"comm ledger: {led['gossip_bytes']/1e6:.2f} MB gossip + "
           f"{led['label_bytes']/1e6:.3f} MB labels over "
           f"{len(led['per_round'])} round bucket(s)")
+    if args.telemetry:
+        print(f"telemetry: {args.telemetry}/run.jsonl"
+              + (f" + {args.telemetry}/trace.json" if args.trace else ""))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,142 @@
+"""On-device metrics bus: a pytree carried through the jitted runners.
+
+The metrics pytree rides the scan/host/shard runner carry exactly like
+PR 6's ``comm`` state — accumulated inside jit with zero host syncs and
+flushed only at segment (eval/chunk) boundaries. Layout (fixed across
+phases so the scan carry structure never changes):
+
+  ``steps``        ()   int32 — steps accumulated since the last flush
+  ``loss_sum``     (n,) f32   — per-node train-loss sum (mean at flush)
+  ``grad_sq_sum``  (n,) f32   — per-node squared grad-norm sum
+  ``consensus_sq`` (n,) f32   — ‖x_i − x̄‖² after the latest update
+  ``ef_sq``        (n,) f32   — ‖x_i − x̂_i‖² CHOCO error-feedback
+                                residual (zeros when no compression state)
+
+``consensus_sq``/``ef_sq`` are latest-step snapshots (overwritten each
+step); the sums are averaged at flush. The invariant
+``sqrt(sum(consensus_sq)) == mixing.consensus_distance(params)`` ties
+the in-jit accumulator to the host-side reference computation.
+
+:func:`update` has two addressing modes: node-stacked (vmap drivers,
+leading node axis) and shard (inside ``shard_map``, per-node quantities
+psum'd over the node axis; on 2-D federation meshes the per-leaf
+contributions of model-sharded leaves are additionally psum'd over the
+model axis — the same reduction split as the driver's
+``reduce_tree_sum`` hook).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+METRIC_FIELDS = ("loss_sum", "grad_sq_sum", "consensus_sq", "ef_sq")
+
+
+def init_node_metrics(n: int):
+    """Zeroed metrics pytree for ``n`` nodes (node-stacked layout)."""
+    z = jnp.zeros((n,), jnp.float32)
+    return {"steps": jnp.zeros((), jnp.int32),
+            "loss_sum": z, "grad_sq_sum": z, "consensus_sq": z, "ef_sq": z}
+
+
+def _rows_sq(x) -> jax.Array:
+    """(rows, ...) -> (rows,) sum of squares per leading row, f32."""
+    xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+    return jnp.sum(xf * xf, axis=1)
+
+
+def update(metrics, losses, grads, params, *, ef_ref=None,
+           axis_name: Optional[str] = None, num_nodes: int = 0,
+           model_dims=None, model_axis: str = "model"):
+    """One metrics-bus step; pure, jit-safe, no host syncs.
+
+    Node-stacked mode (``axis_name=None``): every leaf has a leading
+    node axis of size n; ``losses`` is (n,).
+
+    Shard mode (``axis_name`` = the node mesh axis): leaves hold the
+    local block of L = n // mesh rows, ``num_nodes`` is the global n and
+    the node mean is psum'd. ``model_dims`` (per-leaf sharded-dim list,
+    None entries = model-replicated) enables the 2-D mesh reduction:
+    sharded leaves contribute partial sums psum'd over ``model_axis``.
+
+    ``ef_ref`` is a pytree congruent with ``params`` rows (each leaf
+    reshapable to (rows, -1)) holding the mixer's shared estimate x̂.
+    """
+    p_leaves = jax.tree.leaves(params)
+    g_leaves = jax.tree.leaves(grads)
+    dims = (list(model_dims) if model_dims is not None
+            else [None] * len(p_leaves))
+
+    def combine(vals):
+        """Sum per-leaf (rows,) contributions, psum-ing sharded leaves
+        over the model axis so every model peer holds the full value."""
+        sharded = [v for v, d in zip(vals, dims) if d is not None]
+        replicated = [v for v, d in zip(vals, dims) if d is None]
+        total = jnp.zeros_like(vals[0])
+        if sharded:
+            total = total + jax.lax.psum(sum(sharded), model_axis)
+        if replicated:
+            total = total + sum(replicated)
+        return total
+
+    grad_sq = combine([_rows_sq(g) for g in g_leaves])
+
+    cons = []
+    for x in p_leaves:
+        xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+        if axis_name is None:
+            mean = jnp.mean(xf, axis=0, keepdims=True)
+        else:
+            mean = (jax.lax.psum(jnp.sum(xf, axis=0, keepdims=True),
+                                 axis_name) / num_nodes)
+        delta = xf - mean
+        cons.append(jnp.sum(delta * delta, axis=1))
+    consensus_sq = combine(cons)
+
+    if ef_ref is not None:
+        efs = []
+        for x, h in zip(p_leaves, jax.tree.leaves(ef_ref)):
+            xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+            hf = h.astype(jnp.float32).reshape(h.shape[0], -1)
+            d = xf - hf
+            efs.append(jnp.sum(d * d, axis=1))
+        ef_sq = combine(efs)
+    else:
+        ef_sq = jnp.zeros_like(metrics["ef_sq"])
+
+    return {"steps": metrics["steps"] + 1,
+            "loss_sum": metrics["loss_sum"] + losses.astype(jnp.float32),
+            "grad_sq_sum": metrics["grad_sq_sum"] + grad_sq,
+            "consensus_sq": consensus_sq,
+            "ef_sq": ef_sq}
+
+
+def reset(metrics):
+    """Zero the accumulators (same structure/placement — carry-safe)."""
+    return jax.tree.map(jnp.zeros_like, metrics)
+
+
+def summarize(metrics) -> dict:
+    """Host-side flush: device_get once, derive per-node scalars.
+
+    Returns per-node lists (``loss``, ``grad_norm``, ``consensus``,
+    ``ef_residual``) plus ``consensus_total`` = ‖X − 1x̄ᵀ‖_F, which
+    matches :func:`repro.core.mixing.consensus_distance`.
+    """
+    m = jax.device_get(metrics)
+    steps = max(int(m["steps"]), 1)
+    loss = np.asarray(m["loss_sum"], np.float64) / steps
+    grad = np.sqrt(np.asarray(m["grad_sq_sum"], np.float64) / steps)
+    cons_sq = np.maximum(np.asarray(m["consensus_sq"], np.float64), 0.0)
+    ef_sq = np.maximum(np.asarray(m["ef_sq"], np.float64), 0.0)
+    return {
+        "accum_steps": int(m["steps"]),
+        "loss": [float(v) for v in loss],
+        "grad_norm": [float(v) for v in grad],
+        "consensus": [float(v) for v in np.sqrt(cons_sq)],
+        "consensus_total": float(np.sqrt(cons_sq.sum())),
+        "ef_residual": [float(v) for v in np.sqrt(ef_sq)],
+    }

@@ -1,0 +1,123 @@
+"""Structured run events: append-only JSONL with a checked schema.
+
+Every scheduler-visible occurrence in a federation run — schedule
+segments, churn/rewire/stale transitions, label rounds, ledger traffic,
+metric flushes, evals — is one JSON object per line in ``run.jsonl``.
+The file alone reconstructs the run: per-node consensus distance and EF
+residual come from ``metrics`` events, detector thresholds and selected
+counts from ``labels`` events, wire bytes from ``comm`` events (the
+:class:`repro.sched.ledger.CommLedger` rows folded into the stream).
+
+Event kinds and their required fields live in :data:`EVENT_SCHEMA`;
+:func:`validate_runlog` is the CI schema check
+(``python -m repro.obs.check DIR``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import Counter
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+# kind -> required field names (beyond "ev" and "t"). Extra fields are
+# always allowed; the schema pins the minimum a reader can rely on.
+EVENT_SCHEMA: Dict[str, tuple] = {
+    "run_meta": (),                              # free-form run header
+    "schedule": ("segments", "steps"),           # compiled schedule shape
+    "segment": ("index", "start", "stop"),       # one runner invocation
+    "topology": ("step", "active"),              # churn / rewire / stale
+    "round": ("round", "step"),                  # homogenization fired
+    "labels": ("round", "step"),                 # label-round statistics
+    "comm": ("kind", "round", "per_node"),       # ledger row (gossip/labels)
+    "metrics": ("step", "loss", "consensus"),    # metrics-bus flush
+    "eval": ("step",),                           # scheduler eval boundary
+    "accuracy": ("step",),                       # host-side eval metrics
+    "run_end": (),                               # run summary footer
+}
+
+
+def _jsonable(v: Any) -> Any:
+    """Coerce numpy / jax scalars and arrays into plain JSON values."""
+    if hasattr(v, "tolist"):                     # np.ndarray, jax.Array
+        return v.tolist()
+    if hasattr(v, "item") and not isinstance(v, (int, float, bool, str)):
+        return v.item()
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if isinstance(v, Path):
+        return str(v)
+    return v
+
+
+class RunLog:
+    """Append-only JSONL event stream (line-buffered; valid mid-run)."""
+
+    def __init__(self, path):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._f = open(self.path, "a", buffering=1)
+        self._t0 = time.perf_counter()
+
+    def emit(self, ev: str, **fields) -> None:
+        if ev not in EVENT_SCHEMA:
+            raise ValueError(f"unknown run-log event kind {ev!r}; "
+                             f"add it to EVENT_SCHEMA")
+        missing = [k for k in EVENT_SCHEMA[ev] if k not in fields]
+        if missing:
+            raise ValueError(f"event {ev!r} missing required fields "
+                             f"{missing}")
+        rec = {"ev": ev, "t": round(time.perf_counter() - self._t0, 6)}
+        rec.update({k: _jsonable(v) for k, v in fields.items()})
+        self._f.write(json.dumps(rec) + "\n")
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+def validate_runlog(path) -> Counter:
+    """Parse + schema-check a run.jsonl; returns Counter of event kinds.
+
+    Raises ``ValueError`` on malformed JSON, unknown event kinds, or
+    missing required fields — the CI gate for telemetry artifacts.
+    """
+    counts: Counter = Counter()
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{lineno}: bad JSON: {e}") from e
+            ev = rec.get("ev")
+            if ev not in EVENT_SCHEMA:
+                raise ValueError(f"{path}:{lineno}: unknown event {ev!r}")
+            if "t" not in rec:
+                raise ValueError(f"{path}:{lineno}: missing timestamp 't'")
+            missing = [k for k in EVENT_SCHEMA[ev] if k not in rec]
+            if missing:
+                raise ValueError(f"{path}:{lineno}: event {ev!r} missing "
+                                 f"required fields {missing}")
+            counts[ev] += 1
+    if not counts:
+        raise ValueError(f"{path}: empty run log")
+    return counts
+
+
+def read_events(path, kind: Optional[str] = None):
+    """All events (optionally one kind) as a list of dicts — test helper."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            if kind is None or rec.get("ev") == kind:
+                out.append(rec)
+    return out

@@ -67,6 +67,12 @@ def gossip_bytes_per_step(topology: Topology, active: Optional[np.ndarray],
     return deg * elems * (int(elem_bytes) + int(index_bytes))
 
 
+# per-node traffic status codes for gossip entries (see LedgerEntry.status)
+STATUS_ACTIVE = 0       # training + gossiping normally
+STATUS_STALE = 1        # straggler: frozen *outgoing* payload, 0 send bytes
+STATUS_INACTIVE = 2     # churned out (freeze/isolate): no traffic at all
+
+
 @dataclass
 class LedgerEntry:
     round_index: int          # rounds fired so far when this traffic moved
@@ -74,6 +80,7 @@ class LedgerEntry:
     start: int                # first step of the span (labels: round step)
     stop: int                 # one past the last step (labels: == start)
     per_node: np.ndarray      # (n,) bytes
+    status: Optional[np.ndarray] = None   # (n,) int8 STATUS_* codes, or None
 
     @property
     def total(self) -> float:
@@ -88,11 +95,18 @@ class CommLedger:
     entries: List[LedgerEntry] = field(default_factory=list)
 
     def log_gossip(self, round_index: int, start: int, stop: int,
-                   per_node_bytes_per_step: np.ndarray) -> None:
+                   per_node_bytes_per_step: np.ndarray,
+                   status: Optional[np.ndarray] = None) -> None:
+        """``status`` (optional (n,) STATUS_* codes) attributes each
+        node's 0-byte rows explicitly: a stale straggler's frozen send
+        and a churned-out node's silence both cost 0 bytes, and without
+        the codes mixed-traffic rounds cannot tell the two apart in
+        ``per_round`` (the telemetry stream needs the distinction)."""
         per_node = np.asarray(per_node_bytes_per_step,
                               np.float64) * (stop - start)
+        st = (np.asarray(status, np.int8) if status is not None else None)
         self.entries.append(LedgerEntry(round_index, "gossip", start, stop,
-                                        per_node))
+                                        per_node, st))
 
     def log_labels(self, round_index: int, step: int,
                    per_node_bytes: np.ndarray) -> None:
@@ -122,7 +136,11 @@ class CommLedger:
 
     def per_round(self) -> List[Dict]:
         """One row per round bucket: gossip + label bytes, totals and
-        per-node breakdowns."""
+        per-node breakdowns. When gossip entries carry status codes the
+        row also attributes the quiet steps per node —
+        ``stale_steps_per_node`` (frozen outgoing payload) vs
+        ``inactive_steps_per_node`` (churned out entirely) — so a
+        0-byte node is never ambiguous in mixed-traffic rounds."""
         rounds = sorted({e.round_index for e in self.entries})
         out = []
         for r in rounds:
@@ -135,8 +153,19 @@ class CommLedger:
                 row[f"{kind}_bytes"] = float(np.sum(per_node))
                 row[f"{kind}_per_node"] = np.asarray(
                     per_node, np.float64).tolist()
-            row["steps"] = sum(e.stop - e.start for e in self.entries
-                               if e.round_index == r and e.kind == "gossip")
+            gossip_sel = [e for e in self.entries
+                          if e.round_index == r and e.kind == "gossip"]
+            row["steps"] = sum(e.stop - e.start for e in gossip_sel)
+            stale = np.zeros(self.num_nodes, np.int64)
+            inactive = np.zeros(self.num_nodes, np.int64)
+            for e in gossip_sel:
+                if e.status is None:
+                    continue
+                span = e.stop - e.start
+                stale += span * (e.status == STATUS_STALE)
+                inactive += span * (e.status == STATUS_INACTIVE)
+            row["stale_steps_per_node"] = stale.tolist()
+            row["inactive_steps_per_node"] = inactive.tolist()
             out.append(row)
         return out
 

@@ -63,10 +63,20 @@ class FederationHooks:
         Return None for plain synchronous gossip (the base default)."""
         return None
 
+    def init_metrics(self, params, topology: Topology) -> Optional[Any]:
+        """Build the on-device metrics-bus pytree (:mod:`repro.obs.
+        metrics`) threaded through every runner call when telemetry is
+        on. Return None to keep the metrics bus off (the base default)."""
+        return None
+
     def on_topology(self, topology: Topology, active: np.ndarray,
                     frozen: np.ndarray, stale: np.ndarray) -> None:
         """The gossip graph, availability mask, or straggler mask
         changed; invalidate or re-key any mixer/step caches."""
+
+    def on_segment(self, segment, index: int) -> None:
+        """A schedule segment is about to run (telemetry hook; the base
+        default does nothing)."""
 
     def on_round(self, params, round_index: int, step: int,
                  topology: Topology, active: np.ndarray
@@ -76,13 +86,23 @@ class FederationHooks:
         ledger (or None to skip label accounting)."""
         return None
 
+    def on_labels(self, round_index: int, step: int,
+                  stats: Optional[Dict]) -> None:
+        """Label-round statistics are available (telemetry hook).
+        ``stats`` is whatever the ``on_round`` implementation stashed in
+        ``self.last_round_stats`` — detector thresholds, per-node
+        selected counts, neighbour top-k overlap — or None when the
+        round produced none. The base default does nothing."""
+
     def runner(self, topology: Topology, active: np.ndarray,
                frozen: np.ndarray, stale: np.ndarray) -> Callable:
         """A ``run(params, opt_state, key, step0, num_steps)`` runner for
         the current phase, graph, availability mask, frozen subset, and
         straggler (stale) mask. A runner flagged ``run.comm`` takes and
         returns the gossip comm pytree: ``run(..., comm=comm) -> (params,
-        opt_state, key, losses, comm)``."""
+        opt_state, key, losses, comm)``; one flagged ``run.metrics``
+        takes and returns the metrics pytree the same way (trailing,
+        after comm when both are present)."""
         raise NotImplementedError
 
     def on_eval(self, params, step: int, losses) -> None:
@@ -141,6 +161,24 @@ class CompiledFederationHooks(FederationHooks):
         self._runners: Dict = {}
         self._node_mesh = None
         self._force_state = False
+        # telemetry: a repro.obs.Telemetry (or None). Its metrics flag
+        # turns the on-device metrics bus on, so the step/runner caches
+        # key on it — the same graph compiles differently with the
+        # metrics carry attached.
+        self.telemetry = None
+        # on_round implementations stash label-round statistics here for
+        # run_schedule to hand to on_labels / the run log
+        self.last_round_stats: Optional[Dict] = None
+
+    def _metrics_on(self) -> bool:
+        tel = self.telemetry
+        return tel is not None and getattr(tel, "metrics_enabled", False)
+
+    def init_metrics(self, params, topology: Topology) -> Optional[Any]:
+        if not self._metrics_on():
+            return None
+        from repro.obs import metrics as obs_metrics
+        return obs_metrics.init_node_metrics(topology.n)
 
     def _make_mixer(self, topology: Topology, active,
                     stale=None) -> Callable:
@@ -244,17 +282,19 @@ class CompiledFederationHooks(FederationHooks):
             return driver.make_shard_step(
                 self.model, self.algo, self._adapter(),
                 mesh=self.shard_mesh(topo.n), topology=topo,
-                compression=self.compression, gossip=self.gossip)
+                compression=self.compression, gossip=self.gossip,
+                telemetry=self._metrics_on())
         return driver.make_step(
             self.model, self.algo,
             self._mixer(topo, active, stale if stale.any() else None),
-            self._adapter())
+            self._adapter(), telemetry=self._metrics_on())
 
     def _step(self, topo: Topology, active: np.ndarray,
               frozen: np.ndarray, stale: np.ndarray):
         from repro.core import driver
         key = (self.phase, topo.edge_key(), self._mask_key(active),
-               self._freeze_key(frozen), self._stale_key(stale))
+               self._freeze_key(frozen), self._stale_key(stale),
+               self._metrics_on())
         if key not in self._steps:
             step = self._base_step(topo, active, stale)
             if self._freeze_key(frozen) is not None:
@@ -268,20 +308,25 @@ class CompiledFederationHooks(FederationHooks):
                frozen: np.ndarray, stale: np.ndarray) -> Callable:
         from repro.core import driver
         key = (self.phase, topo.edge_key(), self._mask_key(active),
-               self._freeze_key(frozen), self._stale_key(stale))
+               self._freeze_key(frozen), self._stale_key(stale),
+               self._metrics_on())
         if key not in self._runners:
             self._runners[key] = driver.make_runner(
                 self._step(topo, active, frozen, stale), self._sampler(),
                 self.lr_fn, self.driver_mode)
         run = self._runners[key]
-        if getattr(run, "comm", False):
+        has_comm = getattr(run, "comm", False)
+        has_metrics = getattr(run, "metrics", False)
+        if has_comm or has_metrics:
             ctx = None if self.phase == "plain" else self.ctx
 
-            def comm_run(p, o, k, s0, ns, comm=None, _run=run, _ctx=ctx):
-                return _run(p, o, k, s0, ns, _ctx, comm)
+            def aug_run(p, o, k, s0, ns, comm=None, metrics=None,
+                        _run=run, _ctx=ctx):
+                return _run(p, o, k, s0, ns, _ctx, comm, metrics)
 
-            comm_run.comm = True
-            return comm_run
+            aug_run.comm = has_comm
+            aug_run.metrics = has_metrics
+            return aug_run
         if self.phase == "plain":
             return run
         return lambda p, o, k, s0, ns: run(p, o, k, s0, ns, self.ctx)
@@ -339,8 +384,8 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
                  ledger: Optional[CommLedger] = None,
                  param_count: int = 0, elem_bytes: int = 4,
                  payload_elems: Optional[int] = None, index_bytes: int = 0,
-                 resume_step: int = 0, capture_at: Optional[int] = None
-                 ) -> Tuple[Any, Any, Any, Optional[Dict]]:
+                 resume_step: int = 0, capture_at: Optional[int] = None,
+                 telemetry=None) -> Tuple[Any, Any, Any, Optional[Dict]]:
     """Drive the full schedule. Returns ``(params, opt_state, key,
     captured)`` where ``captured`` is the ``{"params", "opt_state",
     "key", "step"}`` snapshot taken at the ``capture_at`` boundary
@@ -357,7 +402,34 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
     accounting (``mixing.payload_elem_count`` per-node elements and the
     4-byte int32 index rider of top-k/random-k sends); left at their
     defaults the gossip charge is the dense ``param_count · elem_bytes``.
+
+    ``telemetry`` (a :class:`repro.obs.Telemetry`, default None = fully
+    off) turns on the three observability layers: every schedule/segment/
+    topology/round/comm/eval occurrence becomes one JSONL event, the
+    metrics-bus pytree from ``hooks.init_metrics`` rides every runner
+    call and is flushed (then zeroed) at each segment boundary, and trace
+    spans wrap the label rounds, runner segments (tagged ``compile`` when
+    the call built a fresh runner), and evals.
     """
+    from contextlib import nullcontext
+
+    from repro.sched.ledger import (STATUS_ACTIVE, STATUS_INACTIVE,
+                                    STATUS_STALE)
+
+    # the hooks object is the source of truth mid-run (steps/runners key
+    # their caches on hooks._metrics_on()); an explicit telemetry= arg
+    # rebinds it, otherwise a fed.telemetry set by the caller survives
+    tel = telemetry if telemetry is not None \
+        else getattr(hooks, "telemetry", None)
+    hooks.telemetry = tel
+
+    def _ev(_event_kind, **fields):
+        if tel is not None:
+            tel.event(_event_kind, **fields)
+
+    def _span(name, **args):
+        return tel.span(name, **args) if tel is not None else nullcontext()
+
     n = topology.n
     schedule.validate_resume(resume_step)
     if capture_at is not None:
@@ -373,8 +445,14 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
     frozen = np.zeros(n, bool)    # down nodes with freeze (vs isolate) mode
     stale = np.zeros(n, bool)     # active stragglers with frozen payloads
     fired = 0                 # homogenization rounds fired so far
-    comm = hooks.init_comm(params, topology, schedule)
+    with _span("init_comm", cat="init"):
+        comm = hooks.init_comm(params, topology, schedule)
+    metrics = hooks.init_metrics(params, topology)
     captured: Optional[Dict] = None
+    _ev("schedule", segments=len(schedule.segments),
+        steps=schedule.segments[-1].stop if schedule.segments else 0,
+        rounds=schedule.num_rounds, gossip=schedule.gossip,
+        nodes=n, topology=topology.name, resume_step=resume_step)
 
     def _snapshot(step):
         snap = {"params": params, "opt_state": opt_state, "key": key,
@@ -386,7 +464,7 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
     if capture_at == 0:
         captured = _snapshot(0)
 
-    for seg in schedule.segments:
+    for seg_index, seg in enumerate(schedule.segments):
         skipped = seg.stop <= resume_step
         for ev in seg.events:
             if isinstance(ev, ChurnEvent):
@@ -416,42 +494,94 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
                     raise ValueError(f"churn at step {ev.step} leaves no "
                                      "active nodes")
                 hooks.on_topology(topology, active, frozen, stale)
+                _ev("topology", step=ev.step, change="churn", mode=ev.mode,
+                    down=list(ev.down), up=list(ev.up), active=active,
+                    frozen=frozen, stale=stale,
+                    mixing_rows=topology.mixing_matrix(
+                        None if active.all() else active))
             elif isinstance(ev, RewireEvent):
                 topology = _resolve_topology(ev, n)
                 hooks.on_topology(topology, active, frozen, stale)
+                _ev("topology", step=ev.step, change="rewire",
+                    graph=topology.name, active=active, frozen=frozen,
+                    stale=stale,
+                    mixing_rows=topology.mixing_matrix(
+                        None if active.all() else active))
             elif isinstance(ev, HomogenizeEvent):
                 if skipped:
                     fired += 1      # round happened before the checkpoint
                     continue
-                label_bytes = hooks.on_round(params, fired, ev.step,
-                                             topology, active)
+                with _span("label_round", cat="round", step=ev.step,
+                           round=fired):
+                    label_bytes = hooks.on_round(params, fired, ev.step,
+                                                 topology, active)
+                stats = getattr(hooks, "last_round_stats", None)
+                hooks.on_labels(fired, ev.step, stats)
+                _ev("round", round=fired, step=ev.step)
+                if stats:
+                    _ev("labels", round=fired, step=ev.step, **stats)
                 fired += 1
                 if ledger is not None and label_bytes is not None:
-                    ledger.log_labels(fired, ev.step,
-                                      np.asarray(label_bytes))
+                    per_node = np.asarray(label_bytes)
+                    ledger.log_labels(fired, ev.step, per_node)
+                    _ev("comm", kind="labels", round=fired, step=ev.step,
+                        per_node=per_node)
         if skipped:
             continue
 
+        hooks.on_segment(seg, seg_index)
+        _ev("segment", index=seg_index, start=seg.start, stop=seg.stop,
+            steps=seg.num_steps, round=fired, eval_after=seg.eval_after,
+            phase=getattr(hooks, "phase", None))
+        runner_cache = getattr(hooks, "_runners", None)
+        cached_runners = len(runner_cache) if runner_cache is not None else 0
         runner = hooks.runner(topology, active, frozen, stale)
+        new_runner = (runner_cache is not None
+                      and len(runner_cache) > cached_runners)
         if ledger is not None and param_count:
-            ledger.log_gossip(
-                fired, seg.start, seg.stop,
-                gossip_bytes_per_step(topology, active, param_count,
-                                      elem_bytes,
-                                      payload_elems=payload_elems,
-                                      index_bytes=index_bytes,
-                                      stale=stale if stale.any() else None))
+            status = np.where(
+                ~active, STATUS_INACTIVE,
+                np.where(stale, STATUS_STALE, STATUS_ACTIVE)).astype(np.int8)
+            per_step = gossip_bytes_per_step(
+                topology, active, param_count, elem_bytes,
+                payload_elems=payload_elems, index_bytes=index_bytes,
+                stale=stale if stale.any() else None)
+            ledger.log_gossip(fired, seg.start, seg.stop, per_step,
+                              status=status)
+            _ev("comm", kind="gossip", round=fired, start=seg.start,
+                stop=seg.stop, per_node=per_step * seg.num_steps,
+                status=status)
+        run_kwargs = {}
         if getattr(runner, "comm", False):
-            params, opt_state, key, losses, comm = runner(
-                params, opt_state, key, jnp.asarray(seg.start, jnp.int32),
-                seg.num_steps, comm=comm)
-        else:
-            params, opt_state, key, losses = runner(
-                params, opt_state, key, jnp.asarray(seg.start, jnp.int32),
-                seg.num_steps)
+            run_kwargs["comm"] = comm
+        if getattr(runner, "metrics", False):
+            run_kwargs["metrics"] = metrics
+        with _span("segment", cat="train", start=seg.start, stop=seg.stop,
+                   round=fired, compile=new_runner):
+            out = runner(params, opt_state, key,
+                         jnp.asarray(seg.start, jnp.int32), seg.num_steps,
+                         **run_kwargs)
+        params, opt_state, key, losses = out[:4]
+        rest = list(out[4:])
+        if "comm" in run_kwargs:
+            comm = rest.pop(0)
+        if "metrics" in run_kwargs:
+            metrics = rest.pop(0)
+            if tel is not None and metrics is not None:
+                # flush + zero at the chunk boundary: the only host sync
+                # telemetry adds, amortized over the whole segment
+                tel.flush_metrics(seg.stop, metrics, round=fired,
+                                  active=active, stale=stale)
+                from repro.obs import metrics as obs_metrics
+                metrics = obs_metrics.reset(metrics)
         if capture_at == seg.stop:
             captured = _snapshot(seg.stop)
         if seg.eval_after:
-            hooks.on_eval(params, seg.stop - 1, losses)
+            with _span("eval", cat="eval", step=seg.stop - 1):
+                hooks.on_eval(params, seg.stop - 1, losses)
+            _ev("eval", step=seg.stop - 1,
+                mean_loss=(float(np.mean(np.asarray(losses)))
+                           if getattr(losses, "size", 0) else None))
 
+    _ev("run_end", rounds=fired)
     return params, opt_state, key, captured

@@ -1,0 +1,374 @@
+"""Telemetry subsystem tests (DESIGN.md §11).
+
+The load-bearing guarantee: telemetry is *observation only*. Fixed-seed
+runs with the metrics bus / run log / trace spans on must be bitwise
+identical to runs with them off — sim and LM paths, node-stacked and
+sharded drivers (this file runs at 1 device under tier-1 and again at 8
+devices in the shard CI job). Plus schema validation for the JSONL run
+log and the Chrome trace, the jaxpr audit that the metrics carry adds
+no public-stack-shaped intermediate, and the acceptance scenario: one
+IDKD run whose run.jsonl alone reconstructs per-node consensus,
+thresholds, selected counts, EF residual, and ledger bytes per round.
+"""
+import json
+import logging
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.obs import (EVENT_SCHEMA, RunLog, Telemetry, TraceRecorder, log,
+                       read_events, validate_runlog, validate_trace)
+
+N = 4
+
+
+# ------------------------------------------------------------ obs.log
+def test_log_quiet_under_pytest():
+    """Default level resolution sees the pytest env and gates at
+    WARNING, so converted print sites stay silent in test runs."""
+    assert log._default_level() == logging.WARNING
+
+
+def test_log_set_level_roundtrip(capsys):
+    logger = log.get_logger()
+    before = logger.level
+    try:
+        log.set_level("DEBUG")
+        assert logger.isEnabledFor(logging.DEBUG)
+        log.set_level(logging.ERROR)
+        assert not logger.isEnabledFor(logging.WARNING)
+    finally:
+        logger.setLevel(before)
+
+
+# --------------------------------------------------------- obs.runlog
+def test_runlog_emit_and_validate(tmp_path):
+    path = tmp_path / "run.jsonl"
+    rl = RunLog(path)
+    rl.emit("run_meta", arch="x")
+    rl.emit("metrics", step=10, loss=[1.0] * N, consensus=[0.1] * N)
+    rl.emit("run_end", rounds=0)
+    rl.close()
+    counts = validate_runlog(path)
+    assert counts == {"run_meta": 1, "metrics": 1, "run_end": 1}
+    evs = read_events(path, "metrics")
+    assert evs[0]["step"] == 10 and "t" in evs[0]
+
+
+def test_runlog_rejects_bad_events(tmp_path):
+    rl = RunLog(tmp_path / "run.jsonl")
+    with pytest.raises(ValueError, match="unknown"):
+        rl.emit("not_a_kind")
+    with pytest.raises(ValueError, match="missing required"):
+        rl.emit("metrics", step=1)          # no loss/consensus
+    rl.close()
+
+
+def test_validate_runlog_rejects_malformed(tmp_path):
+    p = tmp_path / "run.jsonl"
+    p.write_text("")
+    with pytest.raises(ValueError, match="empty"):
+        validate_runlog(p)
+    p.write_text("not json\n")
+    with pytest.raises(ValueError, match="bad JSON"):
+        validate_runlog(p)
+    p.write_text(json.dumps({"ev": "mystery", "t": 0.0}) + "\n")
+    with pytest.raises(ValueError, match="unknown event"):
+        validate_runlog(p)
+    p.write_text(json.dumps({"ev": "metrics", "t": 0.0, "step": 1}) + "\n")
+    with pytest.raises(ValueError, match="missing required"):
+        validate_runlog(p)
+
+
+# ---------------------------------------------------------- obs.trace
+def test_trace_spans_export_and_validate(tmp_path):
+    tr = TraceRecorder()
+    with tr.span("outer", cat="test", idx=0):
+        with tr.span("inner"):
+            pass
+    tr.instant("mark")
+    out = tmp_path / "trace.json"
+    tr.export(out)
+    assert validate_trace(out) == 3
+    doc = json.loads(out.read_text())
+    durs = {e["name"]: e for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert durs["outer"]["dur"] >= durs["inner"]["dur"]
+    assert durs["outer"]["args"]["idx"] == 0
+
+
+def test_validate_trace_rejects_malformed(tmp_path):
+    p = tmp_path / "trace.json"
+    p.write_text(json.dumps({"traceEvents": "nope"}))
+    with pytest.raises(ValueError):
+        validate_trace(p)
+    p.write_text(json.dumps(
+        {"traceEvents": [{"name": "x", "ph": "X", "ts": 0.0}]}))
+    with pytest.raises(ValueError):                 # X without dur/pid
+        validate_trace(p)
+
+
+# ----------------------------------------------------- obs.check CLI
+def test_check_cli(tmp_path):
+    from repro.obs.check import main
+    assert main([str(tmp_path)]) == 1               # no run.jsonl yet
+    rl = RunLog(tmp_path / "run.jsonl")
+    rl.emit("run_meta")
+    rl.close()
+    assert main([str(tmp_path)]) == 0
+    assert main([str(tmp_path), "--require-trace"]) == 1
+    tr = TraceRecorder()
+    with tr.span("s"):
+        pass
+    tr.export(tmp_path / "trace.json")
+    assert main([str(tmp_path), "--require-trace"]) == 0
+
+
+# ------------------------------------------------- metrics-bus invariant
+def test_metrics_update_matches_consensus_distance():
+    from repro.core.mixing import consensus_distance
+    from repro.obs import metrics as obs_metrics
+    rng = np.random.default_rng(0)
+    params = {"w": rng.normal(size=(N, 6, 3)).astype(np.float32),
+              "b": rng.normal(size=(N, 3)).astype(np.float32)}
+    grads = jax.tree.map(np.ones_like, params)
+    m = obs_metrics.init_node_metrics(N)
+    m = obs_metrics.update(m, np.full((N,), 2.0, np.float32), grads, params)
+    s = obs_metrics.summarize(m)
+    assert s["accum_steps"] == 1
+    np.testing.assert_allclose(
+        s["consensus_total"], float(consensus_distance(params)), rtol=1e-5)
+    np.testing.assert_allclose(s["loss"], [2.0] * N)
+    total = sum(g.reshape(N, -1).sum(1) for g in jax.tree.leaves(grads))
+    np.testing.assert_allclose(np.square(s["grad_norm"]) * 1, total,
+                               rtol=1e-5)
+    m = obs_metrics.reset(m)
+    assert int(jax.device_get(m["steps"])) == 0
+
+
+# ------------------------------------------------------- jaxpr audit
+def _iter_avals(jaxpr):
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if hasattr(v, "aval"):
+                yield v.aval
+        for p in eqn.params.values():
+            for sub in (p if isinstance(p, (list, tuple)) else [p]):
+                inner = getattr(sub, "jaxpr", None)
+                if isinstance(sub, jax.core.Jaxpr):
+                    yield from _iter_avals(sub)
+                elif inner is not None and isinstance(inner,
+                                                      jax.core.Jaxpr):
+                    yield from _iter_avals(inner)
+
+
+def _dense_stack_avals(jaxpr, P, C):
+    return [a.shape for a in _iter_avals(jaxpr)
+            if getattr(a, "shape", ()) and a.shape[-1] == C
+            and P in a.shape[:-1]]
+
+
+def test_telemetry_step_jaxpr_has_no_public_stack():
+    """Extending the PR 5 audit: the metrics update rides the KD step
+    without materializing anything shaped like the full public logit
+    stack — its intermediates are parameter- and (n,)-shaped only."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import driver
+    from repro.core.algorithms import make_algorithm
+    from repro.core.mixing import make_mixer
+    from repro.core.topology import Topology
+    from repro.launch.steps import stack_params
+    from repro.models import build_model
+    from repro.obs import metrics as obs_metrics
+
+    n, B, S, P = 2, 2, 8, 16
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=32, num_heads=2, num_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=64, dtype="float32")
+    model = build_model(cfg)
+    icfg = IDKDConfig(label_topk=4, kd_weight=0.3)
+    step = driver.make_step(model, make_algorithm("qg-dsgdm-n"),
+                            make_mixer(Topology.make("ring", n)),
+                            driver.lm_sparse_kd_adapter(icfg),
+                            telemetry=True)
+    assert step.metrics
+    params = stack_params(model.init(jax.random.PRNGKey(0)), n)
+    opt = step.init_opt(params)
+    m0 = obs_metrics.init_node_metrics(n)
+    batch = {
+        "tokens": jnp.zeros((n, B, S), jnp.int32),
+        "labels": jnp.zeros((n, B, S), jnp.int32),
+        "pub_tokens": jnp.zeros((n, 2, S), jnp.int32),
+        "pub_vals": jnp.zeros((n, 2, S, 4), jnp.float32),
+        "pub_idx": jnp.zeros((n, 2, S, 4), jnp.int32),
+        "pub_w": jnp.ones((n, 2), jnp.float32),
+    }
+    jx = jax.make_jaxpr(step)(params, opt, batch,
+                              jnp.asarray(0.1, jnp.float32), m0)
+    assert not _dense_stack_avals(jx.jaxpr, P, cfg.vocab_size)
+
+
+# ---------------------------------------- on/off trajectory invariance
+def _sim_run(driver_mode, telemetry=None, **idkd_kw):
+    from repro.configs.resnet20_cifar import SMALL_CONFIG
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.data.synthetic import (make_classification_data,
+                                      make_public_data)
+    data = make_classification_data(image_size=8, n_train=256, n_val=64,
+                                    n_test=128, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=64, kind="aligned", seed=1)
+    tcfg = TrainConfig(algorithm="qg-dsgdm-n", num_nodes=N, alpha=0.05,
+                       steps=8, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=4, temperature=10.0,
+                                       label_topk=4,
+                                       label_backend="sparse", **idkd_kw))
+    mcfg = SMALL_CONFIG.replace(image_size=8, conv_backend="im2col")
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=4, driver_mode=driver_mode)
+    return sim.run(telemetry=telemetry)
+
+
+@pytest.mark.parametrize("driver_mode", ["scan", "shard"])
+def test_sim_trajectory_invariant_under_telemetry(driver_mode, tmp_path):
+    """Fixed seeds, telemetry fully on vs fully off: identical
+    accuracy / loss / consensus trajectories (scan and shard drivers —
+    the shard case re-runs at 8 devices in the CI shard job)."""
+    off = _sim_run(driver_mode)
+    tel = Telemetry(tmp_path, trace=True, meta={"mode": driver_mode})
+    on = _sim_run(driver_mode, telemetry=tel)
+    tel.close()
+    assert off.acc_history == on.acc_history
+    assert off.loss_history == on.loss_history
+    assert off.consensus_history == on.consensus_history
+    counts = validate_runlog(tmp_path / "run.jsonl")
+    assert counts["metrics"] > 0 and counts["accuracy"] > 0
+    assert validate_trace(tmp_path / "trace.json") > 0
+    # the metrics bus agrees with the host-side eval diagnostics: the
+    # flush at each eval boundary reconstructs consensus distance
+    flushes = {e["step"]: e for e in read_events(tmp_path / "run.jsonl",
+                                                 "metrics")}
+    evals = read_events(tmp_path / "run.jsonl", "accuracy")
+    for ev, cons in zip(evals, on.consensus_history):
+        flush = flushes[ev["step"] + 1]     # eval at stop-1, flush at stop
+        np.testing.assert_allclose(flush["consensus_total"], cons,
+                                   rtol=1e-4)
+        np.testing.assert_allclose(ev["consensus"], cons, rtol=1e-6)
+
+
+def _lm_run(telemetry=None):
+    from repro.configs import get_config
+    from repro.launch.train import run_training
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    tcfg = TrainConfig(num_nodes=2, steps=6, lr=0.1, alpha=0.1,
+                       batch_size=4,
+                       idkd=IDKDConfig(start_step=3, label_topk=4,
+                                       kd_weight=0.3))
+    out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                       use_idkd=True, log_every=2, verbose=False,
+                       telemetry=telemetry)
+    return out["loss_history"]
+
+
+def test_lm_trajectory_invariant_under_telemetry(tmp_path):
+    off = _lm_run()
+    tel = Telemetry(tmp_path, trace=True)
+    on = _lm_run(telemetry=tel)
+    tel.close()
+    assert off == on
+    counts = validate_runlog(tmp_path / "run.jsonl")
+    assert counts["labels"] == 1 and counts["metrics"] > 0
+    lab = read_events(tmp_path / "run.jsonl", "labels")[0]
+    assert len(lab["thresholds"]) == 2 and len(lab["selected"]) == 2
+    assert 0.0 <= lab["topk_overlap"] <= 1.0
+
+
+# --------------------------------------------- acceptance scenario
+def test_acceptance_idkd_run_reconstructs_from_jsonl(tmp_path):
+    """ISSUE 8 acceptance: 4 nodes, ring, 2 label rounds, top-k
+    compressed gossip, one stale event — the emitted run.jsonl alone
+    reconstructs per-node consensus distance, detector thresholds,
+    selected counts, EF residual, and ledger bytes per round, and the
+    trace JSON is Perfetto-loadable (validates as Chrome trace_event)."""
+    from repro import sched
+    from repro.configs.resnet20_cifar import SMALL_CONFIG
+    from repro.core.simulator import DecentralizedSimulator
+    from repro.data.synthetic import (make_classification_data,
+                                      make_public_data)
+    data = make_classification_data(image_size=8, n_train=256, n_val=64,
+                                    n_test=128, noise=1.0, seed=0)
+    pub = make_public_data(data, n_public=64, kind="aligned", seed=1)
+    mcfg = SMALL_CONFIG.replace(image_size=8, cnn_stages=(1, 1, 1),
+                                cnn_width=8, conv_backend="im2col")
+    tcfg = TrainConfig(num_nodes=N, steps=12, batch_size=8, seed=4,
+                       topology="ring", compression="topk",
+                       compression_frac=0.05,
+                       idkd=IDKDConfig(start_step=4, every_k_steps=4,
+                                       num_rounds=2, label_topk=4,
+                                       label_backend="sparse"))
+    sim = DecentralizedSimulator(mcfg, tcfg, data, pub, kd_mode="idkd",
+                                 eval_every=4)
+    schedule = sched.compile_schedule(
+        tcfg.steps, 4, round_steps=sim.default_schedule().round_steps,
+        events=[sched.ChurnEvent(step=2, down=(3,), mode="stale"),
+                sched.ChurnEvent(step=8, up=(3,))], gossip=tcfg.gossip)
+    tel = Telemetry(tmp_path, trace=True, meta={"scenario": "acceptance"})
+    r = sim.run(schedule=schedule, telemetry=tel)
+    tel.close()
+    validate_runlog(tmp_path / "run.jsonl")
+    assert validate_trace(tmp_path / "trace.json") > 0
+
+    # label rounds: thresholds + per-node selected counts, both rounds
+    labels = read_events(tmp_path / "run.jsonl", "labels")
+    assert [e["round"] for e in labels] == [0, 1]
+    for e in labels:
+        assert len(e["thresholds"]) == N and len(e["selected"]) == N
+    np.testing.assert_allclose(labels[-1]["thresholds"], r.thresholds,
+                               rtol=1e-6)
+
+    # metrics bus: per-node consensus + nonzero EF residual (top-k
+    # compression leaves most coordinates in the error-feedback state)
+    mets = read_events(tmp_path / "run.jsonl", "metrics")
+    assert all(len(e["consensus"]) == N and len(e["ef_residual"]) == N
+               for e in mets)
+    assert any(max(e["ef_residual"]) > 0 for e in mets)
+
+    # comm events reproduce the ledger's per-round gossip bytes and
+    # attribute the stale node (status 1 while step 2..8 was in flight)
+    comms = read_events(tmp_path / "run.jsonl", "comm")
+    gossip = [e for e in comms if e["kind"] == "gossip"]
+    by_round = {}
+    for e in gossip:
+        by_round[e["round"]] = (by_round.get(e["round"], 0)
+                                + sum(e["per_node"]))
+    for row in r.ledger["per_round"]:
+        if row["gossip_bytes"]:
+            np.testing.assert_allclose(by_round[row["round"]],
+                                       row["gossip_bytes"])
+    assert any(e["status"][3] == 1 for e in gossip)      # stale window
+    stale_rows = [row for row in r.ledger["per_round"]
+                  if any(row["stale_steps_per_node"])]
+    assert stale_rows and stale_rows[0]["stale_steps_per_node"][3] > 0
+
+    # topology events carry the mixing rows under churn
+    topo_evs = read_events(tmp_path / "run.jsonl", "topology")
+    assert len(topo_evs) == 2
+    W = np.asarray(topo_evs[0]["mixing_rows"])
+    assert W.shape == (N, N)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+
+
+def test_telemetry_off_writes_nothing(tmp_path):
+    """A Telemetry with events/metrics disabled is inert — and sim runs
+    without the argument never touch the obs layer."""
+    tel = Telemetry(None)
+    assert tel.runlog is None and tel.tracer is None
+    tel.event("run_end")                      # no-op, no crash
+    with tel.span("x"):
+        pass
+    tel.close()
+    assert list(tmp_path.iterdir()) == []

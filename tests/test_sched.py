@@ -193,6 +193,32 @@ def test_ledger_mixed_traffic_per_round():
     assert rows[2]["labels_per_node"] == (lab * 2).tolist()
 
 
+def test_ledger_status_attribution_per_round():
+    """A 0-byte node is never ambiguous: gossip entries carrying STATUS_*
+    codes let ``per_round`` attribute quiet steps as stale (frozen
+    outgoing payload) vs inactive (churned out), and legacy entries
+    without codes keep the columns at zero."""
+    from repro.sched.ledger import (STATUS_ACTIVE, STATUS_INACTIVE,
+                                    STATUS_STALE)
+    led = sched.CommLedger(4)
+    bps = np.array([100.0, 100.0, 0.0, 0.0])
+    led.log_gossip(0, 0, 6, bps,
+                   status=np.array([STATUS_ACTIVE, STATUS_ACTIVE,
+                                    STATUS_STALE, STATUS_INACTIVE]))
+    led.log_gossip(0, 6, 10, bps,
+                   status=np.array([STATUS_ACTIVE, STATUS_ACTIVE,
+                                    STATUS_ACTIVE, STATUS_INACTIVE]))
+    led.log_gossip(1, 10, 12, bps)                # no status: unattributed
+    rows = led.per_round()
+    assert rows[0]["stale_steps_per_node"] == [0, 0, 6, 0]
+    assert rows[0]["inactive_steps_per_node"] == [0, 0, 0, 10]
+    assert rows[0]["steps"] == 10
+    assert rows[1]["stale_steps_per_node"] == [0, 0, 0, 0]
+    assert rows[1]["inactive_steps_per_node"] == [0, 0, 0, 0]
+    # byte accounting is orthogonal to attribution
+    assert rows[0]["gossip_bytes"] == bps.sum() * 10
+
+
 def test_wire_elem_bytes():
     assert sched.wire_elem_bytes("float32", "bfloat16") == 4
     assert sched.wire_elem_bytes("native", "bfloat16") == 2
