@@ -502,6 +502,74 @@ def _lm_tel_cell():
     return rates, int(mesh.shape["node"])
 
 
+def _lm_guard_cell():
+    """Health-guard overhead cells (DESIGN.md §12): the plain LM
+    workload with the on-device guard carry off vs on, node-stacked scan
+    and shard_map runners, all four interleaved. Acceptance mirrors the
+    telemetry gate: on ≤ 1.05× off per runner (the guard update is
+    non-finite sweeps + a loss EMA fused into the step); trajectories
+    are bitwise identical either way (tests/test_resil.py)."""
+    from repro.launch.mesh import make_node_mesh
+    from repro.launch.sharding import (node_stacked_shardings,
+                                       node_stacked_specs)
+    from repro.resil import GuardSpec, guards as resil_guards
+
+    n, B, S = NODES, 8, 32
+    cfg = get_config("qwen3-1.7b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    model = build_model(cfg)
+    topo = Topology.make("ring", n)
+    mesh = make_node_mesh(n)
+    algo = make_algorithm("qg-dsgdm-n", momentum=0.9, weight_decay=1e-4)
+    tokens, topics = make_lm_data(cfg.vocab_size, S + 1, 512, seed=4)
+    parts = dirichlet_partition(topics, n, 0.1, np.random.default_rng(4))
+    params = stack_params(model.init(jax.random.PRNGKey(0)), n)
+    sampler = driver.make_lm_sampler(driver.pad_partitions(parts), tokens, B)
+    lr_fn = lambda s: jnp.asarray(0.1, jnp.float32)       # noqa: E731
+    k = jax.random.PRNGKey(0)
+    s0 = jnp.asarray(0, jnp.int32)
+    spec = GuardSpec(loss_spike_factor=10.0, consensus_max=1e4)
+
+    scan_off = driver.make_step(model, algo, make_mixer(topo),
+                                driver.lm_adapter)
+    scan_on = driver.make_step(model, algo, make_mixer(topo),
+                               driver.lm_adapter, guard=spec)
+    shard_off = driver.make_shard_step(model, algo, driver.lm_adapter,
+                                       mesh=mesh, topology=topo)
+    shard_on = driver.make_shard_step(model, algo, driver.lm_adapter,
+                                      mesh=mesh, topology=topo, guard=spec)
+    opt = scan_off.init_opt(params)
+    params_sh = jax.device_put(params,
+                               node_stacked_shardings(params, mesh, n))
+    opt_sh = jax.device_put(opt, node_stacked_shardings(opt, mesh, n))
+    g0 = resil_guards.init_node_guard(n)
+    g0_sh = jax.device_put(
+        g0, jax.tree.map(
+            lambda sp: jax.sharding.NamedSharding(mesh, sp),
+            node_stacked_specs(g0, n, "node")))
+    runners = {
+        "scan|off": driver.make_runner(scan_off, sampler, lr_fn, "scan"),
+        "scan|on": driver.make_runner(scan_on, sampler, lr_fn, "scan"),
+        "shard|off": driver.make_runner(shard_off, sampler, lr_fn, "shard"),
+        "shard|on": driver.make_runner(shard_on, sampler, lr_fn, "shard"),
+    }
+
+    def bench(key):
+        runr = runners[key]
+        mode, on = key.split("|")
+        p = params_sh if mode == "shard" else params
+        o = opt_sh if mode == "shard" else opt
+        if on == "on":
+            g = g0_sh if mode == "shard" else g0
+            return lambda: jax.block_until_ready(
+                runr(p, o, k, s0, CHUNK, None, None, None, g)[0])
+        return lambda: jax.block_until_ready(runr(p, o, k, s0, CHUNK)[0])
+
+    rates = _median_rates({key: bench(key) for key in runners})
+    return rates, int(mesh.shape["node"])
+
+
 def _lm_shard_comp_cell():
     """Sharded compressed-gossip cells: ``make_shard_step`` with the
     ppermute compressed mixer (top-k 1%, sync and delayed) against the
@@ -687,6 +755,25 @@ def run(out_path: str | None = "BENCH_driver.json"):
         dev = f"@{devices}dev" if mode == "shard" else ""
         ratio = tel_rates[f"{mode}|on"] / tel_rates[f"{mode}|off"]
         csv.append((f"driver/lm_plain_{mode}_telemetry_overhead{dev}", 0.0,
+                    f"{ratio:.3f}x"))
+    # health-guard overhead cells (DESIGN.md §12): off vs on per runner;
+    # same acceptance gate as telemetry, on ≤ 1.05x off
+    grd_rates, devices = _lm_guard_cell()
+    for key, us in grd_rates.items():
+        mode, on = key.split("|")
+        dev = f"@{devices}dev" if mode == "shard" else ""
+        csv.append((f"driver/lm_plain_{mode}_guards_{on}{dev}",
+                    round(us, 1), f"{1e6 / us:.1f} steps/s"))
+        cells.append({"path": "lm", "kd": False, "mode": mode,
+                      "guards": on == "on",
+                      **({"devices": devices} if mode == "shard" else {}),
+                      "us_per_step": round(us, 1),
+                      "us_per_step_p95": round(us.p95, 1),
+                      "steps_per_sec": round(1e6 / us, 2)})
+    for mode in ("scan", "shard"):
+        dev = f"@{devices}dev" if mode == "shard" else ""
+        ratio = grd_rates[f"{mode}|on"] / grd_rates[f"{mode}|off"]
+        csv.append((f"driver/lm_plain_{mode}_guards_overhead{dev}", 0.0,
                     f"{ratio:.3f}x"))
     # 2-D mesh-shape cells (node × model factorings of the device pool);
     # gossip bytes are mesh-shape-invariant — the guard watches that too

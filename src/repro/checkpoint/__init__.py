@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    SCHEMA_VERSION, checkpoint_checksum, load_checkpoint, save_checkpoint)

@@ -8,10 +8,27 @@ from __future__ import annotations
 
 import json
 import os
+import zlib
 from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
+
+# Bump when the on-disk layout changes incompatibly. Files written before
+# versioning existed (no "version" key) are rejected with a clear error —
+# silent misloads of skewed layouts are exactly what this guards against.
+SCHEMA_VERSION = 1
+
+
+def checkpoint_checksum(flat: Dict[str, np.ndarray]) -> int:
+    """CRC32 over every array's dtype, shape, and raw bytes in sorted key
+    order — cheap integrity cover for the whole npz payload."""
+    crc = 0
+    for key in sorted(flat):
+        arr = np.ascontiguousarray(flat[key])
+        head = f"{key}:{arr.dtype.str}:{arr.shape}".encode()
+        crc = zlib.crc32(arr.tobytes(), zlib.crc32(head, crc))
+    return crc & 0xFFFFFFFF
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -39,7 +56,8 @@ def save_checkpoint(path: str, params: Any, step: int = 0,
                     extra: Dict[str, Any] | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(params)
-    meta = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    meta = {"version": SCHEMA_VERSION, "step": step, "keys": sorted(flat),
+            "checksum": checkpoint_checksum(flat), "extra": extra or {}}
     np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
     with open(_meta_path(path), "w") as f:
         json.dump(meta, f)
@@ -51,10 +69,26 @@ def _meta_path(path: str) -> str:
 
 
 def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
-    """Restore into the structure of ``like`` (same treedef)."""
+    """Restore into the structure of ``like`` (same treedef).
+
+    Rejects loudly (``ValueError``) on: a missing/mismatched schema
+    version, a stored-vs-recomputed checksum mismatch (bit rot or a
+    truncated write), or a key-structure mismatch against ``like``."""
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
     with open(_meta_path(path)) as f:
         meta = json.load(f)
+    if meta.get("version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"checkpoint {path!r} schema version "
+            f"{meta.get('version')!r} != supported {SCHEMA_VERSION}; "
+            "refusing to load a version-skewed or pre-versioning file")
+    stored = {k: npz[k] for k in npz.files}
+    crc = checkpoint_checksum(stored)
+    if meta.get("checksum") != crc:
+        raise ValueError(
+            f"checkpoint {path!r} checksum mismatch: meta records "
+            f"{meta.get('checksum')!r}, arrays hash to {crc} — the npz "
+            "is corrupt or was modified after save")
     flat_like = _flatten(like)
     if sorted(flat_like) != meta["keys"]:
         missing = set(meta["keys"]) ^ set(flat_like)

@@ -171,7 +171,7 @@ def lm_sparse_kd_adapter(idkd_cfg: IDKDConfig) -> LossAdapter:
 
 # ----------------------------------------------------------- step factory
 def make_step(model, algo, mixer, loss_adapter,
-              telemetry: bool = False) -> Callable:
+              telemetry: bool = False, guard=None) -> Callable:
     """The one decentralized train step.
 
     ``loss_adapter`` is either ``adapter(model) -> node_loss`` directly
@@ -193,72 +193,78 @@ def make_step(model, algo, mixer, loss_adapter,
     are present: ``step(..., metrics) -> (..., metrics)``, flagged
     ``step.metrics = True``. The metrics pytree accumulates per-node
     loss / grad norm / consensus distance (and, with a stateful mixer,
-    the ‖x − x̂‖ EF residual via ``mixer.ef_ref``) with no host syncs;
-    the update touches nothing the training math reads, so telemetry-on
-    trajectories are bitwise-equal to telemetry-off.
+    the ‖x − x̂‖ EF residual via ``mixer.ef_ref``) with no host syncs.
+
+    ``guard`` (a ``repro.resil.GuardSpec``) appends the on-device health
+    guard (:mod:`repro.resil.guards`) as the last trailing carry, after
+    comm and metrics: ``step(..., guard) -> (..., guard)``, flagged
+    ``step.guard = True``. When the mixer carries fault injection its
+    ``wire_check`` feeds per-sender wire invalidity into the guard.
+
+    Trailing carries are always ordered (comm, metrics, guard). The
+    metrics and guard updates touch nothing the training math reads, so
+    telemetry-on / guard-on trajectories are bitwise-equal to the plain
+    step.
     """
     node_loss = loss_adapter(model)
     grad_fn = jax.vmap(jax.value_and_grad(node_loss))
     if telemetry:
         from repro.obs import metrics as obs_metrics
+    if guard is not None:
+        from repro.resil import guards as resil_guards
     ef_fn = getattr(mixer, "ef_ref", None) if telemetry else None
+    stateful = getattr(mixer, "stateful", False)
+    wire_check = getattr(mixer, "wire_check", None)
 
-    if getattr(mixer, "stateful", False):
-        if telemetry:
-            def tele_comm_step(params, opt_state, batch, lr, comm, metrics):
-                losses, grads = grad_fn(params, batch)
-                bound = mixer.bind(comm)
-                params, opt_state = algo.step(params, grads, opt_state, lr,
-                                              bound)
-                comm = bound.finalize()
-                metrics = obs_metrics.update(
-                    metrics, losses, grads, params,
-                    ef_ref=ef_fn(comm) if ef_fn is not None else None)
-                return params, opt_state, jnp.mean(losses), comm, metrics
-
-            tele_comm_step.comm = True
-            tele_comm_step.metrics = True
-            tele_comm_step.init_comm = mixer.init_state
-            tele_comm_step.init_opt = algo.init
-            return tele_comm_step
-
-        def comm_step(params, opt_state, batch, lr, comm):
-            losses, grads = grad_fn(params, batch)
+    def step(params, opt_state, batch, lr, *rest):
+        rest = list(rest)
+        comm = rest.pop(0) if stateful else None
+        metrics = rest.pop(0) if telemetry else None
+        guard_state = rest.pop(0) if guard is not None else None
+        # sender attribution must read the *pre-mix* payload: after the
+        # mix, propagated corruption (validate_wire=False) has already
+        # poisoned the victims' params, and checking those would flag
+        # victim and offender in the same step — the strictly-later
+        # invariant wire_offenders relies on only holds pre-mix
+        wire_invalid = (wire_check(params)
+                        if guard is not None and wire_check is not None
+                        else None)
+        losses, grads = grad_fn(params, batch)
+        if stateful:
             bound = mixer.bind(comm)
             params, opt_state = algo.step(params, grads, opt_state, lr,
                                           bound)
-            return params, opt_state, jnp.mean(losses), bound.finalize()
-
-        comm_step.comm = True
-        comm_step.init_comm = mixer.init_state
-        comm_step.init_opt = algo.init
-        return comm_step
-
-    if telemetry:
-        def tele_step(params, opt_state, batch, lr, metrics):
-            losses, grads = grad_fn(params, batch)
+            comm = bound.finalize()
+        else:
             params, opt_state = algo.step(params, grads, opt_state, lr,
                                           mixer)
-            metrics = obs_metrics.update(metrics, losses, grads, params)
-            return params, opt_state, jnp.mean(losses), metrics
+        out = [params, opt_state, jnp.mean(losses)]
+        if stateful:
+            out.append(comm)
+        if telemetry:
+            out.append(obs_metrics.update(
+                metrics, losses, grads, params,
+                ef_ref=(ef_fn(comm) if stateful and ef_fn is not None
+                        else None)))
+        if guard is not None:
+            out.append(resil_guards.update(
+                guard_state, guard, losses, grads, params,
+                wire_invalid=wire_invalid))
+        return tuple(out)
 
-        tele_step.metrics = True
-        tele_step.init_opt = algo.init
-        return tele_step
-
-    def step(params, opt_state, batch, lr):
-        losses, grads = grad_fn(params, batch)
-        params, opt_state = algo.step(params, grads, opt_state, lr, mixer)
-        return params, opt_state, jnp.mean(losses)
-
+    step.comm = stateful
+    step.metrics = telemetry
+    step.guard = guard is not None
+    if stateful:
+        step.init_comm = mixer.init_state
     step.init_opt = algo.init
     return step
 
 
 def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
                     axis: str = NODE_AXIS, compression=None,
-                    gossip: str = "sync",
-                    telemetry: bool = False) -> Callable:
+                    gossip: str = "sync", telemetry: bool = False,
+                    guard=None) -> Callable:
     """The decentralized train step under ``shard_map`` over the mesh
     node axis — the ``driver_mode="shard"`` twin of :func:`make_step`.
 
@@ -317,6 +323,12 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
     for 1-D compressed/delayed gossip and for the shard-native
     uncompressed state; the 2-D compressed mixer keeps full-width
     estimates against sharded params, so its ``ef_sq`` stays zero.
+
+    ``guard`` (a ``repro.resil.GuardSpec``) appends the on-device health
+    guard carry after metrics, sharded over the node axis like the
+    metrics bus and following the same 2-D model-axis reduction split
+    (wire fault injection has no shard path — ``validate_shard_schedule``
+    rejects drop/corrupt faults — so ``wire_invalid`` stays zero here).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -375,9 +387,14 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
 
     if telemetry:
         from repro.obs import metrics as obs_metrics
+    if guard is not None:
+        from repro.resil import guards as resil_guards
 
     if getattr(mixer, "stateful", False):
-        def comm_step(params, opt_state, batch, lr, comm, metrics=None):
+        def comm_step(params, opt_state, batch, lr, comm, *rest):
+            rest = list(rest)
+            metrics = rest.pop(0) if telemetry else None
+            guard_state = rest.pop(0) if guard is not None else None
             p_specs = specs_of(params)
             model_dims = _leaf_model_dims(p_specs)
             step_mixer = mixer
@@ -404,38 +421,49 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
                                               bound)
                 comm = bound.finalize()
                 loss = jax.lax.psum(jnp.sum(losses), axis) / n
-                if not m:
-                    return params, opt_state, loss, comm
-                metrics = obs_metrics.update(
-                    m[0], losses, grads, params,
-                    ef_ref=ef_fn(comm) if ef_fn is not None else None,
-                    axis_name=axis, num_nodes=n,
-                    model_dims=(model_dims if model_size > 1 else None),
-                    model_axis=model_axis)
-                return params, opt_state, loss, comm, metrics
+                out = [params, opt_state, loss, comm]
+                m = list(m)
+                if metrics is not None:
+                    out.append(obs_metrics.update(
+                        m.pop(0), losses, grads, params,
+                        ef_ref=ef_fn(comm) if ef_fn is not None else None,
+                        axis_name=axis, num_nodes=n,
+                        model_dims=(model_dims if model_size > 1 else None),
+                        model_axis=model_axis))
+                if guard_state is not None:
+                    out.append(resil_guards.update(
+                        m.pop(0), guard, losses, grads, params,
+                        axis_name=axis, num_nodes=n,
+                        model_dims=(model_dims if model_size > 1 else None),
+                        model_axis=model_axis))
+                return tuple(out)
 
             base_in = (p_specs, specs_of(opt_state),
                        node_stacked_specs(batch, n, axis), P(),
                        specs_of(comm))
             base_out = (p_specs, specs_of(opt_state), P(), specs_of(comm))
-            if metrics is None:
-                sharded = shard_map(comm_body, mesh=mesh, in_specs=base_in,
-                                    out_specs=base_out, check_rep=False)
-                return sharded(params, opt_state, batch, lr, comm)
-            m_specs = node_stacked_specs(metrics, n, axis)
+            extra_specs, extra_args = (), ()
+            for carry in (metrics, guard_state):
+                if carry is not None:
+                    extra_specs += (node_stacked_specs(carry, n, axis),)
+                    extra_args += (carry,)
             sharded = shard_map(comm_body, mesh=mesh,
-                                in_specs=base_in + (m_specs,),
-                                out_specs=base_out + (m_specs,),
+                                in_specs=base_in + extra_specs,
+                                out_specs=base_out + extra_specs,
                                 check_rep=False)
-            return sharded(params, opt_state, batch, lr, comm, metrics)
+            return sharded(params, opt_state, batch, lr, comm, *extra_args)
 
         comm_step.comm = True
         comm_step.metrics = telemetry
+        comm_step.guard = guard is not None
         comm_step.init_comm = mixer.init_state
         comm_step.init_opt = algo.init
         return comm_step
 
-    def step(params, opt_state, batch, lr, metrics=None):
+    def step(params, opt_state, batch, lr, *rest):
+        rest = list(rest)
+        metrics = rest.pop(0) if telemetry else None
+        guard_state = rest.pop(0) if guard is not None else None
         p_specs = specs_of(params)
         model_dims = _leaf_model_dims(p_specs)
 
@@ -450,28 +478,38 @@ def make_shard_step(model, algo, loss_adapter, *, mesh, topology,
             params, opt_state = algo.step(params, grads, opt_state, lr,
                                           mixer)
             loss = jax.lax.psum(jnp.sum(losses), axis) / n
-            if not m:
-                return params, opt_state, loss
-            metrics = obs_metrics.update(
-                m[0], losses, grads, params, axis_name=axis, num_nodes=n,
-                model_dims=(model_dims if model_size > 1 else None),
-                model_axis=model_axis)
-            return params, opt_state, loss, metrics
+            out = [params, opt_state, loss]
+            m = list(m)
+            if metrics is not None:
+                out.append(obs_metrics.update(
+                    m.pop(0), losses, grads, params, axis_name=axis,
+                    num_nodes=n,
+                    model_dims=(model_dims if model_size > 1 else None),
+                    model_axis=model_axis))
+            if guard_state is not None:
+                out.append(resil_guards.update(
+                    m.pop(0), guard, losses, grads, params,
+                    axis_name=axis, num_nodes=n,
+                    model_dims=(model_dims if model_size > 1 else None),
+                    model_axis=model_axis))
+            return tuple(out)
 
         base_in = (p_specs, specs_of(opt_state),
                    node_stacked_specs(batch, n, axis), P())
         base_out = (p_specs, specs_of(opt_state), P())
-        if metrics is None:
-            sharded = shard_map(body, mesh=mesh, in_specs=base_in,
-                                out_specs=base_out, check_rep=False)
-            return sharded(params, opt_state, batch, lr)
-        m_specs = node_stacked_specs(metrics, n, axis)
-        sharded = shard_map(body, mesh=mesh, in_specs=base_in + (m_specs,),
-                            out_specs=base_out + (m_specs,),
+        extra_specs, extra_args = (), ()
+        for carry in (metrics, guard_state):
+            if carry is not None:
+                extra_specs += (node_stacked_specs(carry, n, axis),)
+                extra_args += (carry,)
+        sharded = shard_map(body, mesh=mesh,
+                            in_specs=base_in + extra_specs,
+                            out_specs=base_out + extra_specs,
                             check_rep=False)
-        return sharded(params, opt_state, batch, lr, metrics)
+        return sharded(params, opt_state, batch, lr, *extra_args)
 
     step.metrics = telemetry
+    step.guard = guard is not None
     step.init_opt = algo.init
     return step
 
@@ -507,6 +545,7 @@ def make_frozen_step(step_fn, active) -> Callable:
 
     step.comm = getattr(step_fn, "comm", False)
     step.metrics = getattr(step_fn, "metrics", False)
+    step.guard = getattr(step_fn, "guard", False)
     if hasattr(step_fn, "init_comm"):
         step.init_comm = step_fn.init_comm
     step.init_opt = step_fn.init_opt
@@ -744,19 +783,23 @@ def make_scan_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
     comm)``: the mixer state rides the scan carry next to params, flagged
     ``run.comm = True``. A metrics-carrying step (``step_fn.metrics`` —
     the :mod:`repro.obs` metrics bus) appends ``metrics`` the same way
-    (after comm when both are present), flagged ``run.metrics = True``.
-    Both carries ride one generic scan: jax treats ``None`` as an empty
-    pytree, so absent carries cost nothing in the compiled program.
+    (after comm when both are present), flagged ``run.metrics = True``;
+    a guard-carrying step (``step_fn.guard`` — the
+    :mod:`repro.resil.guards` health guard) appends ``guard`` last,
+    flagged ``run.guard = True``. All carries ride one generic scan: jax
+    treats ``None`` as an empty pytree, so absent carries cost nothing
+    in the compiled program.
     """
     has_comm = getattr(step_fn, "comm", False)
     has_metrics = getattr(step_fn, "metrics", False)
+    has_guard = getattr(step_fn, "guard", False)
 
-    if has_comm or has_metrics:
+    if has_comm or has_metrics or has_guard:
         @functools.partial(jax.jit, static_argnums=(4,))
         def aug_run(params, opt_state, key, step0, num_steps, ctx=None,
-                    comm=None, metrics=None):
+                    comm=None, metrics=None, guard=None):
             def body(carry, t):
-                params, opt_state, key, comm, metrics = carry
+                params, opt_state, key, comm, metrics, guard = carry
                 key, sub = jax.random.split(key)
                 batch = (sample_fn(sub, step0 + t) if ctx is None
                          else sample_fn(sub, step0 + t, ctx))
@@ -765,6 +808,8 @@ def make_scan_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
                     args += (comm,)
                 if has_metrics:
                     args += (metrics,)
+                if has_guard:
+                    args += (guard,)
                 out = step_fn(*args)
                 params, opt_state, loss = out[0], out[1], out[2]
                 rest = list(out[3:])
@@ -772,20 +817,26 @@ def make_scan_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
                     comm = rest.pop(0)
                 if has_metrics:
                     metrics = rest.pop(0)
-                return (params, opt_state, key, comm, metrics), loss
+                if has_guard:
+                    guard = rest.pop(0)
+                return (params, opt_state, key, comm, metrics, guard), loss
 
-            (params, opt_state, key, comm, metrics), losses = jax.lax.scan(
-                body, (params, opt_state, key, comm, metrics),
-                jnp.arange(num_steps))
+            (params, opt_state, key, comm, metrics, guard), losses = \
+                jax.lax.scan(
+                    body, (params, opt_state, key, comm, metrics, guard),
+                    jnp.arange(num_steps))
             out = (params, opt_state, key, losses)
             if has_comm:
                 out += (comm,)
             if has_metrics:
                 out += (metrics,)
+            if has_guard:
+                out += (guard,)
             return out
 
         aug_run.comm = has_comm
         aug_run.metrics = has_metrics
+        aug_run.guard = has_guard
         return aug_run
 
     @functools.partial(jax.jit, static_argnums=(4,))
@@ -812,11 +863,12 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
     handling matches the scan body exactly, so trajectories agree."""
     has_comm = getattr(step_fn, "comm", False)
     has_metrics = getattr(step_fn, "metrics", False)
+    has_guard = getattr(step_fn, "guard", False)
 
-    if has_comm or has_metrics:
+    if has_comm or has_metrics or has_guard:
         @jax.jit
         def aug_one(params, opt_state, key, t, ctx=None, comm=None,
-                    metrics=None):
+                    metrics=None, guard=None):
             key, sub = jax.random.split(key)
             batch = (sample_fn(sub, t) if ctx is None
                      else sample_fn(sub, t, ctx))
@@ -825,6 +877,8 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
                 args += (comm,)
             if has_metrics:
                 args += (metrics,)
+            if has_guard:
+                args += (guard,)
             out = step_fn(*args)
             params, opt_state, loss = out[0], out[1], out[2]
             rest = list(out[3:])
@@ -832,15 +886,18 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
                 comm = rest.pop(0)
             if has_metrics:
                 metrics = rest.pop(0)
-            return params, opt_state, key, loss, comm, metrics
+            if has_guard:
+                guard = rest.pop(0)
+            return params, opt_state, key, loss, comm, metrics, guard
 
         def aug_run(params, opt_state, key, step0, num_steps, ctx=None,
-                    comm=None, metrics=None):
+                    comm=None, metrics=None, guard=None):
             losses = []
             for t in range(num_steps):
-                params, opt_state, key, loss, comm, metrics = aug_one(
-                    params, opt_state, key,
-                    jnp.asarray(step0 + t, jnp.int32), ctx, comm, metrics)
+                params, opt_state, key, loss, comm, metrics, guard = \
+                    aug_one(params, opt_state, key,
+                            jnp.asarray(step0 + t, jnp.int32), ctx, comm,
+                            metrics, guard)
                 losses.append(loss)
             out = (params, opt_state, key,
                    jnp.stack(losses) if losses
@@ -849,10 +906,13 @@ def make_host_runner(step_fn, sample_fn: SampleFn, lr_fn) -> Callable:
                 out += (comm,)
             if has_metrics:
                 out += (metrics,)
+            if has_guard:
+                out += (guard,)
             return out
 
         aug_run.comm = has_comm
         aug_run.metrics = has_metrics
+        aug_run.guard = has_guard
         return aug_run
 
     @jax.jit

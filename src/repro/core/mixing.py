@@ -191,6 +191,7 @@ def make_mixer(topology: Topology, backend: str = "auto",
                wire_dtype: str = "native", active=None,
                compression=None, gossip: str = "sync", stale=None,
                stateful: bool = None, consensus_lr: float = 1.0,
+               wire_fault=None, wire_guard=None,
                **ppermute_kw) -> Mixer:
     """One entry point for every gossip backend (see module docstring).
 
@@ -228,8 +229,23 @@ def make_mixer(topology: Topology, backend: str = "auto",
     forces the stateful protocol even for plain sync uncompressed gossip —
     the scheduler uses it so the comm pytree's structure stays constant
     across a schedule whose *later* segments mark nodes stale.
+
+    ``wire_fault`` (a :class:`repro.resil.WireFault`) injects the
+    scheduler's per-segment drop/corrupt faults and receive-side payload
+    validation into the wire (DESIGN.md §12): stateless mixers are
+    wrapped by :func:`repro.resil.make_validated_mixer`, the compressed
+    stateful path masks invalid delta payloads out of its ``fresh``
+    update. ``wire_guard`` (a ``resil.GuardSpec``) supplies the
+    validation bound and the ``validate_wire`` switch. Without a fault
+    the mixers are returned untouched — fault-free wires pay nothing.
     """
     requested = backend
+    fault_on = wire_fault is not None and not wire_fault.is_noop()
+    if fault_on and backend == "ppermute":
+        raise ValueError(
+            "wire fault injection has no shard_map path (drop/corrupt "
+            "faults are rejected by validate_shard_schedule); run fault "
+            "schedules node-stacked with backend='gather' (or 'dense')")
     if gossip not in GOSSIP_MODES:
         raise ValueError(f"unknown gossip mode {gossip!r}; expected one "
                          f"of {GOSSIP_MODES}")
@@ -284,11 +300,14 @@ def make_mixer(topology: Topology, backend: str = "auto",
         mix = make_compressed_mixer(
             topology, backend, wire_dtype, active=active,
             stale=(stale if stale_any else None),
-            compression=comp, gossip=gossip, consensus_lr=consensus_lr)
+            compression=comp, gossip=gossip, consensus_lr=consensus_lr,
+            wire_fault=(wire_fault if fault_on else None),
+            wire_guard=wire_guard)
         mix.remake = lambda active=None, stale=None: make_mixer(
             topology, requested, wire_dtype, active=active,
             compression=comp, gossip=gossip, stale=stale, stateful=True,
-            consensus_lr=consensus_lr)
+            consensus_lr=consensus_lr, wire_fault=wire_fault,
+            wire_guard=wire_guard)
         return mix
     if backend == "auto":
         backend = "roll" if _is_ring(topology) and not masked else "gather"
@@ -341,8 +360,18 @@ def make_mixer(topology: Topology, backend: str = "auto",
     else:
         raise ValueError(f"unknown mixer backend {backend!r}; expected one "
                          "of ('auto', 'dense', 'gather', 'roll', 'ppermute')")
+    if fault_on:
+        from repro.resil.faults import (DEFAULT_MAX_ABS,
+                                        make_validated_mixer)
+        mix = make_validated_mixer(
+            mix, topology.mixing_matrix(active), wire_fault,
+            max_abs=(wire_guard.max_abs if wire_guard is not None
+                     else DEFAULT_MAX_ABS),
+            validate=(wire_guard.validate_wire
+                      if wire_guard is not None else True))
     mix.remake = lambda active=None, stale=None: make_mixer(
-        topology, requested, wire_dtype, active=active, stale=stale)
+        topology, requested, wire_dtype, active=active, stale=stale,
+        wire_fault=wire_fault, wire_guard=wire_guard)
     return mix
 
 
@@ -643,7 +672,8 @@ def make_compressed_mixer(topology: Topology, backend: str = "auto",
                           wire_dtype: str = "native", active=None,
                           stale=None, compression=None,
                           gossip: str = "sync", seed: int = 0,
-                          consensus_lr: float = 1.0) -> Mixer:
+                          consensus_lr: float = 1.0,
+                          wire_fault=None, wire_guard=None) -> Mixer:
     """Stateful node-stacked gossip: delta-sparsified wires with error
     feedback, optional one-step-stale (delayed) mixing, and optional
     per-node straggler masks — on top of any node-stacked backend.
@@ -680,9 +710,34 @@ def make_compressed_mixer(topology: Topology, backend: str = "auto",
     Metropolis matrix, so ``y_i = x_i`` for them regardless of payloads.
     Stale nodes stay *active* — they train and receive (weights are NOT
     renormalized away from them); only their outgoing payload freezes.
+
+    ``wire_fault`` (DESIGN.md §12) injects drop/corrupt faults into the
+    delta payloads: dropped senders' payloads never land, corrupted ones
+    are validated (finite, ``|v| <= max_abs``) and invalid payloads are
+    masked out of the ``fresh`` update at *both* ends — sender and
+    receiver estimates stay in lockstep, and neighbours keep mixing the
+    sender's last good x̂ (stale-like degradation rather than identity
+    fallback). Masking with an all-valid vector is bitwise neutral, so
+    detected-corrupt ≡ drop holds here too. Unvalidated corruption
+    propagation (``GuardSpec.validate_wire=False``) is unsupported on
+    compressed wires, as are faults on the uncompressed stateful
+    (delayed/stale ``prev``-snapshot) path.
     """
     comp = normalize_compression(compression)
     kind, frac = comp if comp is not None else ("none", 1.0)
+    fault_on = wire_fault is not None and not wire_fault.is_noop()
+    if fault_on and kind == "none":
+        raise ValueError(
+            "wire fault injection on the uncompressed stateful gossip "
+            "path (delayed/stale 'prev' snapshots) is unsupported — "
+            "inject faults on sync stateless gossip or compressed "
+            "(topk/randk) wires")
+    if fault_on and wire_guard is not None and not wire_guard.validate_wire:
+        raise ValueError(
+            "GuardSpec.validate_wire=False (propagating unvalidated "
+            "corruption) is unsupported on compressed wires; compressed "
+            "payloads are always validated and degrade to the sender's "
+            "last good estimate")
     if gossip not in GOSSIP_MODES:
         raise ValueError(f"unknown gossip mode {gossip!r}; expected one "
                          f"of {GOSSIP_MODES}")
@@ -701,6 +756,18 @@ def make_compressed_mixer(topology: Topology, backend: str = "auto",
     if not 0.0 < gamma <= 1.0:
         raise ValueError(f"consensus_lr must be in (0, 1], got {gamma}")
     fresh_np = act & (~stale_arr if stale_arr is not None else True)
+    if fault_on:
+        from repro.resil.faults import (DEFAULT_MAX_ABS, corrupt_values,
+                                        payload_valid)
+        drop_np = np.zeros(n, bool)
+        drop_np[list(wire_fault.drop)] = True
+        corrupt_np = np.zeros(n, bool)
+        corrupt_np[list(wire_fault.corrupt)] = True
+        fresh_np = fresh_np & ~drop_np
+        fault_max_abs = (wire_guard.max_abs if wire_guard is not None
+                         else DEFAULT_MAX_ABS)
+        has_corrupt = bool(corrupt_np.any())
+        corrupt_col = jnp.asarray(corrupt_np)[:, None]
     fresh = jnp.asarray(fresh_np)
     stale_j = jnp.asarray(stale_arr) if stale_arr is not None else None
 
@@ -733,6 +800,14 @@ def make_compressed_mixer(topology: Topology, backend: str = "auto",
             # the quantization error stays in the x - x̂ gap (implicit EF)
             vals = vals.astype(x.dtype).astype(jnp.float32)
         fcol = fresh[:, None]
+        if fault_on:
+            if has_corrupt:
+                vals = jnp.where(corrupt_col,
+                                 corrupt_values(vals, wire_fault.mode),
+                                 vals)
+            # invalid payloads are discarded by both ends: every node's
+            # replica of the sender's x̂ stays at the last good value
+            fcol = fcol & payload_valid(vals, fault_max_abs)[:, None]
         new_hat = jnp.where(fcol, hat + _scatter_payload(vals, idx, flat),
                             hat)
         use = hat if gossip == "delayed" else new_hat

@@ -110,13 +110,19 @@ class _SimFederation(sched.CompiledFederationHooks):
         self.ctx = None
         self.sparse_round = False
         # drop any previous run's (likely closed) telemetry sink; each
-        # run() passes its own through run_schedule
+        # run() passes its own through run_schedule — same for the
+        # resilience config and any leftover injected-fault state
         self.telemetry = None
+        self.resil = None
+        self.wire_fault = None
 
     # ----------------------------------------------------- cache plumbing
     def _make_mixer(self, topo: Topology, active, stale=None):
         sim = self.sim
+        # the prebuilt mixer knows nothing of injected wire faults —
+        # fault segments rebuild through make_mixer's validated wrap
         if (active is None and stale is None
+                and self._fault_key() is None
                 and topo.edge_key() == sim.gossip_topo.edge_key()
                 and self._force_state == sim._prebuilt_stateful):
             return sim.mixer
@@ -140,8 +146,11 @@ class _SimFederation(sched.CompiledFederationHooks):
                    stale: np.ndarray):
         sim = self.sim
         # the prebuilt steps from sim._build_jits were compiled without
-        # the metrics carry — telemetry runs rebuild through the cache
+        # the metrics/guard carries and fault-free — telemetry, guarded,
+        # and fault segments rebuild through the cache
         if (active.all() and not stale.any() and not self._metrics_on()
+                and self._fault_key() is None
+                and self._guard_spec() is None
                 and topo.edge_key() == sim.gossip_topo.edge_key()
                 and self._force_state == sim._prebuilt_stateful):
             return {"plain": sim._plain_step, "kd_dense": sim._kd_step,
@@ -149,12 +158,33 @@ class _SimFederation(sched.CompiledFederationHooks):
         return super()._base_step(topo, active, stale)
 
     # -------------------------------------------------------------- hooks
+    def restore_ctx(self, ctx: Dict, phase: str) -> None:
+        """Mid-phase resume from a durable snapshot: rebuild the KD
+        sampler state straight from the snapshot's flat ctx payload
+        (exactly what :meth:`on_round` would have produced) instead of
+        re-running the label round."""
+        sim = self.sim
+        ctx = {k: jnp.asarray(v) for k, v in ctx.items()}
+        self.sparse_round = "values" in ctx
+        payload = ((ctx["values"], ctx["indices"]) if self.sparse_round
+                   else ctx["labels"])
+        self.ctx = ctx
+        if self.kd_sampler is None:
+            self.kd_sampler = driver.make_homogenized_sampler(
+                self.priv_parts,
+                driver.PaddedParts(ctx["pub_idx"], ctx["pub_size"]),
+                sim.data.train_x, sim.data.train_y, sim.public_x,
+                ctx["weights"], payload, sim.mcfg.num_classes,
+                sim.tcfg.batch_size)
+        self.phase = phase
+
     def on_round(self, params, round_index: int, step: int, topo: Topology,
                  active: np.ndarray) -> np.ndarray:
         sim = self.sim
         cfg = self.idkd_cfg
         hom = sim._homogenize(params, cfg, topo,
-                              None if active.all() else active)
+                              None if active.all() else active,
+                              wire_fault=self._fault_key())
         self.sparse_round = isinstance(hom, labeling.SparseHomogenizedSet)
         payload = ((hom.labels.values, hom.labels.indices)
                    if self.sparse_round else np.asarray(hom.labels))
@@ -212,6 +242,10 @@ class _SimFederation(sched.CompiledFederationHooks):
         if tel is not None:
             tel.event("accuracy", step=step, acc=acc, nll=nll,
                       consensus=cons)
+        if not (np.isfinite(nll) and np.isfinite(acc)):
+            if tel is not None:
+                tel.event("health", step=step, kind="eval_nonfinite",
+                          acc=acc, nll=nll)
 
 
 class DecentralizedSimulator:
@@ -416,7 +450,7 @@ class DecentralizedSimulator:
     def run(self, schedule: Optional[sched.Schedule] = None,
             resume: Optional[Dict] = None,
             capture_at: Optional[int] = None,
-            telemetry=None) -> SimResult:
+            telemetry=None, resil=None) -> SimResult:
         """Replay the federation schedule through the scheduler: chunked
         scan/host runners between boundaries, homogenization rounds
         re-labeling and refreshing the KD sampler as they fire, churn /
@@ -432,6 +466,16 @@ class DecentralizedSimulator:
         observability layers for this run — JSONL run events, the
         on-device metrics bus, and trace spans (DESIGN.md §11). The
         trajectory is bitwise identical with it on or off.
+
+        ``resil`` (a :class:`repro.resil.Resilience`) turns on the
+        resilience layer (DESIGN.md §12): the on-device health guard,
+        quarantine-on-trip, durable snapshots with auto-resume, and
+        rollback-on-divergence. With guards on and no fault firing the
+        trajectory is bitwise identical to guards off. A ``crash``
+        :class:`~repro.sched.FaultEvent` in the schedule raises
+        :class:`repro.resil.SimulatedCrash` out of this method; calling
+        ``run()`` again with the same ``resil.snapshot_dir`` resumes
+        from the last durable snapshot.
         """
         t0 = time.time()
         tcfg = self.tcfg
@@ -503,7 +547,7 @@ class DecentralizedSimulator:
             param_count=int(nparams), elem_bytes=elem_bytes,
             payload_elems=payload_elems, index_bytes=index_bytes,
             resume_step=resume_step, capture_at=capture_at,
-            telemetry=telemetry)
+            telemetry=telemetry, resil=resil)
 
         result.final_acc = (result.acc_history[-1]
                             if result.acc_history else 0.0)
@@ -519,14 +563,38 @@ class DecentralizedSimulator:
     # ------------------------------------------------------------ IDKD round
     def _homogenize(self, params, idkd_cfg: IDKDConfig,
                     topology: Optional[Topology] = None,
-                    active: Optional[np.ndarray] = None
-                    ) -> labeling.HomogenizedResult:
+                    active: Optional[np.ndarray] = None,
+                    wire_fault=None) -> labeling.HomogenizedResult:
         # kd_mode="vanilla" is the no-OoD-filter baseline (every public
         # sample kept) — the engine's filter_ood=False branch
         filter_ood = self.kd_mode != "vanilla"
         topo = topology or self.topology
         streaming = (idkd_cfg.stream_labels
                      and idkd_cfg.label_backend != "dense")
+        if wire_fault is not None and not wire_fault.is_noop():
+            if self.driver_mode == "shard":
+                raise ValueError(
+                    "label-round fault injection is unsupported under "
+                    "driver_mode='shard' — run fault schedules "
+                    "node-stacked (DESIGN.md §12)")
+            if streaming:
+                # the streaming round never materializes the logits
+                # stack to corrupt-and-validate, so both fault kinds
+                # degrade to dropped payloads: merge the faulted senders
+                # out of the gossip-weight averaging via the active mask
+                from repro.obs import log
+                n = self.tcfg.num_nodes
+                lost = np.zeros(n, bool)
+                lost[list(wire_fault.senders)] = True
+                act = (np.ones(n, bool) if active is None
+                       else np.asarray(active, bool)) & ~lost
+                if not act.any():
+                    raise RuntimeError("label-round fault leaves no "
+                                       "valid label payloads")
+                log.warning("label_payload_lost",
+                            nodes=np.flatnonzero(lost).tolist())
+                active = act
+                wire_fault = None
         if self.driver_mode == "shard":
             if active is not None:
                 raise ValueError("sharded label rounds have no churn "
@@ -551,8 +619,35 @@ class DecentralizedSimulator:
                 filter_ood=filter_ood, active=active)
         # one-shot oracle paths (dense backend, or stream_labels=False):
         # cal_logits=None = D_C is the public set (paper's default)
+        logits = self._node_logits(params, self.public_x)
+        if wire_fault is not None and not wire_fault.is_noop():
+            # label-round wire faults: a dropped payload is lost outright
+            # and a corrupted one fails payload validation — both degrade
+            # to "that node contributes no labels this round" by merging
+            # it out of the gossip-weight averaging via the active mask
+            from repro.obs import log
+            from repro.resil.faults import (DEFAULT_MAX_ABS, corrupt_rows,
+                                            payload_valid)
+            n = self.tcfg.num_nodes
+            lost = np.zeros(n, bool)
+            lost[list(wire_fault.drop)] = True
+            if wire_fault.corrupt:
+                logits = corrupt_rows(logits, wire_fault.corrupt,
+                                      wire_fault.mode)
+                valid = np.asarray(payload_valid(
+                    jnp.reshape(logits, (n, -1)), DEFAULT_MAX_ABS))
+                lost |= ~valid
+            act = (np.ones(n, bool) if active is None
+                   else np.asarray(active, bool)) & ~lost
+            if not act.any():
+                raise RuntimeError(
+                    "label-round fault leaves no valid label payloads")
+            if lost.any():
+                log.warning("label_payload_invalid",
+                            nodes=np.flatnonzero(lost).tolist())
+            active = act
         return labeling.label_round(
-            self._node_logits(params, self.public_x),
+            logits,
             self._per_node_val_logits(params), None, topo, idkd_cfg,
             backend=idkd_cfg.label_backend, filter_ood=filter_ood,
             active=active)
@@ -599,5 +694,11 @@ class DecentralizedSimulator:
             tot_acc += float(a) * cnt
             tot_nll += float(l) * cnt
             tot_cnt += cnt
-        return tot_acc / tot_cnt, tot_nll / tot_cnt
+        acc, nll = tot_acc / tot_cnt, tot_nll / tot_cnt
+        if not (np.isfinite(nll) and np.isfinite(acc)):
+            # a diverged / guard-worthy model state: surface it loudly
+            # instead of letting NaN accuracies ride the result silently
+            from repro.obs import log
+            log.warning("eval_nonfinite", acc=acc, nll=nll)
+        return acc, nll
 

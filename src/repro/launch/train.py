@@ -64,13 +64,15 @@ from repro.data.synthetic import make_lm_data
 from repro.launch.steps import consensus_params, stack_params
 from repro.models import build_model
 from repro.obs import log as obs_log
+from repro.resil import SimulatedCrash
 
 
 def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native",
                       topology: Optional[Topology] = None,
                       active=None, stale=None, compression=None,
-                      gossip: str = "sync",
-                      stateful=None) -> Tuple[Topology, Mixer]:
+                      gossip: str = "sync", stateful=None,
+                      wire_fault=None,
+                      wire_guard=None) -> Tuple[Topology, Mixer]:
     """The (topology, mixer) pair the launch path gossips params on —
     ``_LMFederation``'s mixer construction point.
 
@@ -81,12 +83,15 @@ def make_gossip_mixer(tcfg: TrainConfig, wire_dtype: str = "native",
     built an f32-wire mixer, losing the §Perf bf16-wire halving);
     ``active`` is the churn mask. ``stale`` / ``compression`` /
     ``gossip`` / ``stateful`` are the compressed-wire controls
-    (DESIGN.md §9), forwarded verbatim to ``mixing.make_mixer``.
+    (DESIGN.md §9) and ``wire_fault`` / ``wire_guard`` the resilience
+    layer's fault-injection controls (DESIGN.md §12), all forwarded
+    verbatim to ``mixing.make_mixer``.
     """
     topo = topology or Topology.make(tcfg.topology, tcfg.num_nodes)
     return topo, make_mixer(topo, wire_dtype=wire_dtype, active=active,
                             stale=stale, compression=compression,
-                            gossip=gossip, stateful=stateful)
+                            gossip=gossip, stateful=stateful,
+                            wire_fault=wire_fault, wire_guard=wire_guard)
 
 
 def idkd_label_round(model, params_stacked, public_tokens, private_tokens,
@@ -203,6 +208,19 @@ class _LMFederation(sched.CompiledFederationHooks):
         return (self.plain_sampler if self.phase == "plain"
                 else self.kd_sampler)
 
+    def restore_ctx(self, ctx: Dict, phase: str) -> None:
+        """Mid-phase resume from a durable snapshot: rebuild the sparse
+        LM-KD sampler from the snapshot's flat ctx payload instead of
+        re-running the label round."""
+        ctx = {k: jnp.asarray(v) for k, v in ctx.items()}
+        self.ctx = ctx
+        if self.kd_sampler is None:
+            self.kd_sampler = driver.make_lm_kd_sampler(
+                self.priv_parts, self.tokens, self.tcfg.batch_size,
+                self.public_tokens, ctx["pub_vals"], ctx["pub_idx"],
+                ctx["pub_w"], pub_batch=min(4, len(self.public_tokens)))
+        self.phase = phase
+
     def on_round(self, params, round_index: int, step: int, topo: Topology,
                  active: np.ndarray) -> np.ndarray:
         cfg = self.idkd_cfg
@@ -257,7 +275,7 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
                  events: Sequence = (),
                  schedule: Optional[sched.Schedule] = None,
                  model_parallel: int = 1,
-                 telemetry=None) -> Dict[str, Any]:
+                 telemetry=None, resil=None) -> Dict[str, Any]:
     """End-to-end reduced-scale decentralized LM training (CPU-friendly).
 
     ``events`` (churn / rewire) and a custom ``schedule`` feed the
@@ -271,6 +289,13 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
     ``telemetry`` (a :class:`repro.obs.Telemetry`) turns on the run-log /
     metrics-bus / trace-span layers for this run (DESIGN.md §11); the
     trajectory is bitwise identical with it on or off.
+
+    ``resil`` (a :class:`repro.resil.Resilience`) turns on the
+    resilience layer (DESIGN.md §12): health guards + quarantine,
+    durable snapshots with auto-resume, rollback-on-divergence. A
+    ``crash`` FaultEvent in the schedule raises
+    :class:`repro.resil.SimulatedCrash` out of this function — rerun
+    with the same ``resil.snapshot_dir`` to resume.
     """
     n = tcfg.num_nodes
     model = build_model(cfg)
@@ -368,7 +393,7 @@ def run_training(cfg: ModelConfig, tcfg: TrainConfig, *, seq_len: int = 64,
         ledger=ledger, param_count=int(nparams),
         elem_bytes=sched.wire_elem_bytes(wire_dtype, cfg.dtype),
         payload_elems=payload_elems, index_bytes=index_bytes,
-        telemetry=telemetry)
+        telemetry=telemetry, resil=resil)
     return {"params": consensus_params(params), "loss_history": history,
             "model": model, "topology": topo, "ledger": ledger.as_dict(),
             "schedule": schedule}
@@ -423,6 +448,28 @@ def main():
                     help="also export Chrome trace_event spans to "
                          "DIR/trace.json (Perfetto-loadable; needs "
                          "--telemetry)")
+    ap.add_argument("--faults", default="", metavar="SPEC",
+                    help="deterministic fault injection: comma-separated "
+                         "kind@step[/nodes][/mode] events, e.g. "
+                         "'corrupt@8/2/nan,crash@14,clear@16' "
+                         "(DESIGN.md §12)")
+    ap.add_argument("--guards", action="store_true",
+                    help="turn on the on-device health guard: non-finite "
+                         "loss/grad/param detection + wire validation, "
+                         "tripped nodes quarantined at the segment "
+                         "boundary")
+    ap.add_argument("--snapshot-dir", default="", metavar="DIR",
+                    help="write durable checkpointed snapshots under DIR "
+                         "at segment boundaries; if DIR already holds "
+                         "snapshots the run auto-resumes from the newest "
+                         "valid one")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="min steps between durable snapshots (0 = every "
+                         "segment boundary)")
+    ap.add_argument("--rollback", action="store_true",
+                    help="on a guard trip, restore the pre-segment state "
+                         "and re-run with the offender quarantined "
+                         "(implies --guards)")
     args = ap.parse_args()
     if args.trace and not args.telemetry:
         ap.error("--trace needs --telemetry DIR for the output location")
@@ -444,6 +491,17 @@ def main():
     events = (sched.parse_churn(args.churn, args.nodes, args.steps,
                                 mode=args.churn_mode)
               if args.churn else ())
+    if args.faults:
+        events = (*events, *sched.parse_faults(args.faults, args.nodes,
+                                               args.steps))
+    resil = None
+    if args.guards or args.rollback or args.snapshot_dir:
+        from repro.resil import GuardSpec, Resilience
+        resil = Resilience(
+            guard=(GuardSpec() if args.guards or args.rollback else None),
+            snapshot_dir=args.snapshot_dir or None,
+            snapshot_every=args.snapshot_every,
+            rollback=args.rollback)
     telemetry = None
     if args.telemetry:
         from repro.obs import Telemetry
@@ -458,7 +516,15 @@ def main():
                            wire_dtype=args.wire_dtype,
                            driver_mode=args.driver, events=events,
                            model_parallel=args.model_parallel,
-                           telemetry=telemetry)
+                           telemetry=telemetry, resil=resil)
+    except SimulatedCrash as e:
+        # injected crash: a clean exit so harnesses (the CI chaos job)
+        # can re-invoke with the same --snapshot-dir and auto-resume
+        obs_log.warning("simulated_crash_exit", step=e.step,
+                        snapshot_dir=args.snapshot_dir or None)
+        print(f"simulated crash at step {e.step}; re-run with the same "
+              "--snapshot-dir to resume from the last durable snapshot")
+        return
     finally:
         if telemetry is not None:
             telemetry.close()

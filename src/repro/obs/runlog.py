@@ -33,6 +33,13 @@ EVENT_SCHEMA: Dict[str, tuple] = {
     "metrics": ("step", "loss", "consensus"),    # metrics-bus flush
     "eval": ("step",),                           # scheduler eval boundary
     "accuracy": ("step",),                       # host-side eval metrics
+    "fault": ("step", "kind"),                   # injected fault state change
+    "health": ("step",),                         # guard trip / quarantine /
+                                                 #   non-finite eval
+    "rollback": ("step", "retry"),               # segment re-run after guard
+                                                 #   divergence
+    "snapshot": ("step",),                       # durable snapshot written
+    "resume": ("step",),                         # auto-resume from snapshot
     "run_end": (),                               # run summary footer
 }
 

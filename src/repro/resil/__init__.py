@@ -1,0 +1,11 @@
+"""Resilience subsystem: deterministic fault injection, on-device
+health guards, quarantine, and durable checkpoint/rollback
+(DESIGN.md §12)."""
+from repro.resil.faults import (  # noqa: F401
+    CORRUPT_MODES, DEFAULT_MAX_ABS, FAULT_KINDS, SimulatedCrash,
+    WireFault, corrupt_rows, corrupt_values, make_validated_mixer,
+    payload_valid)
+from repro.resil.guards import (  # noqa: F401
+    GUARD_COUNTERS, GuardSpec, init_node_guard, tripped_nodes,
+    wire_offenders)
+from repro.resil.snapshot import Resilience, SnapshotManager  # noqa: F401

@@ -1,0 +1,234 @@
+"""Deterministic wire-fault injection and receive-side payload validation.
+
+Faults are *per-segment static*: the schedule compiler cuts a segment
+boundary at every ``FaultEvent`` step, so within one jitted runner
+invocation the fault state is a compile-time constant — injection is a
+mixer wrapper, never an in-jit step dependence. A :class:`WireFault` is
+the frozen, hashable description of that state (part of the scheduler's
+mixer cache keys).
+
+Three wire fault kinds ride the gossip exchange:
+
+``drop``
+    The listed senders' payloads never arrive. Receivers fall back to
+    self-weight via a masked Metropolis matrix (``W_eff``) — the same
+    graceful-degradation math the churn machinery uses, applied to
+    messages instead of nodes.
+``corrupt``
+    The listed senders' payloads are corrupted in flight (``nan`` /
+    ``inf`` constants, or ``bitflip`` — an exponent-bit XOR yielding
+    huge finite values). With receive-side validation on (the default),
+    a corrupted payload fails the finite-and-bounded check and is
+    treated exactly as dropped: detected-corrupt and drop runs are
+    bitwise identical. With validation off (``GuardSpec.validate_wire =
+    False``) nan/inf corruption genuinely reaches receivers — the
+    rollback-on-divergence path's test bed.
+``crash``
+    The process dies mid-run (:class:`SimulatedCrash`); recovery is the
+    durable-snapshot auto-resume path, not the mixer.
+
+Validation never runs when no fault is injected — the no-fault mixers
+are returned unwrapped, so fault-free trajectories are bitwise untouched
+(steady-state health protection is the node-level guard's job,
+:mod:`repro.resil.guards`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_KINDS = ("drop", "corrupt", "crash", "clear")
+CORRUPT_MODES = ("nan", "inf", "bitflip")
+# receive-side payload magnitude bound: anything larger than this (or
+# non-finite) fails validation — generous against real params/deltas,
+# tripped by every corruption mode above
+DEFAULT_MAX_ABS = 1e8
+
+
+@dataclass(frozen=True)
+class WireFault:
+    """Static wire-fault state for one schedule segment.
+
+    ``drop`` / ``corrupt`` are sender node indices; ``mode`` is the
+    corruption applied to corrupt senders' payloads. Hashable — the
+    scheduler folds it into mixer/step cache keys."""
+    drop: Tuple[int, ...] = ()
+    corrupt: Tuple[int, ...] = ()
+    mode: str = "nan"
+
+    def __post_init__(self):
+        object.__setattr__(self, "drop", tuple(sorted(set(self.drop))))
+        object.__setattr__(self, "corrupt",
+                           tuple(sorted(set(self.corrupt))))
+        if self.mode not in CORRUPT_MODES:
+            raise ValueError(f"unknown corruption mode {self.mode!r}; "
+                             f"expected one of {CORRUPT_MODES}")
+
+    @property
+    def senders(self) -> Tuple[int, ...]:
+        return tuple(sorted(set(self.drop) | set(self.corrupt)))
+
+    def is_noop(self) -> bool:
+        return not self.drop and not self.corrupt
+
+
+class SimulatedCrash(RuntimeError):
+    """A ``FaultEvent(kind="crash")`` fired: the run 'dies' here, mid
+    schedule. The CLIs catch this and exit cleanly; recovery is a fresh
+    invocation auto-resuming from the latest durable snapshot."""
+
+    def __init__(self, step: int):
+        super().__init__(f"simulated crash at step {step}")
+        self.step = step
+
+
+def _col(v, ndim: int):
+    """Broadcast a per-row vector over a (rows, ...) array's trailing dims."""
+    v = jnp.asarray(v)
+    return v.reshape(v.shape[:1] + (1,) * (ndim - 1))
+
+
+def corrupt_values(xf, mode: str):
+    """A fully corrupted f32 copy of ``xf`` (callers mask rows in).
+
+    ``bitflip`` XORs f32 exponent bit 30 — small values blow up by
+    ~2^128 into huge (mostly finite) magnitudes, the realistic
+    memory-fault shape the bounded-magnitude validation check exists
+    for."""
+    if mode == "nan":
+        return jnp.full_like(xf, jnp.nan)
+    if mode == "inf":
+        return jnp.full_like(xf, jnp.inf)
+    if mode == "bitflip":
+        bits = jax.lax.bitcast_convert_type(xf, jnp.int32)
+        return jax.lax.bitcast_convert_type(bits ^ jnp.int32(1 << 30),
+                                            jnp.float32)
+    raise ValueError(f"unknown corruption mode {mode!r}; expected one of "
+                     f"{CORRUPT_MODES}")
+
+
+def corrupt_rows(x, rows, mode: str):
+    """Apply ``mode`` corruption to the marked leading-axis rows (f32)."""
+    xf = jnp.asarray(x).astype(jnp.float32)
+    return jnp.where(_col(jnp.asarray(rows, bool), xf.ndim),
+                     corrupt_values(xf, mode), xf)
+
+
+def payload_valid(x, max_abs: float = DEFAULT_MAX_ABS):
+    """(rows,) bool — each row payload entirely finite and bounded."""
+    flat = jnp.asarray(x).astype(jnp.float32).reshape(x.shape[0], -1)
+    return jnp.all(jnp.isfinite(flat) & (jnp.abs(flat) <= max_abs), axis=1)
+
+
+def make_validated_mixer(base, W, fault: Optional[WireFault] = None, *,
+                         max_abs: float = DEFAULT_MAX_ABS,
+                         validate: bool = True):
+    """Wrap a stateless node-stacked mixer with fault injection and
+    receive-side payload validation.
+
+    ``W`` is the (masked) Metropolis matrix the base mixer encodes. Per
+    leaf: corruption is injected into the senders' wire rows, every
+    sender's wire payload is validated (finite and ``|v| <= max_abs``),
+    and when any payload fails — or is dropped by fiat — the mix runs a
+    degraded dense pass with ``W_eff``: invalid senders' off-diagonal
+    columns zeroed and their Metropolis mass returned to each receiver's
+    self-weight. The degraded einsum reads the *clean* ``x`` (invalid
+    columns carry zero weight, and ``0 * nan = nan`` would otherwise
+    poison the row), which is exactly why detected-corrupt ≡ drop holds
+    bitwise: both reduce to the same ``W_eff`` product over the same
+    clean operand. The all-valid branch calls the base mixer untouched.
+
+    With ``validate=False``, nan/inf corruption propagates for real:
+    every receiver with a corrupted in-neighbour gets a fully poisoned
+    row (exact — a whole-payload nan/inf contribution saturates the
+    weighted sum). ``bitflip`` without validation is rejected (its huge
+    finite values cannot be propagated exactly through the masked
+    einsum's zero weights).
+
+    The wrapper exposes ``wire_check(tree) -> (n,) bool`` — per-sender
+    invalidity of the actual wire values, recomputed from the same
+    injection — which the on-device guard uses for sender attribution
+    (``drop`` is a network fault, not sender misbehaviour, and is
+    excluded)."""
+    Wnp = np.asarray(W, np.float64)
+    n = Wnp.shape[0]
+    Wj = jnp.asarray(Wnp, jnp.float32)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    drop_np = np.zeros(n, bool)
+    corrupt_np = np.zeros(n, bool)
+    mode = "nan"
+    if fault is not None:
+        drop_np[list(fault.drop)] = True
+        corrupt_np[list(fault.corrupt)] = True
+        mode = fault.mode
+    drop_j = jnp.asarray(drop_np)
+    has_corrupt = bool(corrupt_np.any())
+    corrupt_j = jnp.asarray(corrupt_np)
+    if not validate and has_corrupt and mode == "bitflip":
+        raise ValueError(
+            "bitflip wire corruption requires receive-side validation "
+            "(GuardSpec.validate_wire=True): its finite values cannot "
+            "propagate exactly through the masked mixing path")
+
+    def wire_rows(xf):
+        """The f32 values each sender actually puts on the wire."""
+        if has_corrupt:
+            return jnp.where(_col(corrupt_j, xf.ndim),
+                             corrupt_values(xf, mode), xf)
+        return xf
+
+    def _degraded(xf, valid):
+        vf = valid.astype(jnp.float32)
+        mask = vf[None, :] * (1.0 - eye) + eye
+        W_eff = Wj * mask
+        W_eff = W_eff + jnp.diag(1.0 - W_eff.sum(axis=1))
+        return jnp.einsum("ij,j...->i...", W_eff, xf,
+                          preferred_element_type=jnp.float32)
+
+    if validate:
+        def mix_leaf(x):
+            xf = x.astype(jnp.float32)
+            valid = payload_valid(wire_rows(xf), max_abs) & ~drop_j
+            return jax.lax.cond(
+                jnp.all(valid),
+                lambda: jnp.asarray(base.mix_leaf(x)),
+                lambda: _degraded(xf, valid).astype(x.dtype))
+    else:
+        # corruption reaches receivers: poison every row with a corrupted
+        # in-neighbour (static — W's sparsity pattern and the corrupt set
+        # are both compile-time constants)
+        affected_np = ((Wnp * (1.0 - np.eye(n)))
+                       @ corrupt_np.astype(np.float64)) > 0
+        bad = float("nan") if mode == "nan" else float("inf")
+
+        def mix_leaf(x):
+            if drop_np.any():
+                y = _degraded(x.astype(jnp.float32),
+                              ~drop_j).astype(x.dtype)
+            else:
+                y = base.mix_leaf(x)
+            if has_corrupt:
+                y = jnp.where(_col(jnp.asarray(affected_np), y.ndim),
+                              jnp.asarray(bad, y.dtype), y)
+            return y
+
+    def wire_check(tree):
+        """(n,) bool — senders whose actual wire payload fails
+        validation on any leaf (corruption injected; drop excluded)."""
+        flags = jnp.zeros((n,), bool)
+        for x in jax.tree.leaves(tree):
+            flags = flags | ~payload_valid(
+                wire_rows(x.astype(jnp.float32)), max_abs)
+        return flags
+
+    def mix(tree):
+        return jax.tree.map(mix_leaf, tree)
+
+    mix.mix_leaf = mix_leaf
+    mix.wire_check = wire_check
+    mix.wire_fault = fault
+    return mix

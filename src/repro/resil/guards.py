@@ -1,0 +1,198 @@
+"""On-device health guards: a pytree carried through the jitted runners.
+
+The guard rides the scan/host/shard runner carry exactly like PR 6's
+comm state and PR 8's metrics bus — accumulated inside jit with zero
+host syncs, flushed only at segment boundaries where the scheduler turns
+counters into quarantine/rollback decisions. Layout (fixed across
+phases so the scan carry structure never changes):
+
+  ``steps``             ()   int32 — steps since the last flush
+  ``loss_ema``          (n,) f32   — EMA of per-node train loss (spike ref)
+  ``nonfinite_loss``    (n,) int32 — steps the node's loss was nan/inf
+  ``nonfinite_grad``    (n,) int32 — steps any grad element was nan/inf
+  ``nonfinite_param``   (n,) int32 — steps any param element was nan/inf
+  ``loss_spike``        (n,) int32 — steps loss exceeded factor × EMA
+  ``consensus_blowup``  (n,) int32 — steps ‖x_i − x̄‖ exceeded the bound
+  ``wire_invalid``      (n,) int32 — steps the node's *outgoing* wire
+                                     payload failed validation (sender
+                                     attribution, from the validated
+                                     mixer's ``wire_check``)
+
+All checks are read-only observers of the training step — a guard-on
+no-fault run computes bitwise the same params/opt/loss trajectory as a
+guard-off run. :func:`update` has the same two addressing modes as
+``repro.obs.metrics.update``: node-stacked (leading node axis) and shard
+(inside ``shard_map``; per-leaf contributions of model-sharded leaves
+psum'd over the model axis on 2-D federation meshes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.resil.faults import DEFAULT_MAX_ABS
+
+GUARD_COUNTERS = ("nonfinite_loss", "nonfinite_grad", "nonfinite_param",
+                  "loss_spike", "consensus_blowup", "wire_invalid")
+# counters that indict the node's own health (wire_invalid instead
+# attributes the *sender* of a bad payload — still a node index)
+OWN_HEALTH_COUNTERS = GUARD_COUNTERS[:-1]
+_EMA_DECAY = 0.9
+
+
+@dataclass(frozen=True)
+class GuardSpec:
+    """Static guard thresholds (hashable — baked into the jitted step).
+
+    ``loss_spike_factor``/``consensus_max`` of 0 disable those checks;
+    non-finite detection is always on (params/grads gated by the
+    ``check_*`` flags). ``max_abs`` bounds wire payload magnitudes for
+    validation; ``validate_wire=False`` disables the mixer's
+    receive-side degradation (injected corruption then genuinely
+    propagates — the rollback path's test bed) while ``wire_check``
+    sender attribution keeps running."""
+    loss_spike_factor: float = 0.0
+    warmup_steps: int = 5
+    consensus_max: float = 0.0
+    check_grads: bool = True
+    check_params: bool = True
+    max_abs: float = DEFAULT_MAX_ABS
+    validate_wire: bool = True
+
+
+def init_node_guard(n: int):
+    """Zeroed guard pytree for ``n`` nodes (node-stacked layout)."""
+    g = {"steps": jnp.zeros((), jnp.int32),
+         "loss_ema": jnp.zeros((n,), jnp.float32)}
+    for k in GUARD_COUNTERS:
+        g[k] = jnp.zeros((n,), jnp.int32)
+    return g
+
+
+def _row_bad_counts(x):
+    """(rows, ...) -> (rows,) int32 count of non-finite elements."""
+    flat = x.astype(jnp.float32).reshape(x.shape[0], -1)
+    return jnp.sum((~jnp.isfinite(flat)).astype(jnp.int32), axis=1)
+
+
+def update(guard, spec: GuardSpec, losses, grads, params, *,
+           wire_invalid=None, axis_name: Optional[str] = None,
+           num_nodes: int = 0, model_dims=None, model_axis: str = "model"):
+    """One guard step; pure, jit-safe, no host syncs, reads-only.
+
+    ``wire_invalid`` is the validated mixer's per-sender ``(n,)`` bool
+    (None when no fault injection is active). Shard-mode addressing
+    matches ``obs.metrics.update`` — leaves hold the local node block,
+    ``model_dims`` marks model-sharded leaves whose contributions are
+    psum'd over ``model_axis``."""
+    p_leaves = jax.tree.leaves(params)
+    g_leaves = jax.tree.leaves(grads)
+    dims = (list(model_dims) if model_dims is not None
+            else [None] * len(p_leaves))
+
+    def combine(vals):
+        sharded = [v for v, d in zip(vals, dims) if d is not None]
+        replicated = [v for v, d in zip(vals, dims) if d is None]
+        total = jnp.zeros_like(vals[0])
+        if sharded:
+            total = total + jax.lax.psum(sum(sharded), model_axis)
+        if replicated:
+            total = total + sum(replicated)
+        return total
+
+    lf = losses.astype(jnp.float32)
+    finite_loss = jnp.isfinite(lf)
+    bad_loss = ~finite_loss
+
+    zeros_i = jnp.zeros_like(guard["nonfinite_loss"])
+    if spec.check_grads:
+        bad_grad = combine([_row_bad_counts(g) for g in g_leaves]) > 0
+    else:
+        bad_grad = zeros_i > 0
+    if spec.check_params:
+        bad_param = combine([_row_bad_counts(p) for p in p_leaves]) > 0
+    else:
+        bad_param = zeros_i > 0
+
+    ema = guard["loss_ema"]
+    warm = guard["steps"] >= jnp.int32(spec.warmup_steps)
+    if spec.loss_spike_factor > 0:
+        spike = (warm & finite_loss & (ema > 0)
+                 & (lf > jnp.float32(spec.loss_spike_factor) * ema))
+    else:
+        spike = zeros_i > 0
+    safe_lf = jnp.where(finite_loss, lf, ema)
+    new_ema = jnp.where(guard["steps"] == 0, safe_lf,
+                        _EMA_DECAY * ema + (1.0 - _EMA_DECAY) * safe_lf)
+
+    if spec.consensus_max > 0:
+        cons = []
+        for x in p_leaves:
+            xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+            if axis_name is None:
+                mean = jnp.mean(xf, axis=0, keepdims=True)
+            else:
+                mean = (jax.lax.psum(jnp.sum(xf, axis=0, keepdims=True),
+                                     axis_name) / num_nodes)
+            delta = xf - mean
+            cons.append(jnp.sum(delta * delta, axis=1))
+        blowup = (combine(cons)
+                  > jnp.float32(spec.consensus_max) ** 2)
+    else:
+        blowup = zeros_i > 0
+
+    out = {"steps": guard["steps"] + 1, "loss_ema": new_ema,
+           "nonfinite_loss": guard["nonfinite_loss"]
+           + bad_loss.astype(jnp.int32),
+           "nonfinite_grad": guard["nonfinite_grad"]
+           + bad_grad.astype(jnp.int32),
+           "nonfinite_param": guard["nonfinite_param"]
+           + bad_param.astype(jnp.int32),
+           "loss_spike": guard["loss_spike"] + spike.astype(jnp.int32),
+           "consensus_blowup": guard["consensus_blowup"]
+           + blowup.astype(jnp.int32)}
+    wire = guard["wire_invalid"]
+    if wire_invalid is not None:
+        wire = wire + wire_invalid.astype(jnp.int32)
+    out["wire_invalid"] = wire
+    return out
+
+
+def reset(guard):
+    """Zero the accumulators (same structure/placement — carry-safe)."""
+    return jax.tree.map(jnp.zeros_like, guard)
+
+
+def summarize(guard) -> dict:
+    """Host-side flush: device_get once, counters as plain int lists."""
+    g = jax.device_get(guard)
+    out = {"accum_steps": int(g["steps"]),
+           "loss_ema": [float(v) for v in np.asarray(g["loss_ema"])]}
+    for k in GUARD_COUNTERS:
+        out[k] = [int(v) for v in np.asarray(g[k])]
+    return out
+
+
+def tripped_nodes(summary: dict) -> np.ndarray:
+    """(n,) bool — nodes any own-health counter flagged this flush."""
+    bad = np.zeros(len(summary["nonfinite_loss"]), bool)
+    for k in OWN_HEALTH_COUNTERS:
+        bad |= np.asarray(summary[k], np.int64) > 0
+    return bad
+
+
+def wire_offenders(summary: dict) -> np.ndarray:
+    """(n,) bool — senders attributed by wire validation.
+
+    Under propagation (validation off), poisoned *victims* start failing
+    wire checks too, but strictly later than the true offender — the
+    offender's count is maximal, so only max-count senders are
+    indicted."""
+    wire = np.asarray(summary["wire_invalid"], np.int64)
+    if not (wire > 0).any():
+        return np.zeros(wire.shape, bool)
+    return wire == wire.max()

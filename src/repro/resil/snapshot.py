@@ -1,0 +1,146 @@
+"""Durable on-disk snapshots: periodic training-state checkpoints with
+schema version + checksum, newest-valid auto-resume, and pruning.
+
+A snapshot captures everything a segment boundary needs to continue the
+run exactly: params, optimizer state, the PRNG key, the comm pytree
+(CHOCO shared estimates / delayed-gossip state, when the run is
+stateful), the homogenization context (the KD sampler's flat str→array
+payload), and the phase string. State rides
+:func:`repro.checkpoint.save_checkpoint` (versioned + checksummed); the
+ctx — whose array shapes are round-dependent and unknowable at load
+time — rides a sibling plain npz with its own checksum recorded in the
+snapshot meta.
+
+``load_latest`` scans newest→oldest and *skips* any snapshot that fails
+validation (version skew, checksum mismatch, truncated write, structure
+mismatch) with a logged warning — a half-written file from a crash never
+blocks recovery, it just costs one snapshot interval of recompute.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.checkpoint import (checkpoint_checksum, load_checkpoint,
+                              save_checkpoint)
+from repro.obs import log
+from repro.resil.guards import GuardSpec
+
+
+@dataclass(frozen=True)
+class Resilience:
+    """Run-level resilience configuration.
+
+    ``guard`` enables the on-device health guard carry; ``snapshot_dir``
+    enables durable snapshots every ``snapshot_every`` steps (0 = every
+    segment boundary), keeping the newest ``keep``; ``rollback`` turns a
+    guard trip into restore-last-good + re-run with the offender
+    quarantined (at most ``max_retries`` times per segment) instead of
+    quarantine-and-continue."""
+    guard: Optional[GuardSpec] = None
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 0
+    keep: int = 3
+    rollback: bool = False
+    max_retries: int = 2
+
+    @property
+    def snapshots_on(self) -> bool:
+        return self.snapshot_dir is not None
+
+
+class SnapshotManager:
+    """Writes/prunes/loads ``snap-<step>`` durable snapshots in a dir."""
+
+    def __init__(self, directory, every: int = 0, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.every = int(every)
+        self.keep = max(int(keep), 1)
+        self._last: Optional[int] = None
+
+    def _base(self, step: int) -> str:
+        return str(self.dir / f"snap-{step:08d}")
+
+    def steps(self):
+        """Snapshot steps on disk, ascending."""
+        out = []
+        for p in self.dir.glob("snap-*.meta.json"):
+            try:
+                out.append(int(p.name[len("snap-"):-len(".meta.json")]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def due(self, step: int) -> bool:
+        if self._last is None or self.every <= 0:
+            return True
+        return step - self._last >= self.every
+
+    # ------------------------------------------------- crash tombstones
+    # A simulated crash kills the process once; the resumed incarnation
+    # must run *through* that step. The durable tombstone is what makes
+    # "once" survive the restart (the schedule itself is static).
+    def crash_seen(self, step: int) -> bool:
+        return (self.dir / f"crash-{step:08d}.tomb").exists()
+
+    def mark_crash(self, step: int) -> None:
+        (self.dir / f"crash-{step:08d}.tomb").touch()
+
+    def save(self, step: int, state, *, ctx=None, phase: str = "plain",
+             fired: int = 0) -> None:
+        """Persist one snapshot; ``state`` is the checkpointable pytree
+        (params/opt_state/key[/comm]), ``ctx`` the flat str→array
+        homogenization payload (or None before the first round)."""
+        extra = {"phase": phase, "fired": int(fired), "has_ctx": False}
+        if ctx is not None:
+            flat = {k: np.asarray(v) for k, v in ctx.items()}
+            np.savez(self._base(step) + ".ctx.npz", **flat)
+            extra.update(has_ctx=True,
+                         ctx_checksum=checkpoint_checksum(flat))
+        save_checkpoint(self._base(step), state, step=step, extra=extra)
+        self._last = step
+        self._prune()
+
+    def _prune(self) -> None:
+        for step in self.steps()[:-self.keep]:
+            base = self._base(step)
+            for suffix in (".npz", ".meta.json", ".ctx.npz"):
+                try:
+                    os.unlink(base + suffix)
+                except FileNotFoundError:
+                    pass
+
+    def load_latest(self, like) -> Optional[dict]:
+        """Newest snapshot that validates, restored into ``like``'s
+        structure — or None when no usable snapshot exists. Returns
+        ``{"state", "step", "phase", "fired", "ctx"}``."""
+        for step in reversed(self.steps()):
+            base = self._base(step)
+            try:
+                state, saved_step = load_checkpoint(base, like)
+                with open(base + ".meta.json") as f:
+                    extra = json.load(f).get("extra", {})
+                ctx = None
+                if extra.get("has_ctx"):
+                    npz = np.load(base + ".ctx.npz")
+                    ctx = {k: npz[k] for k in npz.files}
+                    crc = checkpoint_checksum(ctx)
+                    if extra.get("ctx_checksum") != crc:
+                        raise ValueError(
+                            f"snapshot ctx checksum mismatch at step "
+                            f"{step}: meta {extra.get('ctx_checksum')!r}"
+                            f" != arrays {crc}")
+                self._last = saved_step
+                return {"state": state, "step": saved_step,
+                        "phase": extra.get("phase", "plain"),
+                        "fired": int(extra.get("fired", 0)), "ctx": ctx}
+            except (ValueError, OSError, KeyError, json.JSONDecodeError
+                    ) as e:
+                log.warning("snapshot_invalid", step=step, error=str(e))
+        return None

@@ -3,9 +3,11 @@ loop, and the unified communication ledger (DESIGN.md §6)."""
 from repro.sched.ledger import (CommLedger, LedgerEntry,  # noqa: F401
                                 gossip_bytes_per_step, wire_elem_bytes)
 from repro.sched.schedule import (CHURN_MODES, GOSSIP_MODES,  # noqa: F401
-                                  ChurnEvent, HomogenizeEvent, RewireEvent,
-                                  Schedule, Segment, compile_schedule,
-                                  fit_every_k, idkd_round_steps, parse_churn)
+                                  ChurnEvent, FaultEvent, HomogenizeEvent,
+                                  RewireEvent, Schedule, Segment,
+                                  compile_schedule, fit_every_k,
+                                  idkd_round_steps, parse_churn,
+                                  parse_faults)
 from repro.sched.scheduler import (CompiledFederationHooks,  # noqa: F401
                                    FederationHooks, run_schedule,
                                    validate_shard_schedule)

@@ -71,6 +71,8 @@ def gossip_bytes_per_step(topology: Topology, active: Optional[np.ndarray],
 STATUS_ACTIVE = 0       # training + gossiping normally
 STATUS_STALE = 1        # straggler: frozen *outgoing* payload, 0 send bytes
 STATUS_INACTIVE = 2     # churned out (freeze/isolate): no traffic at all
+STATUS_QUARANTINED = 3  # guard-tripped / wire offender: held out by the
+                        #   resilience layer (params frozen, no traffic)
 
 
 @dataclass
@@ -158,14 +160,17 @@ class CommLedger:
             row["steps"] = sum(e.stop - e.start for e in gossip_sel)
             stale = np.zeros(self.num_nodes, np.int64)
             inactive = np.zeros(self.num_nodes, np.int64)
+            quarantined = np.zeros(self.num_nodes, np.int64)
             for e in gossip_sel:
                 if e.status is None:
                     continue
                 span = e.stop - e.start
                 stale += span * (e.status == STATUS_STALE)
                 inactive += span * (e.status == STATUS_INACTIVE)
+                quarantined += span * (e.status == STATUS_QUARANTINED)
             row["stale_steps_per_node"] = stale.tolist()
             row["inactive_steps_per_node"] = inactive.tolist()
+            row["quarantined_steps_per_node"] = quarantined.tolist()
             out.append(row)
         return out
 

@@ -33,6 +33,7 @@ from typing import List, Sequence, Tuple, Union
 
 from repro.configs.base import IDKDConfig
 from repro.core.topology import Topology
+from repro.resil.faults import CORRUPT_MODES, FAULT_KINDS
 
 CHURN_MODES = ("freeze", "isolate", "stale")
 GOSSIP_MODES = ("sync", "delayed")
@@ -75,8 +76,27 @@ class RewireEvent:
     topology: Union[str, Topology] = "ring"
 
 
-Event = Union[HomogenizeEvent, ChurnEvent, RewireEvent]
-_EVENT_TYPES = (HomogenizeEvent, ChurnEvent, RewireEvent)
+@dataclass(frozen=True)
+class FaultEvent:
+    """Deterministic fault at ``step`` (DESIGN.md §12).
+
+    ``kind="drop"``: the listed nodes' outgoing gossip payloads are lost
+    from this step on. ``kind="corrupt"``: they are corrupted in flight
+    with ``mode`` (``nan`` / ``inf`` / ``bitflip``). ``kind="crash"``:
+    the whole run process dies here (``resil.SimulatedCrash``) —
+    recovery is auto-resume from the latest durable snapshot.
+    ``kind="clear"``: the listed nodes' wire faults end (no nodes =
+    clear all). Wire faults are per-segment static: the compiler cuts a
+    boundary at every fault step, so the jitted runner bakes the fault
+    in as a mixer wrapper with no in-jit step dependence."""
+    step: int
+    kind: str = "drop"
+    nodes: Tuple[int, ...] = ()
+    mode: str = "nan"
+
+
+Event = Union[HomogenizeEvent, ChurnEvent, RewireEvent, FaultEvent]
+_EVENT_TYPES = (HomogenizeEvent, ChurnEvent, RewireEvent, FaultEvent)
 
 
 @dataclass(frozen=True)
@@ -108,6 +128,11 @@ class Schedule:
         return any(isinstance(ev, ChurnEvent) and ev.mode == "stale"
                    for seg in self.segments for ev in seg.events)
 
+    @property
+    def has_faults(self) -> bool:
+        return any(isinstance(ev, FaultEvent)
+                   for seg in self.segments for ev in seg.events)
+
     def boundaries(self) -> List[Tuple[int, int]]:
         """The chunk [start, stop) spans — ``driver.eval_boundaries``'s
         contract, for the degenerate-equivalence check."""
@@ -117,12 +142,15 @@ class Schedule:
     def num_rounds(self) -> int:
         return len(self.round_steps)
 
-    def validate_resume(self, step: int) -> None:
+    def validate_resume(self, step: int, with_ctx: bool = False) -> None:
         """Resume is legal at step 0 or at a segment start; if any
         homogenization round precedes the resume point, the resume step
         must itself be a round step (the round re-fires there from the
         restored params — earlier rounds' sampler payloads are stale and
-        unreconstructable without replaying training)."""
+        unreconstructable without replaying training). ``with_ctx=True``
+        relaxes the round rule: the checkpoint carries the
+        homogenization ctx itself (a durable snapshot), so *any* segment
+        boundary is resumable."""
         if step == 0:
             return
         starts = {s.start for s in self.segments}
@@ -130,7 +158,7 @@ class Schedule:
             raise ValueError(
                 f"cannot resume at step {step}: not a segment boundary "
                 f"(boundaries: {sorted(starts)})")
-        if any(r < step for r in self.round_steps) and \
+        if not with_ctx and any(r < step for r in self.round_steps) and \
                 step not in self.round_steps:
             raise ValueError(
                 f"cannot resume at step {step}: a homogenization round "
@@ -190,6 +218,16 @@ def _validate_events(events: Sequence[Event], steps: int) -> List[Event]:
             if not ev.down and not ev.up:
                 raise ValueError(f"churn event at step {ev.step} names no "
                                  "nodes (empty down and up)")
+        if isinstance(ev, FaultEvent):
+            if ev.kind not in FAULT_KINDS:
+                raise ValueError(f"unknown fault kind {ev.kind!r}; "
+                                 f"expected one of {FAULT_KINDS}")
+            if ev.mode not in CORRUPT_MODES:
+                raise ValueError(f"unknown corruption mode {ev.mode!r}; "
+                                 f"expected one of {CORRUPT_MODES}")
+            if ev.kind in ("drop", "corrupt") and not ev.nodes:
+                raise ValueError(f"{ev.kind} fault at step {ev.step} "
+                                 "names no sender nodes")
         out.append(ev)
     return out
 
@@ -273,4 +311,38 @@ def parse_churn(spec: str, num_nodes: int, steps: int,
         events.append(ChurnEvent(step=lo, down=(node,), mode=mode))
         if hi is not None:
             events.append(ChurnEvent(step=hi, up=(node,), mode=mode))
+    return events
+
+
+def parse_faults(spec: str, num_nodes: int, steps: int) -> List[FaultEvent]:
+    """Parse a ``kind@step[/nodes][/mode]`` fault spec (comma-separated;
+    nodes joined with ``+``), e.g. ``"corrupt@8/2/nan,crash@14"``: node
+    2's gossip payloads turn NaN from step 8, the process crashes at
+    step 14. ``clear@step`` ends all wire faults. Malformed specs and
+    out-of-range nodes/steps raise."""
+    events: List[FaultEvent] = []
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        try:
+            kind, _, rest = part.partition("@")
+            fields = rest.split("/")
+            step = int(fields[0])
+            nodes = tuple(int(v) for v in fields[1].split("+")) \
+                if len(fields) > 1 and fields[1] else ()
+            mode = fields[2] if len(fields) > 2 else "nan"
+        except (ValueError, IndexError) as e:
+            raise ValueError(
+                f"malformed fault spec {part!r}; expected "
+                "kind@step[/nodes][/mode] (e.g. 'corrupt@8/2/nan', "
+                "'drop@5/0+3', 'crash@14')") from e
+        if kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {kind!r}; expected one "
+                             f"of {FAULT_KINDS}")
+        if not 0 <= step < steps:
+            raise ValueError(f"fault step {step} outside [0, {steps})")
+        for node in nodes:
+            if not 0 <= node < num_nodes:
+                raise ValueError(f"fault node {node} outside "
+                                 f"[0, {num_nodes})")
+        events.append(FaultEvent(step=step, kind=kind, nodes=nodes,
+                                 mode=mode))
     return events

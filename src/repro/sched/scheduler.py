@@ -45,9 +45,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.topology import Topology
+from repro.resil.faults import SimulatedCrash, WireFault
 from repro.sched.ledger import CommLedger, gossip_bytes_per_step
-from repro.sched.schedule import (ChurnEvent, HomogenizeEvent, RewireEvent,
-                                  Schedule)
+from repro.sched.schedule import (ChurnEvent, FaultEvent, HomogenizeEvent,
+                                  RewireEvent, Schedule)
 
 
 class FederationHooks:
@@ -68,6 +69,22 @@ class FederationHooks:
         metrics`) threaded through every runner call when telemetry is
         on. Return None to keep the metrics bus off (the base default)."""
         return None
+
+    def init_guard(self, params, topology: Topology) -> Optional[Any]:
+        """Build the on-device health-guard counter pytree (:mod:`repro.
+        resil.guards`) threaded through every runner call when the
+        resilience guard is on. Return None to keep the guard off (the
+        base default)."""
+        return None
+
+    def restore_ctx(self, ctx: Dict, phase: str) -> None:
+        """A durable snapshot captured mid-phase is being restored:
+        rebuild the KD sampler from the snapshot's flat str→array
+        homogenization payload and set the phase. The base default
+        rejects mid-phase resume — only hooks that homogenize need it."""
+        raise NotImplementedError(
+            "these hooks cannot restore a mid-phase homogenization "
+            "context; resume from a round-boundary snapshot instead")
 
     def on_topology(self, topology: Topology, active: np.ndarray,
                     frozen: np.ndarray, stale: np.ndarray) -> None:
@@ -166,6 +183,12 @@ class CompiledFederationHooks(FederationHooks):
         # key on it — the same graph compiles differently with the
         # metrics carry attached.
         self.telemetry = None
+        # resilience: a repro.resil.Resilience (or None). Its guard spec
+        # attaches the health-guard carry (step/runner caches key on it)
+        # and wire_fault is the currently-injected WireFault, updated by
+        # run_schedule as FaultEvents fire (mixer caches key on it).
+        self.resil = None
+        self.wire_fault: Optional[WireFault] = None
         # on_round implementations stash label-round statistics here for
         # run_schedule to hand to on_labels / the run log
         self.last_round_stats: Optional[Dict] = None
@@ -174,11 +197,25 @@ class CompiledFederationHooks(FederationHooks):
         tel = self.telemetry
         return tel is not None and getattr(tel, "metrics_enabled", False)
 
+    def _guard_spec(self):
+        res = self.resil
+        return None if res is None else res.guard
+
+    def _fault_key(self) -> Optional[WireFault]:
+        wf = self.wire_fault
+        return None if wf is None or wf.is_noop() else wf
+
     def init_metrics(self, params, topology: Topology) -> Optional[Any]:
         if not self._metrics_on():
             return None
         from repro.obs import metrics as obs_metrics
         return obs_metrics.init_node_metrics(topology.n)
+
+    def init_guard(self, params, topology: Topology) -> Optional[Any]:
+        if self._guard_spec() is None:
+            return None
+        from repro.resil import guards
+        return guards.init_node_guard(topology.n)
 
     def _make_mixer(self, topology: Topology, active,
                     stale=None) -> Callable:
@@ -196,9 +233,14 @@ class CompiledFederationHooks(FederationHooks):
         and — once ``init_comm`` saw a schedule that needs state
         anywhere — ``stateful=True``, so every mixer of the run carries
         the same comm structure (a scan carry cannot change pytree
-        structure mid-schedule)."""
+        structure mid-schedule). ``wire_fault`` / ``wire_guard`` are the
+        resilience layer's currently-injected fault and guard spec
+        (payload validation thresholds) — both None for a fault-free
+        run, in which case the mixers come back completely unwrapped."""
         return {"compression": self.compression, "gossip": self.gossip,
-                "stateful": True if self._force_state else None}
+                "stateful": True if self._force_state else None,
+                "wire_fault": self._fault_key(),
+                "wire_guard": self._guard_spec()}
 
     def init_comm(self, params, topology: Topology,
                   schedule: Schedule) -> Optional[Any]:
@@ -237,7 +279,7 @@ class CompiledFederationHooks(FederationHooks):
     def _mixer(self, topo: Topology, active: np.ndarray, stale=None):
         mask = self._mask_key(active)
         sk = (self._stale_key(stale) if stale is not None else None)
-        key = (topo.edge_key(), mask, sk)
+        key = (topo.edge_key(), mask, sk, self._fault_key())
         if key not in self._mixers:
             if mask is None and sk is None:
                 self._mixers[key] = self._make_mixer(topo, None)
@@ -279,22 +321,33 @@ class CompiledFederationHooks(FederationHooks):
                     "shard driver cannot apply straggler (stale) masks — "
                     "run stale-churn schedules with driver_mode='scan' "
                     "or 'host' (DESIGN.md §9)")
+            if self._fault_key() is not None:
+                raise ValueError(
+                    "wire-fault injection (drop/corrupt) is unsupported "
+                    "under driver_mode='shard' — the validated mixers are "
+                    "node-stacked; run fault schedules with "
+                    "driver_mode='scan' or 'host' (DESIGN.md §12)")
             return driver.make_shard_step(
                 self.model, self.algo, self._adapter(),
                 mesh=self.shard_mesh(topo.n), topology=topo,
                 compression=self.compression, gossip=self.gossip,
-                telemetry=self._metrics_on())
+                telemetry=self._metrics_on(), guard=self._guard_spec())
         return driver.make_step(
             self.model, self.algo,
             self._mixer(topo, active, stale if stale.any() else None),
-            self._adapter(), telemetry=self._metrics_on())
+            self._adapter(), telemetry=self._metrics_on(),
+            guard=self._guard_spec())
+
+    def _cache_key(self, topo: Topology, active: np.ndarray,
+                   frozen: np.ndarray, stale: np.ndarray):
+        return (self.phase, topo.edge_key(), self._mask_key(active),
+                self._freeze_key(frozen), self._stale_key(stale),
+                self._metrics_on(), self._fault_key(), self._guard_spec())
 
     def _step(self, topo: Topology, active: np.ndarray,
               frozen: np.ndarray, stale: np.ndarray):
         from repro.core import driver
-        key = (self.phase, topo.edge_key(), self._mask_key(active),
-               self._freeze_key(frozen), self._stale_key(stale),
-               self._metrics_on())
+        key = self._cache_key(topo, active, frozen, stale)
         if key not in self._steps:
             step = self._base_step(topo, active, stale)
             if self._freeze_key(frozen) is not None:
@@ -307,9 +360,7 @@ class CompiledFederationHooks(FederationHooks):
     def runner(self, topo: Topology, active: np.ndarray,
                frozen: np.ndarray, stale: np.ndarray) -> Callable:
         from repro.core import driver
-        key = (self.phase, topo.edge_key(), self._mask_key(active),
-               self._freeze_key(frozen), self._stale_key(stale),
-               self._metrics_on())
+        key = self._cache_key(topo, active, frozen, stale)
         if key not in self._runners:
             self._runners[key] = driver.make_runner(
                 self._step(topo, active, frozen, stale), self._sampler(),
@@ -317,15 +368,17 @@ class CompiledFederationHooks(FederationHooks):
         run = self._runners[key]
         has_comm = getattr(run, "comm", False)
         has_metrics = getattr(run, "metrics", False)
-        if has_comm or has_metrics:
+        has_guard = getattr(run, "guard", False)
+        if has_comm or has_metrics or has_guard:
             ctx = None if self.phase == "plain" else self.ctx
 
             def aug_run(p, o, k, s0, ns, comm=None, metrics=None,
-                        _run=run, _ctx=ctx):
-                return _run(p, o, k, s0, ns, _ctx, comm, metrics)
+                        guard=None, _run=run, _ctx=ctx):
+                return _run(p, o, k, s0, ns, _ctx, comm, metrics, guard)
 
             aug_run.comm = has_comm
             aug_run.metrics = has_metrics
+            aug_run.guard = has_guard
             return aug_run
         if self.phase == "plain":
             return run
@@ -354,6 +407,13 @@ def validate_shard_schedule(schedule: Schedule, num_nodes: int,
                     "(freeze/isolate availability masks) is unsupported "
                     "under driver_mode='shard' — run it node-stacked "
                     "with driver_mode='scan' or 'host' (DESIGN.md §7)")
+            if isinstance(ev, FaultEvent) and ev.kind in ("drop", "corrupt"):
+                raise ValueError(
+                    f"schedule injects a wire fault ({ev.kind}) at step "
+                    f"{ev.step}; wire-fault injection needs the "
+                    "node-stacked validated mixers — run fault schedules "
+                    "with driver_mode='scan' or 'host' (DESIGN.md §12). "
+                    "Crash faults are fine under shard.")
             if isinstance(ev, RewireEvent):
                 if model_parallel > 1:
                     raise ValueError(
@@ -385,7 +445,8 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
                  param_count: int = 0, elem_bytes: int = 4,
                  payload_elems: Optional[int] = None, index_bytes: int = 0,
                  resume_step: int = 0, capture_at: Optional[int] = None,
-                 telemetry=None) -> Tuple[Any, Any, Any, Optional[Dict]]:
+                 telemetry=None,
+                 resil=None) -> Tuple[Any, Any, Any, Optional[Dict]]:
     """Drive the full schedule. Returns ``(params, opt_state, key,
     captured)`` where ``captured`` is the ``{"params", "opt_state",
     "key", "step"}`` snapshot taken at the ``capture_at`` boundary
@@ -410,11 +471,42 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
     call and is flushed (then zeroed) at each segment boundary, and trace
     spans wrap the label rounds, runner segments (tagged ``compile`` when
     the call built a fresh runner), and evals.
+
+    ``resil`` (a :class:`repro.resil.Resilience`, default None = fully
+    off) turns on the resilience layer (DESIGN.md §12):
+
+    * ``resil.guard`` threads the on-device health-guard counters from
+      ``hooks.init_guard`` through every runner call; at each segment
+      boundary the counters are summarized (one host sync, like the
+      metrics bus), and any node that tripped an own-health check — or
+      was attributed invalid wire payloads — is **quarantined**: its
+      params freeze (identity mixing rows via the frozen-step
+      machinery), the ledger charges it ``STATUS_QUARANTINED``, and a
+      ``health`` run-log event records the trip;
+    * ``resil.snapshot_dir`` writes a durable versioned+checksummed
+      snapshot (params, opt state, PRNG key, comm pytree, homogenization
+      ctx, phase) at segment boundaries every ``snapshot_every`` steps;
+      when the directory already holds snapshots and ``resume_step`` is
+      0, the run **auto-resumes** from the newest valid one (corrupt or
+      half-written snapshots are skipped with a warning);
+    * ``resil.rollback`` upgrades a guard trip to restore-and-retry: the
+      segment's state updates are discarded, the offending nodes are
+      quarantined, and the segment re-runs from the pre-segment state
+      with the same PRNG key — at most ``max_retries`` times — so a
+      poisoned mix never lands in the accepted trajectory.
+
+    ``FaultEvent``s in the schedule drive deterministic fault injection:
+    ``drop``/``corrupt`` update the wire-fault state the hooks' mixers
+    are rebuilt with (per-segment-static, so injection never puts a
+    step-dependent branch inside jit), and ``crash`` raises
+    :class:`repro.resil.SimulatedCrash` — re-running with the same
+    snapshot dir resumes from the last durable snapshot.
     """
     from contextlib import nullcontext
 
+    from repro.obs import log
     from repro.sched.ledger import (STATUS_ACTIVE, STATUS_INACTIVE,
-                                    STATUS_STALE)
+                                    STATUS_QUARANTINED, STATUS_STALE)
 
     # the hooks object is the source of truth mid-run (steps/runners key
     # their caches on hooks._metrics_on()); an explicit telemetry= arg
@@ -430,8 +522,53 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
     def _span(name, **args):
         return tel.span(name, **args) if tel is not None else nullcontext()
 
+    # like telemetry, the hooks object is the mid-run source of truth
+    # for resilience (step/runner caches key on hooks._guard_spec() and
+    # the mixers on hooks.wire_fault)
+    res = resil if resil is not None else getattr(hooks, "resil", None)
+    hooks.resil = res
+    hooks.wire_fault = None       # faults come only from FaultEvents below
     n = topology.n
-    schedule.validate_resume(resume_step)
+    active = np.ones(n, bool)
+    frozen = np.zeros(n, bool)    # down nodes with freeze (vs isolate) mode
+    stale = np.zeros(n, bool)     # active stragglers with frozen payloads
+    quarantined = np.zeros(n, bool)   # guard-tripped nodes held out by the
+    #                                   resilience layer (frozen + silent)
+    fired = 0                 # homogenization rounds fired so far
+    with _span("init_comm", cat="init"):
+        comm = hooks.init_comm(params, topology, schedule)
+    metrics = hooks.init_metrics(params, topology)
+    guard_state = hooks.init_guard(params, topology)
+
+    mgr = None
+    resumed_with_ctx = False
+    if res is not None and getattr(res, "snapshots_on", False):
+        from repro.resil.snapshot import SnapshotManager
+        mgr = SnapshotManager(res.snapshot_dir, every=res.snapshot_every,
+                              keep=res.keep)
+        if resume_step == 0 and mgr.steps():
+            like = {"params": params, "opt_state": opt_state, "key": key}
+            if comm is not None:
+                like["comm"] = comm
+            loaded = mgr.load_latest(like)
+            if loaded is not None and loaded["step"] > 0:
+                schedule.validate_resume(
+                    loaded["step"], with_ctx=loaded["ctx"] is not None)
+                state = loaded["state"]
+                params, opt_state, key = (state["params"],
+                                          state["opt_state"], state["key"])
+                if comm is not None:
+                    comm = state["comm"]
+                if loaded["ctx"] is not None:
+                    hooks.restore_ctx(loaded["ctx"], loaded["phase"])
+                    resumed_with_ctx = True
+                resume_step = loaded["step"]
+                log.info("snapshot_resume", step=resume_step,
+                         phase=loaded["phase"], fired=loaded["fired"])
+                _ev("resume", step=resume_step, phase=loaded["phase"],
+                    fired=loaded["fired"])
+
+    schedule.validate_resume(resume_step, with_ctx=resumed_with_ctx)
     if capture_at is not None:
         if capture_at != 0 and \
                 capture_at not in {s.stop for s in schedule.segments}:
@@ -441,18 +578,16 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
             raise ValueError(
                 f"capture_at={capture_at} lies in the span skipped by "
                 f"resume_step={resume_step}; nothing would be captured")
-    active = np.ones(n, bool)
-    frozen = np.zeros(n, bool)    # down nodes with freeze (vs isolate) mode
-    stale = np.zeros(n, bool)     # active stragglers with frozen payloads
-    fired = 0                 # homogenization rounds fired so far
-    with _span("init_comm", cat="init"):
-        comm = hooks.init_comm(params, topology, schedule)
-    metrics = hooks.init_metrics(params, topology)
     captured: Optional[Dict] = None
     _ev("schedule", segments=len(schedule.segments),
         steps=schedule.segments[-1].stop if schedule.segments else 0,
         rounds=schedule.num_rounds, gossip=schedule.gossip,
         nodes=n, topology=topology.name, resume_step=resume_step)
+    # the wire-fault mask state FaultEvents fold into (drop stays until
+    # cleared; corrupt mode is the last one injected)
+    drop_nodes: set = set()
+    corrupt_nodes: set = set()
+    corrupt_mode = "nan"
 
     def _snapshot(step):
         snap = {"params": params, "opt_state": opt_state, "key": key,
@@ -507,6 +642,50 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
                     stale=stale,
                     mixing_rows=topology.mixing_matrix(
                         None if active.all() else active))
+            elif isinstance(ev, FaultEvent):
+                for i in ev.nodes:
+                    if not 0 <= i < n:
+                        raise ValueError(
+                            f"fault event at step {ev.step} names node "
+                            f"{i} outside [0, {n})")
+                if ev.kind == "crash":
+                    if ev.step > resume_step and (
+                            mgr is None or not mgr.crash_seen(ev.step)):
+                        # abrupt process death: no snapshot is written
+                        # here — recovery rides the durable snapshot from
+                        # the last boundary. The tombstone in the
+                        # snapshot dir makes the crash fire exactly once
+                        # across incarnations, so the resumed run passes
+                        # through this step.
+                        if mgr is not None:
+                            mgr.mark_crash(ev.step)
+                        _ev("fault", step=ev.step, kind="crash")
+                        log.warning("fault_crash", step=ev.step)
+                        raise SimulatedCrash(ev.step)
+                    continue
+                if ev.kind == "drop":
+                    drop_nodes |= set(ev.nodes)
+                elif ev.kind == "corrupt":
+                    corrupt_nodes |= set(ev.nodes)
+                    corrupt_mode = ev.mode
+                elif ev.kind == "clear":
+                    if ev.nodes:
+                        drop_nodes -= set(ev.nodes)
+                        corrupt_nodes -= set(ev.nodes)
+                    else:
+                        drop_nodes.clear()
+                        corrupt_nodes.clear()
+                hooks.wire_fault = (
+                    WireFault(drop=tuple(sorted(drop_nodes)),
+                              corrupt=tuple(sorted(corrupt_nodes)),
+                              mode=corrupt_mode)
+                    if (drop_nodes or corrupt_nodes) else None)
+                _ev("fault", step=ev.step, kind=ev.kind,
+                    nodes=list(ev.nodes), mode=ev.mode,
+                    drop=sorted(drop_nodes), corrupt=sorted(corrupt_nodes))
+                if not skipped:
+                    log.warning("fault_injected", step=ev.step,
+                                kind=ev.kind, nodes=list(ev.nodes))
             elif isinstance(ev, HomogenizeEvent):
                 if skipped:
                     fired += 1      # round happened before the checkpoint
@@ -533,17 +712,107 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
         _ev("segment", index=seg_index, start=seg.start, stop=seg.stop,
             steps=seg.num_steps, round=fired, eval_after=seg.eval_after,
             phase=getattr(hooks, "phase", None))
-        runner_cache = getattr(hooks, "_runners", None)
-        cached_runners = len(runner_cache) if runner_cache is not None else 0
-        runner = hooks.runner(topology, active, frozen, stale)
-        new_runner = (runner_cache is not None
-                      and len(runner_cache) > cached_runners)
+        retries = 0
+        while True:
+            # quarantined nodes behave like freeze-churned ones: params
+            # held, identity mixing rows, no traffic — but tracked in a
+            # separate mask so the ledger can attribute them distinctly
+            eff_active = active & ~quarantined
+            eff_frozen = frozen | quarantined
+            if not eff_active.any():
+                raise RuntimeError(
+                    f"segment [{seg.start}, {seg.stop}) has no active "
+                    "nodes left after churn + quarantine")
+            runner_cache = getattr(hooks, "_runners", None)
+            cached_runners = (len(runner_cache)
+                              if runner_cache is not None else 0)
+            runner = hooks.runner(topology, eff_active, eff_frozen, stale)
+            new_runner = (runner_cache is not None
+                          and len(runner_cache) > cached_runners)
+            run_kwargs = {}
+            if getattr(runner, "comm", False):
+                run_kwargs["comm"] = comm
+            if getattr(runner, "metrics", False):
+                run_kwargs["metrics"] = metrics
+            if getattr(runner, "guard", False):
+                run_kwargs["guard"] = guard_state
+            with _span("segment", cat="train", start=seg.start,
+                       stop=seg.stop, round=fired, compile=new_runner):
+                out = runner(params, opt_state, key,
+                             jnp.asarray(seg.start, jnp.int32),
+                             seg.num_steps, **run_kwargs)
+            new_params, new_opt, new_key, losses = out[:4]
+            rest = list(out[4:])
+            new_comm = rest.pop(0) if "comm" in run_kwargs else comm
+            new_metrics = (rest.pop(0) if "metrics" in run_kwargs
+                           else metrics)
+            new_guard = rest.pop(0) if "guard" in run_kwargs else None
+
+            to_q = np.zeros(n, bool)
+            if new_guard is not None:
+                # one host sync per segment, mirroring the metrics bus
+                from repro.resil import guards
+                summary = guards.summarize(new_guard)
+                tripped = (np.asarray(guards.tripped_nodes(summary))
+                           & ~quarantined)
+                offenders = (np.asarray(guards.wire_offenders(summary))
+                             & ~quarantined)
+                if tripped.any() or offenders.any():
+                    # wire attribution wins when present: the offender is
+                    # the sender of invalid payloads, tripped receivers
+                    # are its victims
+                    to_q = offenders if offenders.any() else tripped
+                    log.warning(
+                        "guard_tripped", step=seg.stop,
+                        tripped=np.flatnonzero(tripped).tolist(),
+                        offenders=np.flatnonzero(offenders).tolist())
+                new_guard = guards.reset(new_guard)
+
+            if to_q.any() and not (eff_active & ~to_q).any():
+                log.warning("quarantine_refused", step=seg.stop,
+                            nodes=np.flatnonzero(to_q).tolist(),
+                            reason="would leave no active nodes")
+                _ev("health", step=seg.stop, action="refused",
+                    tripped=to_q)
+                to_q = np.zeros(n, bool)
+            if to_q.any():
+                quarantined = quarantined | to_q
+                _ev("health", step=seg.stop, action="quarantine",
+                    tripped=tripped, offenders=offenders,
+                    quarantined=quarantined, retry=retries,
+                    counters={k: summary[k]
+                              for k in guards.GUARD_COUNTERS})
+                log.warning("quarantine", step=seg.stop,
+                            nodes=np.flatnonzero(to_q).tolist())
+                if (res is not None and res.rollback
+                        and retries < res.max_retries):
+                    # divergence rollback: discard this segment's state
+                    # (params/opt/key/comm were never overwritten) and
+                    # re-run it — same PRNG key — with the offenders
+                    # quarantined, so the poisoned mix never lands
+                    retries += 1
+                    guard_state = new_guard
+                    _ev("rollback", step=seg.stop, retry=retries,
+                        quarantined=quarantined)
+                    log.warning(
+                        "segment_rollback", start=seg.start,
+                        stop=seg.stop, retry=retries,
+                        quarantined=np.flatnonzero(quarantined).tolist())
+                    continue
+            params, opt_state, key = new_params, new_opt, new_key
+            comm, metrics = new_comm, new_metrics
+            if new_guard is not None:
+                guard_state = new_guard
+            break
+
         if ledger is not None and param_count:
             status = np.where(
-                ~active, STATUS_INACTIVE,
-                np.where(stale, STATUS_STALE, STATUS_ACTIVE)).astype(np.int8)
+                eff_frozen & ~frozen, STATUS_QUARANTINED,
+                np.where(~active, STATUS_INACTIVE,
+                         np.where(stale, STATUS_STALE,
+                                  STATUS_ACTIVE))).astype(np.int8)
             per_step = gossip_bytes_per_step(
-                topology, active, param_count, elem_bytes,
+                topology, eff_active, param_count, elem_bytes,
                 payload_elems=payload_elems, index_bytes=index_bytes,
                 stale=stale if stale.any() else None)
             ledger.log_gossip(fired, seg.start, seg.stop, per_step,
@@ -551,37 +820,36 @@ def run_schedule(schedule: Schedule, hooks: FederationHooks, params,
             _ev("comm", kind="gossip", round=fired, start=seg.start,
                 stop=seg.stop, per_node=per_step * seg.num_steps,
                 status=status)
-        run_kwargs = {}
-        if getattr(runner, "comm", False):
-            run_kwargs["comm"] = comm
-        if getattr(runner, "metrics", False):
-            run_kwargs["metrics"] = metrics
-        with _span("segment", cat="train", start=seg.start, stop=seg.stop,
-                   round=fired, compile=new_runner):
-            out = runner(params, opt_state, key,
-                         jnp.asarray(seg.start, jnp.int32), seg.num_steps,
-                         **run_kwargs)
-        params, opt_state, key, losses = out[:4]
-        rest = list(out[4:])
-        if "comm" in run_kwargs:
-            comm = rest.pop(0)
-        if "metrics" in run_kwargs:
-            metrics = rest.pop(0)
-            if tel is not None and metrics is not None:
-                # flush + zero at the chunk boundary: the only host sync
-                # telemetry adds, amortized over the whole segment
-                tel.flush_metrics(seg.stop, metrics, round=fired,
-                                  active=active, stale=stale)
-                from repro.obs import metrics as obs_metrics
-                metrics = obs_metrics.reset(metrics)
+        if "metrics" in run_kwargs and tel is not None \
+                and metrics is not None:
+            # flush + zero at the chunk boundary: the only host sync
+            # telemetry adds, amortized over the whole segment
+            tel.flush_metrics(seg.stop, metrics, round=fired,
+                              active=eff_active, stale=stale)
+            from repro.obs import metrics as obs_metrics
+            metrics = obs_metrics.reset(metrics)
         if capture_at == seg.stop:
             captured = _snapshot(seg.stop)
+        if mgr is not None and mgr.due(seg.stop):
+            state = {"params": params, "opt_state": opt_state, "key": key}
+            if comm is not None:
+                state["comm"] = comm
+            with _span("snapshot", cat="resil", step=seg.stop):
+                mgr.save(seg.stop, state, ctx=getattr(hooks, "ctx", None),
+                         phase=getattr(hooks, "phase", "plain"),
+                         fired=fired)
+            _ev("snapshot", step=seg.stop, fired=fired)
         if seg.eval_after:
             with _span("eval", cat="eval", step=seg.stop - 1):
                 hooks.on_eval(params, seg.stop - 1, losses)
-            _ev("eval", step=seg.stop - 1,
-                mean_loss=(float(np.mean(np.asarray(losses)))
-                           if getattr(losses, "size", 0) else None))
+            mean_loss = (float(np.mean(np.asarray(losses)))
+                         if getattr(losses, "size", 0) else None)
+            _ev("eval", step=seg.stop - 1, mean_loss=mean_loss)
+            if mean_loss is not None and not np.isfinite(mean_loss):
+                log.warning("eval_nonfinite", step=seg.stop - 1,
+                            mean_loss=mean_loss)
+                _ev("health", step=seg.stop - 1, kind="eval_nonfinite",
+                    mean_loss=mean_loss)
 
     _ev("run_end", rounds=fired)
     return params, opt_state, key, captured

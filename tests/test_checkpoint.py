@@ -46,6 +46,42 @@ def test_structure_mismatch_raises(tmp_path):
         load_checkpoint(path, {"b": jnp.ones(3)})
 
 
+def test_version_skew_rejected(tmp_path):
+    """A checkpoint from an incompatible (or pre-versioning) layout is
+    refused loudly instead of silently misloading."""
+    import json
+    path = str(tmp_path / "v")
+    like = {"a": jnp.ones(3)}
+    save_checkpoint(path, like)
+    meta_path = path + ".meta.json"
+    with open(meta_path) as f:
+        meta = json.load(f)
+    meta["version"] = 999
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="version"):
+        load_checkpoint(path, like)
+    del meta["version"]          # pre-versioning file: no key at all
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    with pytest.raises(ValueError, match="pre-versioning"):
+        load_checkpoint(path, like)
+
+
+def test_checksum_mismatch_rejected(tmp_path):
+    """Bit rot / post-save tampering of the npz payload is caught by the
+    stored-vs-recomputed CRC before any value reaches the caller."""
+    path = str(tmp_path / "c")
+    like = {"a": jnp.ones(3), "b": jnp.zeros((2, 2))}
+    save_checkpoint(path, like)
+    npz = np.load(path + ".npz")
+    flat = {k: npz[k] for k in npz.files}
+    flat["a"] = flat["a"] + 1.0              # tamper one array
+    np.savez(path + ".npz", **flat)
+    with pytest.raises(ValueError, match="checksum mismatch"):
+        load_checkpoint(path, like)
+
+
 def test_resume_mid_schedule_matches_uninterrupted(tmp_path):
     """Save at a round boundary, restore into a *fresh* simulator, and
     rejoin the uninterrupted trajectory exactly: the scheduler re-fires

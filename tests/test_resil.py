@@ -1,0 +1,364 @@
+"""Resilience chaos suite (DESIGN.md §12).
+
+The load-bearing guarantees, in order of importance:
+
+* **observation-only guards** — fixed-seed runs with the on-device
+  health guard carry enabled are *bitwise* identical to guard-off runs
+  (sim scan + shard drivers, and the LM launch path);
+* **detected-corrupt ≡ drop** — an injected NaN/Inf/bitflip wire payload
+  fails receive-side validation and is treated exactly as a dropped
+  message: the two trajectories are bitwise equal, and with guards on
+  the corrupting sender is attributed and quarantined within one
+  segment;
+* **durable crash recovery** — a mid-schedule ``crash`` fault kills the
+  run; re-invoking with the same snapshot dir auto-resumes from the
+  newest valid snapshot (restoring the mid-phase KD sampler ctx from
+  the sidecar) and rejoins the uninterrupted trajectory;
+* **rollback-on-divergence** — with receive-side validation off the
+  corruption genuinely poisons receivers; the guard flush detects it,
+  restores the pre-segment state, quarantines the attributed offender,
+  and re-runs the segment clean.
+
+Plus unit coverage for the fault/guard/snapshot building blocks.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sched
+from repro.configs.base import IDKDConfig, TrainConfig
+from repro.configs.resnet20_cifar import SMALL_CONFIG
+from repro.core import mixing
+from repro.core.simulator import DecentralizedSimulator
+from repro.core.topology import Topology
+from repro.data.synthetic import make_classification_data, make_public_data
+from repro.obs import Telemetry, read_events, validate_runlog
+from repro.resil import (GuardSpec, Resilience, SimulatedCrash, WireFault,
+                         faults, guards)
+from repro.resil.snapshot import SnapshotManager
+
+N = 3
+STEPS = 12
+
+
+@pytest.fixture(scope="module")
+def tiny_data():
+    data = make_classification_data(image_size=8, n_train=512, n_val=64,
+                                    n_test=300, noise=0.8, seed=0)
+    pub = make_public_data(data, n_public=96, kind="aligned", seed=1)
+    return data, pub
+
+
+@pytest.fixture(scope="module")
+def mcfg():
+    # im2col keeps the conv model on the scan/shard fast path on CPU
+    return SMALL_CONFIG.replace(image_size=8, conv_backend="im2col")
+
+
+def _tcfg() -> TrainConfig:
+    return TrainConfig(algorithm="qg-dsgdm-n", num_nodes=N, alpha=0.05,
+                       steps=STEPS, batch_size=8, lr=0.3, seed=4,
+                       idkd=IDKDConfig(start_step=4, every_k_steps=4,
+                                       num_rounds=2, temperature=10.0,
+                                       label_topk=4,
+                                       label_backend="sparse"))
+
+
+def _sim(tiny_data, mcfg, **kw):
+    data, pub = tiny_data
+    return DecentralizedSimulator(mcfg, _tcfg(), data, pub, kd_mode="idkd",
+                                  eval_every=3, **kw)
+
+
+def _fault_schedule(spec: str):
+    t = _tcfg()
+    return sched.compile_schedule(
+        t.steps, 3, round_steps=sched.idkd_round_steps(t.idkd, t.steps),
+        events=sched.parse_faults(spec, t.num_nodes, t.steps),
+        gossip="sync")
+
+
+# ------------------------------------------------- guards are observers
+@pytest.mark.parametrize("mode", ["scan", "shard"])
+def test_guard_bitwise_noop(tiny_data, mcfg, mode):
+    """Guard carry on, no fault: bitwise the base trajectory."""
+    sim = _sim(tiny_data, mcfg, driver_mode=mode)
+    base = sim.run()
+    guarded = sim.run(resil=Resilience(guard=GuardSpec(
+        loss_spike_factor=100.0, consensus_max=1e6)))
+    assert base.acc_history == guarded.acc_history
+    assert base.loss_history == guarded.loss_history
+
+
+def test_lm_guard_bitwise_noop():
+    from repro.configs import get_config
+    from repro.launch.train import run_training
+    cfg = get_config("qwen1.5-0.5b").reduced().replace(
+        num_layers=1, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=128, dtype="float32")
+    tcfg = TrainConfig(num_nodes=2, steps=6, lr=0.1, alpha=0.1, batch_size=4,
+                       idkd=IDKDConfig(start_step=3, label_topk=4,
+                                       kd_weight=0.3))
+    hist = {}
+    for resil in (None, Resilience(guard=GuardSpec())):
+        out = run_training(cfg, tcfg, seq_len=16, n_seqs=32, n_public=8,
+                           use_idkd=True, log_every=2, verbose=False,
+                           resil=resil)
+        hist[resil is None] = out["loss_history"]
+    assert hist[True] == hist[False]
+
+
+# --------------------------------------------- corrupt ≡ drop + quarantine
+def test_corrupt_equals_drop_bitwise(tiny_data, mcfg):
+    """Receive-side validation turns a corrupted payload into a dropped
+    one: the two runs (no guards — detection only) are bitwise equal."""
+    sim = _sim(tiny_data, mcfg)
+    runs = {}
+    for spec in ("corrupt@5/1/nan", "drop@5/1"):
+        runs[spec] = sim.run(schedule=_fault_schedule(spec))
+    a, b = runs.values()
+    assert a.acc_history == b.acc_history
+    assert a.loss_history == b.loss_history
+    assert all(np.isfinite(a.acc_history))
+
+
+def test_corrupt_offender_quarantined(tiny_data, mcfg):
+    """With guards on, wire attribution quarantines the corrupting
+    sender at the first segment boundary after the fault — and nobody
+    else; trajectory stays finite."""
+    sim = _sim(tiny_data, mcfg)
+    r = sim.run(schedule=_fault_schedule("corrupt@5/1/inf"),
+                resil=Resilience(guard=GuardSpec()))
+    assert all(np.isfinite(r.acc_history))
+    q = np.sum([row["quarantined_steps_per_node"]
+                for row in r.ledger["per_round"]], axis=0)
+    assert q[1] > 0 and q[0] == 0 and q[2] == 0
+    # fault at 5, segment boundaries every 3 ⇒ quarantined from step 7
+    # on: the node sits out the remaining 5 steps
+    assert q[1] == STEPS - 7
+
+
+def test_drop_is_network_fault_no_quarantine(tiny_data, mcfg):
+    """A dropped payload degrades the mix but indicts nobody: drop is a
+    network fault, not sender misbehaviour."""
+    sim = _sim(tiny_data, mcfg)
+    r = sim.run(schedule=_fault_schedule("drop@5/1"),
+                resil=Resilience(guard=GuardSpec()))
+    q = np.sum([row["quarantined_steps_per_node"]
+                for row in r.ledger["per_round"]], axis=0)
+    assert not q.any()
+
+
+# ------------------------------------------------ crash + auto-resume
+def test_crash_auto_resume(tiny_data, mcfg, tmp_path):
+    """Crash mid-segment after the second KD round; the resumed
+    invocation restores params/opt/key/comm *and* the KD sampler ctx
+    from the snapshot sidecar (step 7 is not a round boundary) and
+    rejoins the uninterrupted trajectory."""
+    sim = _sim(tiny_data, mcfg)
+    base = sim.run()
+    schedule = _fault_schedule("crash@9")
+    res = Resilience(snapshot_dir=str(tmp_path), snapshot_every=3)
+    with pytest.raises(SimulatedCrash):
+        sim.run(schedule=schedule, resil=res)
+    assert (tmp_path / "crash-00000009.tomb").exists()
+    r = sim.run(schedule=schedule, resil=res)   # same invocation again
+    tail = len(r.loss_history)
+    assert tail >= 1
+    assert np.allclose(r.loss_history, base.loss_history[-tail:],
+                       rtol=1e-5)
+    assert np.allclose(r.acc_history, base.acc_history[-len(r.acc_history):],
+                       atol=1e-5)
+
+
+# --------------------------------------------- rollback-on-divergence
+def test_rollback_on_divergence(tiny_data, mcfg, tmp_path):
+    """validate_wire=False lets the NaN corruption genuinely poison
+    receivers; the guard flush detects the blowup, rolls the segment
+    back to the pre-segment state, quarantines the attributed offender
+    (max wire_invalid count — victims trip later), and the re-run stays
+    finite."""
+    sim = _sim(tiny_data, mcfg)
+    tel = Telemetry(tmp_path)
+    r = sim.run(schedule=_fault_schedule("corrupt@5/1/nan"),
+                resil=Resilience(guard=GuardSpec(validate_wire=False),
+                                 rollback=True),
+                telemetry=tel)
+    tel.close()
+    assert all(np.isfinite(r.acc_history))
+    assert all(np.isfinite(r.loss_history))
+    q = np.sum([row["quarantined_steps_per_node"]
+                for row in r.ledger["per_round"]], axis=0)
+    assert q[1] > 0 and q[0] == 0 and q[2] == 0
+    validate_runlog(tmp_path / "run.jsonl")
+    rollbacks = read_events(tmp_path / "run.jsonl", "rollback")
+    assert len(rollbacks) >= 1 and rollbacks[0]["retry"] == 1
+    health = read_events(tmp_path / "run.jsonl", "health")
+    assert any(e.get("action") == "quarantine" for e in health)
+
+
+# -------------------------------------------------------- unit: faults
+def test_wire_fault_frozen_hashable():
+    wf = WireFault(drop=(3, 1, 1), corrupt=(2,), mode="inf")
+    assert wf.drop == (1, 3) and wf.senders == (1, 2, 3)
+    assert hash(wf) == hash(WireFault(drop=(1, 3), corrupt=(2,), mode="inf"))
+    assert WireFault().is_noop() and not wf.is_noop()
+    with pytest.raises(ValueError, match="corruption mode"):
+        WireFault(corrupt=(0,), mode="gamma-ray")
+
+
+def test_parse_faults():
+    evs = sched.parse_faults("corrupt@8/2/nan, drop@5/0+3, crash@14", 4, 20)
+    assert [(e.kind, e.step, e.nodes) for e in evs] == [
+        ("corrupt", 8, (2,)), ("drop", 5, (0, 3)), ("crash", 14, ())]
+    with pytest.raises(ValueError, match="malformed"):
+        sched.parse_faults("corrupt@x", 4, 20)
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        sched.parse_faults("melt@3", 4, 20)
+    with pytest.raises(ValueError, match="outside"):
+        sched.parse_faults("drop@5/9", 4, 20)
+    with pytest.raises(ValueError, match="outside"):
+        sched.parse_faults("drop@99/1", 4, 20)
+
+
+@pytest.mark.parametrize("mode", ["nan", "inf", "bitflip"])
+def test_validated_mixer_corrupt_equals_drop_unit(mode):
+    """Per-leaf: every corruption mode fails validation and reduces to
+    the masked-Metropolis drop of the same sender."""
+    topo = Topology.make("ring", 5)
+    W = topo.mixing_matrix()
+    base = mixing.make_mixer(topo, backend="dense")
+    x = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(5, 4, 3)),
+                          jnp.float32)}
+    corrupt = faults.make_validated_mixer(base, W,
+                                          WireFault(corrupt=(2,), mode=mode))
+    drop = faults.make_validated_mixer(base, W, WireFault(drop=(2,)))
+    np.testing.assert_array_equal(np.asarray(corrupt(x)["w"]),
+                                  np.asarray(drop(x)["w"]))
+    # sender attribution: corruption indicts node 2; drop indicts nobody
+    assert np.asarray(corrupt.wire_check(x)).tolist() == [
+        False, False, True, False, False]
+    assert not np.asarray(drop.wire_check(x)).any()
+
+
+def test_validated_mixer_all_valid_is_base():
+    topo = Topology.make("ring", 4)
+    base = mixing.make_mixer(topo, backend="dense")
+    wrapped = faults.make_validated_mixer(base, topo.mixing_matrix(),
+                                          WireFault(drop=(3,)))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 6)),
+                    jnp.float32)
+    # huge-but-bounded values pass validation; the degraded path only
+    # fires for the dropped sender, everything else mixes as base
+    y = wrapped.mix_leaf(x)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_validated_mixer_propagation():
+    """validate=False: the NaN payload genuinely reaches every receiver
+    adjacent to the corrupting sender — and only those."""
+    topo = Topology.make("ring", 5)
+    base = mixing.make_mixer(topo, backend="dense")
+    mix = faults.make_validated_mixer(base, topo.mixing_matrix(),
+                                      WireFault(corrupt=(2,)),
+                                      validate=False)
+    x = jnp.ones((5, 3), jnp.float32)
+    bad = ~np.isfinite(np.asarray(mix.mix_leaf(x))).all(axis=1)
+    assert bad.tolist() == [False, True, False, True, False]
+    with pytest.raises(ValueError, match="bitflip"):
+        faults.make_validated_mixer(base, topo.mixing_matrix(),
+                                    WireFault(corrupt=(2,), mode="bitflip"),
+                                    validate=False)
+
+
+def test_fault_rejected_under_shard(tiny_data, mcfg):
+    sim = _sim(tiny_data, mcfg, driver_mode="shard")
+    with pytest.raises(ValueError, match="shard"):
+        sim.run(schedule=_fault_schedule("corrupt@5/1/nan"))
+
+
+# -------------------------------------------------------- unit: guards
+def test_guard_counters_unit():
+    spec = GuardSpec(loss_spike_factor=3.0, warmup_steps=2)
+    g = guards.init_node_guard(3)
+    params = {"w": jnp.ones((3, 4))}
+    grads = {"w": jnp.zeros((3, 4))}
+    losses = jnp.asarray([1.0, 1.0, 1.0])
+    for _ in range(4):
+        g = guards.update(g, spec, losses, grads, params)
+    s = guards.summarize(g)
+    assert s["accum_steps"] == 4
+    assert not guards.tripped_nodes(s).any()
+
+    # node 1's loss goes NaN; node 2 spikes 10×; node 0 stays healthy
+    g = guards.update(g, spec, jnp.asarray([1.0, jnp.nan, 10.0]),
+                      grads, params)
+    s = guards.summarize(g)
+    assert s["nonfinite_loss"] == [0, 1, 0]
+    assert s["loss_spike"] == [0, 0, 1]
+    assert guards.tripped_nodes(s).tolist() == [False, True, True]
+
+    # NaN gradient / param detection addresses the offending row only
+    g2 = guards.update(guards.reset(g), spec, losses,
+                       {"w": grads["w"].at[0, 0].set(jnp.nan)}, params)
+    s2 = guards.summarize(g2)
+    assert s2["nonfinite_grad"] == [1, 0, 0]
+    assert guards.summarize(guards.reset(g2))["nonfinite_grad"] == [0, 0, 0]
+
+
+def test_wire_offender_attribution():
+    s = {k: [0, 0, 0] for k in guards.GUARD_COUNTERS}
+    s["wire_invalid"] = [1, 3, 3]
+    # poisoned victims fail wire checks too, but strictly later than the
+    # true offender — only max-count senders are indicted
+    assert guards.wire_offenders(s).tolist() == [False, True, True]
+    s["wire_invalid"] = [0, 0, 0]
+    assert not guards.wire_offenders(s).any()
+
+
+# ----------------------------------------------------- unit: snapshots
+def test_snapshot_manager_roundtrip_and_skip(tmp_path):
+    state = {"params": {"w": jnp.arange(6.0)}, "key": jax.random.PRNGKey(0)}
+    mgr = SnapshotManager(tmp_path, every=0, keep=2)
+    ctx = {"pub_idx": np.arange(4), "weights": np.ones((2, 4))}
+    mgr.save(3, state, ctx=None, phase="plain")
+    mgr.save(6, state, ctx=ctx, phase="kd_sparse", fired=1)
+    assert mgr.steps() == [3, 6]
+
+    like = jax.tree.map(jnp.zeros_like, state)
+    out = mgr.load_latest(like)
+    assert out["step"] == 6 and out["phase"] == "kd_sparse"
+    assert out["fired"] == 1
+    np.testing.assert_array_equal(out["ctx"]["pub_idx"], ctx["pub_idx"])
+    np.testing.assert_array_equal(np.asarray(out["state"]["params"]["w"]),
+                                  np.arange(6.0))
+
+    # truncate the newest snapshot: load_latest skips it and falls back
+    (tmp_path / "snap-00000006.npz").write_bytes(b"garbage")
+    out = mgr.load_latest(like)
+    assert out["step"] == 3 and out["ctx"] is None
+
+    # pruning keeps the newest `keep`
+    mgr.save(9, state)
+    mgr.save(12, state)
+    assert mgr.steps() == [9, 12]
+
+
+def test_snapshot_ctx_checksum_rejected(tmp_path):
+    state = {"w": jnp.arange(3.0)}
+    mgr = SnapshotManager(tmp_path, keep=3)
+    mgr.save(5, state, ctx={"labels": np.ones(4)}, phase="kd_dense")
+    # tamper with the ctx sidecar: the recorded checksum no longer
+    # matches, so the whole snapshot is skipped
+    np.savez(tmp_path / "snap-00000005.ctx.npz", labels=np.zeros(4))
+    assert mgr.load_latest(jax.tree.map(jnp.zeros_like, state)) is None
+
+
+def test_crash_tombstones(tmp_path):
+    mgr = SnapshotManager(tmp_path)
+    assert not mgr.crash_seen(9)
+    mgr.mark_crash(9)
+    assert mgr.crash_seen(9) and not mgr.crash_seen(10)

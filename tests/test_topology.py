@@ -53,6 +53,54 @@ def test_hierarchical_ring():
     assert np.allclose(W.sum(axis=1), 1.0)
 
 
+def _check_masked_doubly_stochastic(topo, act):
+    """Survivor block symmetric doubly stochastic; down nodes identity."""
+    W = topo.mixing_matrix(act)
+    assert (W >= -1e-12).all()
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    for i in np.flatnonzero(~act):
+        row = np.zeros(topo.n)
+        row[i] = 1.0
+        np.testing.assert_array_equal(W[i], row)
+        np.testing.assert_array_equal(W[:, i], row)
+
+
+@pytest.mark.parametrize("kind,n", [("chain", 2), ("full", 2), ("ring", 3),
+                                    ("full", 5), ("torus", 16)])
+def test_masked_metropolis_corner_cases(kind, n):
+    """The quarantine/churn masks the resilience layer feeds to
+    ``mixing_matrix`` hit these corners deterministically: the minimal
+    graph, a single survivor (all-but-one-down), and one down node."""
+    topo = Topology.make(kind, n)
+    lone = np.zeros(n, bool)
+    lone[0] = True
+    _check_masked_doubly_stochastic(topo, lone)          # all-but-one down
+    one_out = np.ones(n, bool)
+    one_out[-1] = False
+    _check_masked_doubly_stochastic(topo, one_out)
+    _check_masked_doubly_stochastic(topo, np.ones(n, bool))
+
+
+@given(n=st.integers(2, 32), seed=st.integers(0, 2**31 - 1),
+       p_down=st.floats(0.0, 0.95))
+@settings(max_examples=20, deadline=None)
+def test_masked_metropolis_doubly_stochastic_on_survivors(n, seed, p_down):
+    """Property: for any availability mask (churn ∧ ¬quarantine), the
+    masked Metropolis matrix is symmetric doubly stochastic on the
+    survivor subgraph with identity rows for every down node — the
+    invariant both the churn machinery and the fault-injection
+    degraded mixer (``W_eff``) rely on."""
+    kinds = ["chain", "full"] + (["ring"] if n >= 3 else [])
+    topo = Topology.make(kinds[seed % len(kinds)], n)
+    rng = np.random.default_rng(seed)
+    act = rng.random(n) >= p_down
+    if not act.any():
+        act[int(rng.integers(n))] = True     # at least one survivor
+    _check_masked_doubly_stochastic(topo, act)
+
+
 @given(n=st.integers(3, 64))
 @settings(max_examples=20, deadline=None)
 def test_ring_mixing_converges_to_consensus(n):
